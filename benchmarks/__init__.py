@@ -1,0 +1,1 @@
+from . import exchange_time, instantiation_time, kernels_bench, reduction_suite, roofline_table  # noqa

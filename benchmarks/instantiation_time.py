@@ -1,0 +1,84 @@
+"""Paper Fig. 9: algorithmic runtime to compute the new ranks, on the
+largest nearest-neighbor instance (N=100, n=48, grid 75x64), 20 reps each
+(paper used 200 on 4800 MPI ranks; we run the full-permutation computation
+sequentially — the distributed per-rank forms are benchmarked separately).
+
+Expected (paper): hyperplane ~ kdtree fastest; nodecart ~ +28%;
+stencil_strips ~2x slower; VieM-role baseline orders of magnitude slower.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import CartGrid, Stencil, get_mapper
+from repro.core.mapping.hyperplane import HyperplaneMapper
+from repro.core.mapping.kdtree import KDTreeMapper
+
+REPS = 20
+ALGOS = ["blocked", "hyperplane", "kdtree", "stencil_strips", "nodecart",
+         "graphgreedy", "random"]
+
+
+def run() -> List[Dict]:
+    grid = CartGrid((75, 64))
+    stencil = Stencil.nearest_neighbor(2)
+    sizes = [48] * 100
+    rows = []
+    for algo in ALGOS:
+        reps = 3 if algo == "graphgreedy" else REPS
+        mapper = (get_mapper(algo, max_passes=3) if algo == "graphgreedy"
+                  else get_mapper(algo))
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            mapper.coords(grid, stencil, sizes)
+            ts.append(time.perf_counter() - t0)
+        rows.append({"name": f"fig9_instantiation_{algo}",
+                     "us_per_call": float(np.mean(ts) * 1e6),
+                     "derived": float(np.mean(ts) /
+                                      max(np.mean(ts), 1e-12))})
+    # per-rank distributed forms (the paper's O(log N * sum d_i) claim):
+    for name, fn in (
+            ("hyperplane_per_rank",
+             lambda r: HyperplaneMapper.coord_of_rank((75, 64), stencil, 48, r)),
+            ("kdtree_per_rank",
+             lambda r: KDTreeMapper.coord_of_rank((75, 64), stencil, 0, r))):
+        t0 = time.perf_counter()
+        for r in range(0, 4800, 48):
+            fn(r)
+        dt = (time.perf_counter() - t0) / 100
+        rows.append({"name": f"fig9_{name}", "us_per_call": dt * 1e6,
+                     "derived": 0.0})
+    # normalize derived = time relative to hyperplane (paper plots ratios)
+    base = next(r["us_per_call"] for r in rows
+                if r["name"] == "fig9_instantiation_hyperplane")
+    for r in rows:
+        r["derived"] = r["us_per_call"] / base
+    return rows
+
+
+def validate_claims(rows: List[Dict]) -> List[str]:
+    t = {r["name"]: r["us_per_call"] for r in rows}
+    checks = []
+
+    def claim(desc, ok):
+        checks.append(("PASS" if ok else "FAIL") + " " + desc)
+
+    claim("VieM-role baseline is >= 20x slower than hyperplane "
+          "(paper: >400x for real VieM)",
+          t["fig9_instantiation_graphgreedy"] >
+          20 * t["fig9_instantiation_hyperplane"])
+    # the paper's C implementations put hyperplane ~ kdtree; our numpy
+    # vectorization levels differ, so allow 5x (ordering, not constants)
+    claim("hyperplane and kdtree within 5x of each other",
+          max(t["fig9_instantiation_hyperplane"],
+              t["fig9_instantiation_kdtree"]) <
+          5 * min(t["fig9_instantiation_hyperplane"],
+                  t["fig9_instantiation_kdtree"]))
+    claim("stencil_strips slowest of the three new algorithms (paper: 2x)",
+          t["fig9_instantiation_stencil_strips"] >
+          t["fig9_instantiation_hyperplane"])
+    return checks

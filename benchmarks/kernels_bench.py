@@ -1,0 +1,55 @@
+"""Kernel microbenchmarks (CPU wall time; TPU perf comes from the roofline).
+
+The Pallas kernels run in interpret mode (correctness path); the jnp oracle
+path is the compiled CPU reference — the us_per_call numbers here track
+regressions in the *reference* implementations, not TPU speed.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Stencil
+from repro.kernels.attention.ops import flash_attention
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.stencil.ops import stencil_apply
+
+
+def _time(fn, *args, reps=10, **kw):
+    fn(*args, **kw).block_until_ready()  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> List[Dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+    st = Stencil.nearest_neighbor(2)
+    u = jnp.asarray(rng.standard_normal((514, 514)), jnp.float32)
+    w = tuple(0.25 for _ in range(st.k))
+    t = _time(stencil_apply, u, st.offsets, w, 1, use_pallas=False)
+    rows.append({"name": "kernel_stencil_ref_512", "us_per_call": t * 1e6,
+                 "derived": 512 * 512 * st.k * 2 / t / 1e9})  # GFLOP/s
+
+    x = jnp.asarray(rng.standard_normal((8, 512, 1024)), jnp.float32)
+    g = jnp.ones((1024,), jnp.float32)
+    t = _time(rmsnorm, x, g, use_pallas=False)
+    rows.append({"name": "kernel_rmsnorm_ref_8x512x1024",
+                 "us_per_call": t * 1e6,
+                 "derived": x.size * 4 * 3 / t / 1e9})  # GB/s
+
+    q = jnp.asarray(rng.standard_normal((1, 512, 4, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 512, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 512, 2, 64)), jnp.float32)
+    t = _time(flash_attention, q, k, v, use_pallas=False)
+    flops = 4 * 512 * 512 * 4 * 64 / 2
+    rows.append({"name": "kernel_flash_ref_s512", "us_per_call": t * 1e6,
+                 "derived": flops / t / 1e9})
+    return rows

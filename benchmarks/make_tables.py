@@ -1,0 +1,130 @@
+"""Build the EXPERIMENTS.md §Dry-run / §Roofline markdown tables from the
+dry-run JSON artifacts.
+
+  PYTHONPATH=src python -m benchmarks.make_tables [--dir runs/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+ARCH_ORDER = ["mixtral-8x7b", "deepseek-v3-671b", "mamba2-130m", "yi-34b",
+              "granite-3-8b", "granite-20b", "qwen3-8b", "zamba2-2.7b",
+              "seamless-m4t-medium", "internvl2-76b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt(x, nd=3):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    if abs(x) >= 1000 or abs(x) < 0.001:
+        return f"{x:.2e}"
+    return f"{x:.{nd}g}"
+
+
+def load(d: Path):
+    cells = {}
+    for f in sorted(d.glob("*.json")):
+        if f.name == "summary.json":
+            continue
+        r = json.loads(f.read_text())
+        cells[(r["arch"], r["shape"], r["mesh"])] = r
+    # also pick up skip records from summary
+    summ = d / "summary.json"
+    if summ.exists():
+        for r in json.loads(summ.read_text()):
+            key = (r["arch"], r["shape"], r["mesh"])
+            if key not in cells:
+                cells[key] = r
+    return cells
+
+
+def dryrun_table(cells) -> str:
+    lines = ["| arch | shape | mesh | chips | compile | arg/dev | temp/dev | collectives |",
+             "|---|---|---|---|---|---|---|---|"]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mesh in ("single", "multi"):
+                r = cells.get((arch, shape, mesh))
+                if r is None:
+                    continue
+                if r.get("status") == "skipped":
+                    lines.append(f"| {arch} | {shape} | {mesh} | - | skipped"
+                                 f" | - | - | {r.get('reason','')[:46]} |")
+                    continue
+                if r.get("status") != "ok":
+                    lines.append(f"| {arch} | {shape} | {mesh} | - | ERROR |"
+                                 f" - | - | {r.get('error','')[:40]} |")
+                    continue
+                m = r["memory"]
+                cl = ", ".join(f"{k.replace('collective-','c-')}:{v}"
+                               for k, v in sorted(r["collectives"].items()))
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | {r['chips']} | "
+                    f"{r['compile_s']}s | {m['argument_gib']:.2f}GiB | "
+                    f"{m['temp_gib']:.2f}GiB | {cl} |")
+    return "\n".join(lines)
+
+
+def roofline_table(cells, mesh="single") -> str:
+    lines = ["| arch | shape | t_comp | t_mem | t_coll | dominant | "
+             "6ND/HLO | useful | MFU-bound | fits |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = cells.get((arch, shape, mesh))
+            if r is None or r.get("status") != "ok":
+                continue
+            ro = r["roofline"]
+            lines.append(
+                f"| {arch} | {shape} | {fmt(ro['t_compute_s'])} | "
+                f"{fmt(ro['t_memory_s'])} | {fmt(ro['t_collective_s'])} | "
+                f"**{ro['dominant']}** | {fmt(ro['useful_ratio_6nd'], 2)} | "
+                f"{fmt(ro['useful_ratio'], 2)} | {fmt(ro['mfu_bound'], 2)} | "
+                f"{'y' if r['memory']['fits_16gib'] else 'n'} |")
+    return "\n".join(lines)
+
+
+def linksim_table(cells) -> str:
+    lines = ["| arch | shape | layout | DCI total | DCI bottleneck-pod | "
+             "t_DCI | t_ICI |", "|---|---|---|---|---|---|---|"]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = cells.get((arch, shape, "multi"))
+            if r is None or r.get("status") != "ok":
+                continue
+            for mname, rep in r.get("linksim", {}).items():
+                lines.append(
+                    f"| {arch} | {shape} | {mname} | "
+                    f"{fmt(rep['dci_total_bytes'])} | "
+                    f"{fmt(rep['max_dci_pod_bytes'])} | "
+                    f"{fmt(rep['t_dci_bottleneck'])} | "
+                    f"{fmt(rep['t_ici_bottleneck'])} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="runs/dryrun")
+    ap.add_argument("--table", default="all",
+                    choices=["all", "dryrun", "roofline", "linksim"])
+    args = ap.parse_args()
+    cells = load(Path(args.dir))
+    if args.table in ("all", "dryrun"):
+        print("### Dry-run matrix\n")
+        print(dryrun_table(cells))
+    if args.table in ("all", "roofline"):
+        print("\n### Roofline (single pod, 256 chips)\n")
+        print(roofline_table(cells, "single"))
+        print("\n### Roofline (multi-pod, 512 chips)\n")
+        print(roofline_table(cells, "multi"))
+    if args.table in ("all", "linksim"):
+        print("\n### Link simulation (multi-pod)\n")
+        print(linksim_table(cells))
+
+
+if __name__ == "__main__":
+    main()

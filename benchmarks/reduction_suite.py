@@ -1,0 +1,97 @@
+"""Paper Fig. 8: J_sum / J_max reduction over blocked, on the instance suite
+I = N x P x D with N = {10,13,...,31}, P = {10,13,...,31} u {32}, D = {2,3}
+(|I| = 144).  Machine-independent (paper §VI.C).
+
+Output rows: (figure, stencil, algorithm, metric) -> median reduction +
+median mapping time.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import (CartGrid, MapperInapplicable, Stencil, dims_create,
+                        evaluate, get_mapper)
+
+N_SET = list(range(10, 32, 3))            # 10,13,...,31  (8 values)
+P_SET = list(range(10, 32, 3)) + [32]     # 9 values
+D_SET = [2, 3]
+
+ALGOS = ["hyperplane", "kdtree", "stencil_strips", "nodecart", "graphgreedy",
+         "random"]
+STENCILS = {
+    "nearest_neighbor": Stencil.nearest_neighbor,
+    "nn_with_hops": Stencil.nn_with_hops,
+    "component": Stencil.component,
+}
+
+
+def run(fast: bool = False) -> List[Dict]:
+    n_set = N_SET[::3] if fast else N_SET
+    p_set = P_SET[::3] if fast else P_SET
+    rows = []
+    reductions: Dict[tuple, list] = {}
+    times: Dict[str, list] = {a: [] for a in ALGOS}
+    n_instances = 0
+    for d in D_SET:
+        for N in n_set:
+            for ppn in p_set:
+                grid = CartGrid(dims_create(N * ppn, d))
+                sizes = [ppn] * N
+                n_instances += 1
+                for sname, ctor in STENCILS.items():
+                    stencil = ctor(d)
+                    base = get_mapper("blocked").cost(grid, stencil, sizes)
+                    for algo in ALGOS:
+                        mapper = (get_mapper(algo, max_passes=3)
+                                  if algo == "graphgreedy" else get_mapper(algo))
+                        t0 = time.perf_counter()
+                        try:
+                            cost = mapper.cost(grid, stencil, sizes)
+                        except MapperInapplicable:
+                            continue
+                        times[algo].append(time.perf_counter() - t0)
+                        for metric, val, b in (("sum", cost.j_sum, base.j_sum),
+                                               ("max", cost.j_max, base.j_max)):
+                            key = (sname, algo, metric)
+                            red = val / b if b else 1.0
+                            reductions.setdefault(key, []).append(red)
+    for (sname, algo, metric), vals in sorted(reductions.items()):
+        arr = np.asarray(vals)
+        med = float(np.median(arr))
+        # Gaussian-based asymptotic 95% CI of the median (paper's method)
+        ci = 1.57 * (np.percentile(arr, 75) - np.percentile(arr, 25)) \
+            / max(np.sqrt(len(arr)), 1)
+        rows.append({
+            "name": f"fig8_{sname}_{algo}_{metric}",
+            "us_per_call": np.median(times[algo]) * 1e6 if times[algo] else 0,
+            "derived": med,
+            "ci95": float(ci),
+            "n": len(arr),
+        })
+    return rows
+
+
+def validate_claims(rows: List[Dict]) -> List[str]:
+    """The paper's §VI.C statistical claims, checked on our data."""
+    med = {r["name"]: r["derived"] for r in rows}
+    checks = []
+
+    def claim(desc, ok):
+        checks.append(("PASS" if ok else "FAIL") + " " + desc)
+
+    for s in ("nearest_neighbor", "nn_with_hops", "component"):
+        claim(f"hyperplane beats nodecart on {s} (J_sum)",
+              med[f"fig8_{s}_hyperplane_sum"] < med[f"fig8_{s}_nodecart_sum"])
+        claim(f"stencil_strips beats nodecart on {s} (J_sum)",
+              med[f"fig8_{s}_stencil_strips_sum"] < med[f"fig8_{s}_nodecart_sum"])
+    claim("strips ~ VieM-role baseline on nearest_neighbor (within 15%)",
+          abs(med["fig8_nearest_neighbor_stencil_strips_sum"] -
+              med["fig8_nearest_neighbor_graphgreedy_sum"]) < 0.15)
+    claim("random is the worst mapping (J_sum, nearest_neighbor)",
+          med["fig8_nearest_neighbor_random_sum"] >
+          max(med[f"fig8_nearest_neighbor_{a}_sum"]
+              for a in ("hyperplane", "kdtree", "stencil_strips", "nodecart")))
+    return checks

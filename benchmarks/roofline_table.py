@@ -1,0 +1,47 @@
+"""Roofline + linksim table from the dry-run artifacts (runs/dryrun/*.json).
+
+Rows: per (arch, shape, mesh): the three roofline terms, the dominant one,
+MFU bound, and — the paper's metric on the production topology — inter-pod
+DCI bytes under each mapping algorithm (multi-pod mesh only).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+
+def run(dryrun_dir: str = "runs/dryrun") -> List[Dict]:
+    rows = []
+    d = Path(dryrun_dir)
+    if not d.exists():
+        return [{"name": "roofline_missing_dryrun", "us_per_call": 0,
+                 "derived": 0}]
+    for f in sorted(d.glob("*.json")):
+        if f.name == "summary.json":
+            continue
+        r = json.loads(f.read_text())
+        if r.get("status") != "ok":
+            continue
+        roof = r["roofline"]
+        step = max(roof["t_compute_s"], roof["t_memory_s"],
+                   roof["t_collective_s"])
+        rows.append({
+            "name": f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+            "us_per_call": step * 1e6,       # roofline step-time bound
+            "derived": roof["mfu_bound"],
+            "dominant": roof["dominant"],
+            "useful_ratio": roof["useful_ratio"],
+        })
+        if r["mesh"] == "multi" and "linksim" in r:
+            blocked = r["linksim"].get("blocked", {})
+            for mname, rep in r["linksim"].items():
+                if mname == "blocked":
+                    continue
+                base = blocked.get("dci_total_bytes", 0) or 1.0
+                rows.append({
+                    "name": f"dci_{r['arch']}_{r['shape']}_{mname}",
+                    "us_per_call": rep.get("t_dci_bottleneck", 0) * 1e6,
+                    "derived": rep.get("dci_total_bytes", 0) / base,
+                })
+    return rows

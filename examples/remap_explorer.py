@@ -1,0 +1,76 @@
+"""Interactive explorer for the paper's mapping algorithms: pick an
+instance, see every algorithm's J_sum/J_max, runtime, and an ASCII picture
+of the node assignment (2-d grids).
+
+Run:  PYTHONPATH=src python examples/remap_explorer.py --nodes 6 --ppn 8 \
+          --stencil nn_with_hops
+"""
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np
+
+from repro.core import (CartGrid, MapperInapplicable, Stencil, dims_create,
+                        get_mapper)
+
+GLYPHS = "0123456789abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ"
+STENCILS = {"nearest_neighbor": Stencil.nearest_neighbor,
+            "nn_with_hops": Stencil.nn_with_hops,
+            "component": Stencil.component}
+
+
+def picture(grid, assignment):
+    if grid.ndim != 2:
+        return "(picture only for 2-d grids)"
+    a = assignment.reshape(grid.dims)
+    return "\n".join("".join(GLYPHS[v % len(GLYPHS)] for v in row)
+                     for row in a)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=6)
+    ap.add_argument("--ppn", type=int, default=8)
+    ap.add_argument("--dims", type=int, default=2)
+    ap.add_argument("--stencil", default="nearest_neighbor",
+                    choices=sorted(STENCILS))
+    ap.add_argument("--show", default="stencil_strips",
+                    help="algorithm to draw (or 'all')")
+    args = ap.parse_args()
+
+    grid = CartGrid(dims_create(args.nodes * args.ppn, args.dims))
+    stencil = STENCILS[args.stencil](args.dims)
+    sizes = [args.ppn] * args.nodes
+    print(f"grid {grid.dims}, stencil {args.stencil} (k={stencil.k}), "
+          f"{args.nodes} nodes x {args.ppn}\n")
+    print(f"{'algorithm':16s} {'J_sum':>8s} {'J_max':>8s} {'time':>10s}")
+    results = {}
+    for algo in ("blocked", "hyperplane", "kdtree", "stencil_strips",
+                 "nodecart", "graphgreedy", "random"):
+        mapper = (get_mapper(algo, max_passes=4) if algo == "graphgreedy"
+                  else get_mapper(algo))
+        t0 = time.perf_counter()
+        try:
+            assignment = mapper.assignment(grid, stencil, sizes)
+        except MapperInapplicable as e:
+            print(f"{algo:16s} {'n/a':>8s} {'n/a':>8s}  ({e})")
+            continue
+        dt = time.perf_counter() - t0
+        from repro.core import evaluate
+        c = evaluate(grid, stencil, assignment, num_nodes=args.nodes)
+        results[algo] = assignment
+        print(f"{algo:16s} {c.j_sum:8.0f} {c.j_max:8.0f} {dt*1e6:8.0f}us")
+
+    to_show = list(results) if args.show == "all" else [args.show]
+    for algo in to_show:
+        if algo in results:
+            print(f"\n{algo}:")
+            print(picture(grid, results[algo]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from .hlo import CollectiveStat, HloModule, parse_hlo
+from .linksim import LinkReport, simulate
+from .roofline import RooflineReport, roofline_from_module
+
+__all__ = ["CollectiveStat", "HloModule", "parse_hlo", "LinkReport",
+           "simulate", "RooflineReport", "roofline_from_module"]

@@ -1,0 +1,508 @@
+"""Mini parser for optimized HLO text (``compiled.as_text()``).
+
+Why we parse ourselves instead of trusting ``cost_analysis()``:
+XLA's HloCostAnalysis visits every computation **once** — the body of a
+``while`` loop (which is how ``lax.scan`` over layers compiles) is *not*
+multiplied by its trip count, so both FLOPs and bytes are undercounted by a
+factor of ``num_layers`` for scanned models, and collectives inside the loop
+are similarly invisible to naive line counting.  We therefore:
+
+  * split the module into computations,
+  * build the call graph (``body=``/``condition=`` for while, ``calls=`` for
+    fusions/calls, ``branch_computations`` for conditionals, ``to_apply`` for
+    reducers),
+  * propagate *execution multipliers* from the entry computation, scaling
+    while bodies by their ``known_trip_count`` backend config,
+  * and then account dots (FLOPs), op bytes (≈ bytes accessed, post-fusion),
+    and collectives (payload bytes, replica groups) with those multipliers.
+
+All quantities are **per device** (the module is the SPMD per-partition
+program); multiply by the number of participating chips for global values.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["HloModule", "CollectiveStat", "parse_hlo", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s2": 0.25, "u2": 0.25, "s4": 0.5, "u4": 0.5,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1, "f8e4m3b11fnuz": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "c64": 8, "c128": 16, "token": 0,
+    "f4e2m1fn": 0.5, "e8m0fnu": 1,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(" + "|".join(sorted(DTYPE_BYTES, key=len, reverse=True)) + r")\[([0-9,]*)\]")
+
+COLLECTIVE_OPCODES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<rest>.*)$")
+_OPCODE_RE = re.compile(r"^(?P<type>.*?)\s*\b(?P<opcode>[a-z][a-z0-9\-]*)\(")
+_COMP_HDR_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?(?P<name>[\w.\-]+)\s+\((?P<params>.*?)\)\s*->")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{(\{[0-9,{}\s]*\})\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)*)\}")
+
+# ops whose own line should not contribute to the bytes estimate
+_NO_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "custom-call", "partition-id",
+    "replica-id", "rng-get-and-update-state", "opt-barrier",
+}
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for x in dims.split(","):
+                n *= int(x)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        out.append((dt, tuple(int(x) for x in dims.split(",")) if dims else ()))
+    return out
+
+
+@dataclass
+class HloOp:
+    name: str
+    opcode: str
+    result_type: str
+    args_str: str
+    attrs_str: str
+    operands: List[str] = field(default_factory=list)
+
+    @property
+    def result_bytes(self) -> float:
+        return _shape_bytes(self.result_type)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: Dict[str, HloOp] = field(default_factory=dict)
+    order: List[str] = field(default_factory=list)
+    shape_of: Dict[str, str] = field(default_factory=dict)
+    is_entry: bool = False
+
+
+@dataclass
+class CollectiveStat:
+    opcode: str
+    name: str
+    computation: str
+    payload_bytes: float          # per-device operand payload of one execution
+    result_bytes: float
+    groups: Optional[List[List[int]]]  # device-id groups (None = all devices)
+    pairs: Optional[List[Tuple[int, int]]]  # collective-permute only
+    multiplier: float             # loop-corrected execution count
+
+    @property
+    def group_size(self) -> Optional[int]:
+        if self.groups:
+            return len(self.groups[0])
+        return None
+
+    @property
+    def total_payload(self) -> float:
+        return self.payload_bytes * self.multiplier
+
+    def wire_bytes_per_device(self) -> float:
+        """Bytes one participant moves over its links, ring/pairwise model."""
+        g = self.group_size or 2
+        b = self.payload_bytes
+        if self.opcode.startswith("all-reduce"):
+            w = 2.0 * b * (g - 1) / g
+        elif self.opcode.startswith("all-gather"):
+            w = b * (g - 1)             # b is the pre-gather shard here
+        elif self.opcode.startswith("reduce-scatter"):
+            w = b * (g - 1) / g         # b is the pre-scatter full buffer
+        elif self.opcode.startswith("all-to-all") or self.opcode.startswith("ragged"):
+            w = b * (g - 1) / g
+        elif self.opcode.startswith("collective-permute"):
+            w = b
+        else:
+            w = b
+        return w * self.multiplier
+
+
+def _split_paren_args(s: str, open_idx: int) -> Tuple[str, str]:
+    """Given s with '(' at open_idx, return (inside, after_close)."""
+    depth = 0
+    for i in range(open_idx, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return s[open_idx + 1:i], s[i + 1:]
+    return s[open_idx + 1:], ""
+
+
+def _parse_groups(attrs: str) -> Optional[List[List[int]]]:
+    m = _GROUPS_IOTA_RE.search(attrs)
+    if m:
+        num_groups, group_size = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            ids = ids.transpose(perm)
+        return ids.reshape(num_groups, group_size).tolist()
+    m = _GROUPS_EXPLICIT_RE.search(attrs)
+    if m:
+        body = m.group(1)
+        groups = []
+        for grp in re.findall(r"\{([0-9,\s]*)\}", body):
+            grp = grp.strip()
+            if grp:
+                groups.append([int(x) for x in grp.split(",")])
+        return groups or None
+    return None
+
+
+def _parse_pairs(attrs: str) -> Optional[List[Tuple[int, int]]]:
+    m = _PAIRS_RE.search(attrs)
+    if not m:
+        return None
+    return [tuple(int(x) for x in p.split(","))
+            for p in re.findall(r"\{(\d+,\d+)\}", m.group(1))]
+
+
+class HloModule:
+    def __init__(self, computations: Dict[str, Computation], entry: str):
+        self.computations = computations
+        self.entry = entry
+        self._mults: Optional[Dict[str, Tuple[float, float]]] = None
+
+    # -- call-graph multipliers ---------------------------------------------
+    def multipliers(self) -> Dict[str, Tuple[float, float]]:
+        """comp name -> (exec_mult, mem_mult).
+
+        exec_mult: how many times the computation runs per step (for FLOPs /
+        collectives).  mem_mult: same but zeroed inside fusion bodies and
+        reducer appliers, whose memory traffic is accounted at the call site.
+        """
+        if self._mults is not None:
+            return self._mults
+        mults: Dict[str, Tuple[float, float]] = {c: (0.0, 0.0) for c in self.computations}
+        mults[self.entry] = (1.0, 1.0)
+        # propagate in reverse topological order: process callers before
+        # callees; iterate to fixpoint (call graph is a DAG, small).
+        for _ in range(len(self.computations) + 2):
+            changed = False
+            for cname, comp in self.computations.items():
+                em, mm = mults[cname]
+                if em == 0.0 and mm == 0.0:
+                    continue
+                for op in comp.ops.values():
+                    for callee, kind, factor in _callees(op):
+                        if callee not in mults:
+                            continue
+                        if kind == "fusion":
+                            add = (em * factor, 0.0)
+                        elif kind == "applier":
+                            add = (0.0, 0.0)
+                        else:  # control flow
+                            add = (em * factor, mm * factor)
+                        cur = mults[callee]
+                        new = (max(cur[0], add[0]), max(cur[1], add[1]))
+                        if new != cur:
+                            mults[callee] = new
+                            changed = True
+            if not changed:
+                break
+        self._mults = mults
+        return mults
+
+    # -- aggregate statistics -------------------------------------------------
+    def collectives(self) -> List[CollectiveStat]:
+        out = []
+        mults = self.multipliers()
+        for cname, comp in self.computations.items():
+            em, _ = mults[cname]
+            if em == 0.0:
+                continue
+            for op in comp.ops.values():
+                if not op.opcode.startswith(COLLECTIVE_OPCODES):
+                    continue
+                if op.opcode.endswith("-done"):
+                    continue
+                res_b = op.result_bytes
+                # async start ops produce (operand, result) tuples: halve
+                if op.opcode.endswith("-start"):
+                    res_b /= 2.0
+                payload = res_b
+                opc = op.opcode.replace("-start", "")
+                if opc.startswith("all-gather"):
+                    # result is the gathered buffer; payload = one shard
+                    groups = _parse_groups(op.attrs_str)
+                    g = len(groups[0]) if groups else 1
+                    payload = res_b / max(g, 1)
+                out.append(CollectiveStat(
+                    opcode=opc, name=op.name, computation=cname,
+                    payload_bytes=payload, result_bytes=res_b,
+                    groups=_parse_groups(op.attrs_str),
+                    pairs=_parse_pairs(op.attrs_str),
+                    multiplier=em))
+        return out
+
+    def dot_flops(self) -> float:
+        """Loop-corrected matmul FLOPs per device."""
+        total = 0.0
+        mults = self.multipliers()
+        for cname, comp in self.computations.items():
+            em, _ = mults[cname]
+            if em == 0.0:
+                continue
+            for op in comp.ops.values():
+                if op.opcode == "dot":
+                    total += em * _dot_flops(op, comp)
+                elif op.opcode == "convolution":
+                    total += em * _conv_flops(op, comp)
+        return total
+
+    def approx_bytes_accessed(self) -> float:
+        """Loop-corrected per-device bytes estimate: sum over materializing
+        ops of operand + result bytes (post-fusion HLO, so this approximates
+        HBM traffic the way HloCostAnalysis does, but with trip counts).
+
+        Slicing ops only touch the slice, not the buffer they slice from —
+        without this, every scan-over-layers iteration would be charged the
+        full stacked parameter array:
+          * dynamic-slice / gather: 2x result (+indices);
+          * dynamic-update-slice: 2x update slice (result aliases operand 0);
+          * fusions: a fusion parameter consumed *only* by slicing ops inside
+            the body is charged at the consumers' result sizes.
+        """
+        total = 0.0
+        mults = self.multipliers()
+        for cname, comp in self.computations.items():
+            _, mm = mults[cname]
+            if mm == 0.0:
+                continue
+            for op in comp.ops.values():
+                if op.opcode in _NO_BYTES_OPS:
+                    continue
+                total += mm * self._op_bytes(op, comp)
+        return total
+
+    def _op_bytes(self, op: HloOp, comp: Computation) -> float:
+        if op.opcode in ("dynamic-slice", "gather"):
+            return 2.0 * op.result_bytes
+        if op.opcode == "dynamic-update-slice":
+            upd = (_shape_bytes(comp.shape_of.get(op.operands[1], ""))
+                   if len(op.operands) > 1 else op.result_bytes)
+            return 2.0 * upd
+        if op.opcode == "scatter":
+            upd = (_shape_bytes(comp.shape_of.get(op.operands[-1], ""))
+                   if op.operands else op.result_bytes)
+            return 2.0 * upd
+        if op.opcode == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", op.attrs_str)
+            callee = self.computations.get(m.group(1)) if m else None
+            if callee is not None:
+                return op.result_bytes + self._fusion_param_bytes(op, comp, callee)
+        b = op.result_bytes
+        for operand in op.operands:
+            b += _shape_bytes(comp.shape_of.get(operand, ""))
+        return b
+
+    def _fusion_param_bytes(self, op: HloOp, comp: Computation,
+                            callee: Computation) -> float:
+        """Per-parameter contribution of a fusion's operands: parameters that
+        are only sliced inside the body count at slice size."""
+        # map parameter index -> param op name in callee
+        param_names = {}
+        for name, fop in callee.ops.items():
+            if fop.opcode == "parameter":
+                mi = re.match(r"^(\d+)", fop.args_str.strip())
+                idx = int(mi.group(1)) if mi else len(param_names)
+                param_names[name] = idx
+        # consumers of each param
+        sliced_bytes: Dict[str, float] = {}
+        full: Dict[str, bool] = {n: False for n in param_names}
+        for fop in callee.ops.values():
+            for pos, operand in enumerate(fop.operands):
+                if operand not in param_names:
+                    continue
+                if fop.opcode in ("dynamic-slice", "gather") and pos == 0:
+                    sliced_bytes[operand] = sliced_bytes.get(operand, 0.0) + \
+                        fop.result_bytes
+                elif fop.opcode == "dynamic-update-slice" and pos == 0:
+                    upd = (_shape_bytes(callee.shape_of.get(fop.operands[1], ""))
+                           if len(fop.operands) > 1 else fop.result_bytes)
+                    sliced_bytes[operand] = sliced_bytes.get(operand, 0.0) + upd
+                else:
+                    full[operand] = True
+        total = 0.0
+        for pname, idx in param_names.items():
+            if idx < len(op.operands):
+                pbytes = _shape_bytes(comp.shape_of.get(op.operands[idx], ""))
+            else:
+                pbytes = _shape_bytes(callee.shape_of.get(pname, ""))
+            if full.get(pname, False) or pname not in sliced_bytes:
+                total += pbytes
+            else:
+                total += min(pbytes, sliced_bytes[pname])
+        return total
+
+    def collective_payload_bytes(self) -> float:
+        return sum(c.total_payload for c in self.collectives())
+
+    def collective_wire_bytes(self) -> float:
+        return sum(c.wire_bytes_per_device() for c in self.collectives())
+
+
+def _callees(op: HloOp) -> List[Tuple[str, str, float]]:
+    """(callee computation, kind, execution factor) triples for one op."""
+    out = []
+    attrs = op.attrs_str
+    if op.opcode == "while":
+        trip = 1.0
+        m = _TRIP_RE.search(attrs)
+        if m:
+            trip = float(m.group(1))
+        for key in ("body", "condition"):
+            m2 = re.search(key + r"=%?([\w.\-]+)", attrs)
+            if m2:
+                out.append((m2.group(1), "control", trip if key == "body" else trip + 1))
+    elif op.opcode == "fusion":
+        m = re.search(r"calls=%?([\w.\-]+)", attrs)
+        if m:
+            out.append((m.group(1), "fusion", 1.0))
+    elif op.opcode == "conditional":
+        m = re.search(r"branch_computations=\{([^}]*)\}", attrs)
+        if m:
+            for name in re.findall(r"%?([\w.\-]+)", m.group(1)):
+                out.append((name, "control", 1.0))
+        for key in ("true_computation", "false_computation"):
+            m2 = re.search(key + r"=%?([\w.\-]+)", attrs)
+            if m2:
+                out.append((m2.group(1), "control", 1.0))
+    elif op.opcode == "call":
+        m = re.search(r"to_apply=%?([\w.\-]+)", attrs)
+        if m:
+            out.append((m.group(1), "control", 1.0))
+    else:
+        m = re.search(r"to_apply=%?([\w.\-]+)", attrs)
+        if m:
+            out.append((m.group(1), "applier", 1.0))
+        m = re.search(r"calls=%?([\w.\-]+)", attrs)
+        if m:
+            out.append((m.group(1), "fusion", 1.0))
+    return out
+
+
+def _contract_sizes(op: HloOp, comp: Computation, which: str, key: str) -> float:
+    m = re.search(key + r"=\{([0-9,]*)\}", op.attrs_str)
+    if not m or not op.operands:
+        return 1.0
+    dims_idx = [int(x) for x in m.group(1).split(",")] if m.group(1) else []
+    operand = op.operands[0 if which == "lhs" else 1] if len(op.operands) > 1 else op.operands[0]
+    shapes = _shape_dims(comp.shape_of.get(operand, ""))
+    if not shapes:
+        return 1.0
+    dims = shapes[0][1]
+    out = 1.0
+    for i in dims_idx:
+        if i < len(dims):
+            out *= dims[i]
+    return out
+
+
+def _dot_flops(op: HloOp, comp: Computation) -> float:
+    result_elems = 0.0
+    for _, dims in _shape_dims(op.result_type):
+        result_elems += float(np.prod(dims)) if dims else 1.0
+    contract = _contract_sizes(op, comp, "lhs", "lhs_contracting_dims")
+    return 2.0 * result_elems * contract
+
+
+def _conv_flops(op: HloOp, comp: Computation) -> float:
+    result_elems = 0.0
+    for _, dims in _shape_dims(op.result_type):
+        result_elems += float(np.prod(dims)) if dims else 1.0
+    if len(op.operands) > 1:
+        kshapes = _shape_dims(comp.shape_of.get(op.operands[1], ""))
+        if kshapes:
+            kelems = float(np.prod(kshapes[0][1])) if kshapes[0][1] else 1.0
+            # 2 * out_elems * kernel_elems / out_features (rough)
+            out_feat = kshapes[0][1][-1] if kshapes[0][1] else 1
+            return 2.0 * result_elems * kelems / max(out_feat, 1)
+    return 2.0 * result_elems
+
+
+def parse_hlo(text: str) -> HloModule:
+    computations: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if not stripped or stripped.startswith("//"):
+            continue
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and stripped.endswith("{"):
+            cur = Computation(name=hdr.group("name"))
+            cur.is_entry = stripped.startswith("ENTRY")
+            computations[cur.name] = cur
+            if cur.is_entry:
+                entry = cur.name
+            # parameters: "p1: f32[2,3], p2: (f32[1], s32[])"
+            params = hdr.group("params")
+            for pm in re.finditer(r"([\w.\-]+)\s*:\s*([^,()]*(?:\([^)]*\))?[^,]*)", params):
+                cur.shape_of[pm.group(1)] = pm.group(2)
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(stripped)
+        if not m:
+            continue
+        name, rest = m.group("name"), m.group("rest")
+        om = _OPCODE_RE.match(rest)
+        if not om:
+            continue
+        opcode = om.group("opcode")
+        type_str = om.group("type").strip()
+        open_idx = om.end() - 1
+        args, attrs = _split_paren_args(rest, open_idx)
+        operands = re.findall(r"%([\w.\-]+)", args)
+        if not operands:
+            # newer syntax without % on operand refs: bare identifiers
+            operands = [t.strip() for t in args.split(",")
+                        if t.strip() and not _SHAPE_RE.search(t) and
+                        re.match(r"^[\w.\-]+$", t.strip())]
+        op = HloOp(name=name, opcode=opcode, result_type=type_str,
+                   args_str=args, attrs_str=attrs, operands=operands)
+        # parameter ops: record shape (type_str), opcode is 'parameter'
+        cur.ops[name] = op
+        cur.order.append(name)
+        cur.shape_of[name] = type_str
+    if entry is None:
+        # fall back: last computation
+        entry = list(computations)[-1]
+    return HloModule(computations, entry)

@@ -1,0 +1,5 @@
+from .io import digest, is_committed, load_arrays, save_arrays
+from .manager import CheckpointManager
+
+__all__ = ["digest", "is_committed", "load_arrays", "save_arrays",
+           "CheckpointManager"]

@@ -1,0 +1,95 @@
+"""Checkpoint manager: rotation, resume, async save, corruption tolerance."""
+from __future__ import annotations
+
+import json
+import re
+import shutil
+import threading
+from pathlib import Path
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from .io import is_committed, load_arrays, save_arrays
+
+__all__ = ["CheckpointManager"]
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+class CheckpointManager:
+    def __init__(self, directory, keep: int = 3, async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+
+    # -- discovery -----------------------------------------------------------
+    def steps(self):
+        out = []
+        for p in self.dir.iterdir():
+            m = _STEP_RE.match(p.name)
+            if m and is_committed(p):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def path(self, step: int) -> Path:
+        return self.dir / f"step_{step:08d}"
+
+    # -- save ------------------------------------------------------------------
+    def save(self, step: int, state: Dict[str, object],
+             meta: Optional[dict] = None, block: bool = False) -> None:
+        """state: dict of flat dicts (e.g. {"params": ..., "opt": ...})."""
+        self.wait()  # one in-flight save at a time
+        flat: Dict[str, np.ndarray] = {}
+        for group, tree in state.items():
+            for k, v in tree.items():
+                flat[f"{group}\t{k}"] = np.asarray(jax.device_get(v))
+        info = dict(meta or {})
+        info["step"] = step
+
+        def _do():
+            save_arrays(self.path(step), flat, meta=info)
+            self._rotate()
+
+        if self.async_save and not block:
+            self._thread = threading.Thread(target=_do, daemon=True)
+            self._thread.start()
+        else:
+            _do()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _rotate(self):
+        steps = self.steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self.path(s), ignore_errors=True)
+
+    # -- restore ----------------------------------------------------------------
+    def restore(self, step: Optional[int] = None, verify: bool = True):
+        """Returns (step, {"params": flat, "opt": flat, ...}) or (None, None).
+        Silently skips corrupted checkpoints, falling back to older ones."""
+        self.wait()
+        candidates = self.steps()
+        if step is not None:
+            candidates = [s for s in candidates if s == step]
+        for s in reversed(candidates):
+            try:
+                flat = load_arrays(self.path(s), verify=verify)
+            except Exception:
+                continue  # torn/corrupt checkpoint: fall back to older
+            state: Dict[str, Dict[str, np.ndarray]] = {}
+            for k, v in flat.items():
+                group, name = k.split("\t", 1)
+                state.setdefault(group, {})[name] = v
+            return s, state
+        return None, None

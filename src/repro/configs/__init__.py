@@ -1,0 +1,5 @@
+from .base import SHAPES, ArchConfig, ShapeSpec, shape_applicable
+from .registry import ARCHS, all_cells, get_arch
+
+__all__ = ["ArchConfig", "ShapeSpec", "SHAPES", "shape_applicable",
+           "ARCHS", "get_arch", "all_cells"]

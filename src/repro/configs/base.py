@@ -1,0 +1,315 @@
+"""Architecture + run configuration.
+
+One :class:`ArchConfig` per assigned architecture (``src/repro/configs/<id>.py``)
+with the exact published dimensions, plus ``reduced()`` variants of the same
+family for CPU smoke tests.  Analytic parameter/FLOP counts live here so the
+roofline's MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) is config-derived,
+not hand-entered.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional, Tuple
+
+__all__ = ["ArchConfig", "ShapeSpec", "SHAPES", "shape_applicable"]
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+# the assigned input-shape set (applies to every LM-family arch)
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    # attention
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    sliding_window: Optional[int] = None   # SWA width (mixtral/zamba2 long ctx)
+    attention_free: bool = False
+    # MoE
+    n_experts: int = 0
+    n_dense_layers: int = 0         # leading dense layers (DeepSeek-V3: 3)
+    top_k: int = 0
+    n_shared_experts: int = 0
+    d_ff_expert: Optional[int] = None
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # MLA (deepseek)
+    use_mla: bool = False
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # MTP (deepseek)
+    mtp_depth: int = 0
+    # SSM (mamba2 SSD)
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+    # hybrid (zamba2): one shared attention block applied every k SSM layers
+    attn_every: int = 0
+    # enc-dec (seamless)
+    n_enc_layers: int = 0
+    src_len: int = 0                # encoder source length for enc-dec shapes
+    # vlm / audio stub frontends
+    num_patches: int = 0            # prepended visual/audio embeddings
+    # numerics / runtime knobs (hillclimb surface)
+    swa_ring_cache: bool = False    # ring KV cache of window size for SWA
+                                    # decode (beyond-paper, §Perf)
+    use_pallas_attention: bool = False  # route full-sequence attention
+                                        # through kernels/attention (TPU;
+                                        # interpret-mode on CPU)
+    param_dtype: str = "bf16"
+    compute_dtype: str = "bf16"
+    remat: str = "full"             # full | dots | none
+    scan_layers: bool = True
+    microbatches: int = 1
+    use_mtp_loss: bool = False
+    quantized_opt_state: bool = False
+    tie_embeddings: bool = False
+    source: str = ""                # provenance note
+
+    # ------------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def vocab_padded(self) -> int:
+        """Embedding/head tables padded to a multiple of 256 so the vocab dim
+        always divides the 16/32-way mesh axes (GPT-NeoX-style padding; the
+        published vocab is kept for data/loss semantics).  Without this,
+        e.g. mamba2's 50280 falls back to full logits replication."""
+        return -(-self.vocab // 256) * 256
+
+    @property
+    def d_inner_ssm(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner_ssm // self.ssm_headdim
+
+    # -- analytic parameter counts -------------------------------------
+    def attn_params(self) -> int:
+        d = self.d_model
+        if self.attention_free:
+            return 0
+        if self.use_mla:
+            q = d * self.q_lora_rank + self.q_lora_rank * self.n_heads * (
+                self.qk_nope_dim + self.qk_rope_dim)
+            kv = d * (self.kv_lora_rank + self.qk_rope_dim)
+            kv += self.kv_lora_rank * self.n_heads * (self.qk_nope_dim + self.v_head_dim)
+            o = self.n_heads * self.v_head_dim * d
+            return q + kv + o + self.q_lora_rank + self.kv_lora_rank  # + norms
+        hd = self.hd
+        return d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+
+    def mlp_params_dense(self, d_ff: Optional[int] = None) -> int:
+        f = d_ff if d_ff is not None else self.d_ff
+        return 3 * self.d_model * f  # SwiGLU: gate, up, down
+
+    def ssm_params(self) -> int:
+        di, n, hd = self.d_inner_ssm, self.ssm_state, self.ssm_headdim
+        heads = self.n_ssm_heads
+        in_proj = self.d_model * (2 * di + 2 * n + heads)  # z, x, B, C, dt
+        conv = (di + 2 * n) * self.ssm_conv
+        out = di * self.d_model
+        extra = heads * 2 + di  # A, dt_bias, D skip
+        return in_proj + conv + out + extra
+
+    def layer_params(self, layer_idx: int = 0) -> int:
+        d = self.d_model
+        norms = 2 * d
+        if self.family == "ssm":
+            return self.ssm_params() + d
+        if self.family == "hybrid":
+            return self.ssm_params() + d  # shared attn counted once globally
+        p = self.attn_params() + norms
+        if (self.n_experts > 0) and layer_idx >= self.n_dense_layers:
+            fe = self.d_ff_expert or self.d_ff
+            p += self.n_experts * 3 * d * fe
+            p += self.n_shared_experts * 3 * d * fe
+            p += d * self.n_experts  # router
+        else:
+            p += self.mlp_params_dense()
+        return p
+
+    def active_layer_params(self, layer_idx: int = 10**9) -> int:
+        d = self.d_model
+        if self.family in ("ssm",):
+            return self.ssm_params() + d
+        if self.family == "hybrid":
+            return self.ssm_params() + d
+        p = self.attn_params() + 2 * d
+        if self.n_experts > 0 and layer_idx >= self.n_dense_layers:
+            fe = self.d_ff_expert or self.d_ff
+            p += (self.top_k + self.n_shared_experts) * 3 * d * fe
+            p += d * self.n_experts
+        else:
+            p += self.mlp_params_dense()
+        return p
+
+    def param_count(self) -> int:
+        nd = self.n_dense_layers
+        total = (self.n_layers - nd) * self.layer_params(nd) \
+            + nd * self.layer_params(0)
+        if self.family == "hybrid" and self.attn_every:
+            total += self.attn_params() + self.mlp_params_dense() + 2 * self.d_model
+        if self.family == "encdec":
+            # encoder layers: self-attn + mlp; decoder adds cross-attn
+            enc = self.n_enc_layers * (self.attn_params() + self.mlp_params_dense()
+                                       + 2 * self.d_model)
+            dec_cross = self.n_layers * self.attn_params()
+            total += enc + dec_cross
+        emb = self.vocab * self.d_model
+        head = 0 if self.tie_embeddings else self.vocab * self.d_model
+        total += emb + head + self.d_model
+        if self.mtp_depth:
+            total += self.mtp_depth * self.layer_params(self.n_layers)
+        return total
+
+    def active_param_count(self) -> int:
+        nd = self.n_dense_layers
+        total = (self.n_layers - nd) * self.active_layer_params() \
+            + nd * self.active_layer_params(0)
+        if self.family == "hybrid" and self.attn_every:
+            total += self.attn_params() + self.mlp_params_dense() + 2 * self.d_model
+        if self.family == "encdec":
+            enc = self.n_enc_layers * (self.attn_params() + self.mlp_params_dense()
+                                       + 2 * self.d_model)
+            total += enc + self.n_layers * self.attn_params()
+        emb = self.vocab * self.d_model
+        head = 0 if self.tie_embeddings else self.vocab * self.d_model
+        return total + emb + head + self.d_model
+
+    # -- analytic FLOPs --------------------------------------------------
+    def model_flops(self, shape: ShapeSpec) -> float:
+        """The assignment's MODEL_FLOPS: 6·N_active·D (train) / 2·N_active·D
+        (inference), D = tokens processed in the step."""
+        if shape.kind == "train":
+            tokens = shape.seq_len * shape.global_batch
+            return 6.0 * self.active_param_count() * tokens
+        if shape.kind == "prefill":
+            tokens = shape.seq_len * shape.global_batch
+            return 2.0 * self.active_param_count() * tokens
+        # decode: one token per sequence
+        return 2.0 * self.active_param_count() * shape.global_batch
+
+    def attn_flops(self, shape: ShapeSpec) -> float:
+        """Analytic attention/SSM mixing FLOPs 6·N·D misses — dominates long
+        contexts (e.g. MLA latent scores against a 32k cache).  Added to
+        MODEL_FLOPS for the useful-ratio so genuinely useful attention work
+        is not booked as waste."""
+        B, S = shape.global_batch, shape.seq_len
+        fwd_mult = 3.0 if shape.kind == "train" else 1.0
+        if self.family in ("ssm",) or self.attn_every:
+            # SSD: intra-chunk dual form + state in/out per token
+            tokens = B * (S if shape.kind != "decode" else 1)
+            di, N, Q = self.d_inner_ssm, self.ssm_state, self.ssm_chunk
+            per_tok = 2.0 * (Q if shape.kind != "decode" else 1) * (N + di) \
+                + 4.0 * di * N
+            n_ssm = self.n_layers
+            f = fwd_mult * tokens * per_tok * n_ssm
+            if not self.attn_every:
+                return f
+            # hybrid: shared attention applied every attn_every layers
+            n_attn = self.n_layers // self.attn_every
+        else:
+            n_attn = self.n_layers
+            f = 0.0
+        if self.attention_free:
+            return f
+        if self.use_mla:
+            qk = self.kv_lora_rank + self.qk_rope_dim
+            hv = self.kv_lora_rank
+        else:
+            qk = hv = self.hd
+        per_pair = 2.0 * self.n_heads * (qk + hv)
+        if shape.kind == "decode":
+            ctx = min(S, self.sliding_window or S)
+            f += B * ctx * per_pair * n_attn
+            if self.family == "encdec":       # cross-attention over memory
+                f += B * self.src_len * per_pair * n_attn
+        else:
+            ctx = min(S, self.sliding_window or S)
+            pairs = B * S * ctx * (0.5 if ctx == S else 1.0)
+            f += fwd_mult * pairs * per_pair * n_attn
+            if self.family == "encdec":
+                f += fwd_mult * B * self.src_len ** 2 * per_pair \
+                    * self.n_enc_layers            # bidirectional encoder
+                f += fwd_mult * B * S * self.src_len * per_pair * n_attn
+        return f
+
+    # -- reductions for smoke tests --------------------------------------
+    def reduced(self) -> "ArchConfig":
+        """Same family, tiny dimensions — runs a CPU forward/train step."""
+        hd = 16
+        n_heads = max(2, min(4, self.n_heads))
+        n_kv = max(1, min(self.n_kv_heads, n_heads))
+        changes = dict(
+            name=self.name + "-reduced",
+            n_layers=min(2 if not self.attn_every else max(2, self.attn_every),
+                         self.n_layers),
+            d_model=64, n_heads=n_heads, n_kv_heads=n_kv, head_dim=hd,
+            d_ff=128, vocab=256, param_dtype="f32", compute_dtype="f32",
+            remat="none", microbatches=1,
+        )
+        if self.n_experts:
+            changes.update(n_experts=4, top_k=min(2, self.top_k or 2),
+                           d_ff_expert=64,
+                           n_shared_experts=min(1, self.n_shared_experts),
+                           n_dense_layers=min(1, self.n_dense_layers))
+        if self.use_mla:
+            changes.update(q_lora_rank=32, kv_lora_rank=16, qk_nope_dim=16,
+                           qk_rope_dim=8, v_head_dim=16)
+        if self.ssm_state:
+            changes.update(ssm_state=16, ssm_headdim=16, ssm_chunk=32)
+        if self.attn_every:
+            changes.update(attn_every=2, n_layers=4)
+        if self.n_enc_layers:
+            changes.update(n_enc_layers=2, src_len=32)
+        if self.num_patches:
+            changes.update(num_patches=8)
+        if self.mtp_depth:
+            changes.update(mtp_depth=1)
+        if self.sliding_window:
+            changes.update(sliding_window=32)
+        return replace(self, **changes)
+
+
+def shape_applicable(cfg: ArchConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """Whether an (arch, shape) cell runs (DESIGN.md §5)."""
+    if shape.name == "long_500k":
+        subquad = (cfg.attention_free or cfg.attn_every > 0
+                   or cfg.sliding_window is not None)
+        if not subquad:
+            return False, ("full-attention arch: 500k decode needs "
+                           "sub-quadratic attention (skip per assignment)")
+    return True, ""

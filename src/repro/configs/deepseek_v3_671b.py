@@ -1,0 +1,36 @@
+"""deepseek-v3-671b [moe]: 61L d_model=7168 128H (GQA kv=128) d_ff=2048
+vocab=129280, MoE 256e top-8 — MLA, 1 shared + 256 routed top-8, MTP.
+[arXiv:2412.19437; hf]
+
+Adaptations recorded in DESIGN.md: quantized optimizer state on (int8
+moments) so the 671B state fits v5e pods; first 3 layers dense (d_ff 18432)
+per the published architecture, remaining 58 MoE.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,
+    d_ff=18432,           # dense-layer FFN width
+    d_ff_expert=2048,
+    vocab=129280,
+    n_experts=256,
+    n_dense_layers=3,
+    top_k=8,
+    n_shared_experts=1,
+    use_mla=True,
+    q_lora_rank=1536,
+    kv_lora_rank=512,
+    qk_nope_dim=128,
+    qk_rope_dim=64,
+    v_head_dim=128,
+    mtp_depth=1,
+    use_mtp_loss=True,
+    quantized_opt_state=True,
+    microbatches=8,
+    source="arXiv:2412.19437; hf:deepseek-ai/DeepSeek-V3",
+)

@@ -1,0 +1,16 @@
+"""granite-20b [dense]: 52L d_model=6144 48H (GQA kv=1 = MQA) d_ff=24576
+vocab=49152, llama-arch, code.  [arXiv:2405.04324; hf]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-20b",
+    family="dense",
+    n_layers=52,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=1,
+    d_ff=24576,
+    vocab=49152,
+    microbatches=8,
+    source="arXiv:2405.04324; hf:ibm-granite/granite-20b-code-base",
+)

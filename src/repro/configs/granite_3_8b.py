@@ -1,0 +1,17 @@
+"""granite-3-8b [dense]: 40L d_model=4096 32H (GQA kv=8) d_ff=12800
+vocab=49155, GQA.  [hf:ibm-granite/granite-3.0-2b-base (family); hf]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-3-8b",
+    family="dense",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=12800,
+    vocab=49155,
+    rope_theta=1e4,
+    microbatches=8,
+    source="hf:ibm-granite/granite-3.0-8b-base",
+)

@@ -1,0 +1,25 @@
+"""internvl2-76b [vlm]: 80L d_model=8192 64H (GQA kv=8) d_ff=28672
+vocab=128256 — InternViT + (Llama3-70B-style) LLM backbone.
+[arXiv:2404.16821; unverified]
+
+Backbone only: the InternViT frontend is a stub — ``input_specs`` provides
+precomputed patch embeddings (B, 256, d_model) prepended to the token
+sequence per the assignment.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internvl2-76b",
+    family="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab=128256,
+    num_patches=256,
+    rope_theta=5e5,
+    quantized_opt_state=True,
+    microbatches=16,
+    source="arXiv:2404.16821; hf:OpenGVLab/InternVL2-Llama3-76B",
+)

@@ -1,0 +1,23 @@
+"""mamba2-130m [ssm]: 24L d_model=768 (attn-free) vocab=50280, ssm_state=128,
+SSD (state-space duality).  [arXiv:2405.21060; unverified]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-130m",
+    family="ssm",
+    n_layers=24,
+    d_model=768,
+    n_heads=1,          # unused (attention-free)
+    n_kv_heads=1,
+    d_ff=0,
+    vocab=50280,
+    attention_free=True,
+    ssm_state=128,
+    ssm_headdim=64,
+    ssm_expand=2,
+    ssm_conv=4,
+    tie_embeddings=True,
+    param_dtype="f32",   # 130M: small enough; matches reference training
+    microbatches=2,
+    source="arXiv:2405.21060",
+)

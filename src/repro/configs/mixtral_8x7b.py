@@ -1,0 +1,21 @@
+"""mixtral-8x7b [moe]: 32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000,
+MoE 8e top-2, SWA.  [arXiv:2401.04088; hf]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    d_ff_expert=14336,
+    vocab=32000,
+    n_experts=8,
+    top_k=2,
+    sliding_window=4096,
+    rope_theta=1e6,
+    microbatches=4,
+    source="arXiv:2401.04088; hf:mistralai/Mixtral-8x7B-v0.1",
+)

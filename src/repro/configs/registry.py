@@ -1,0 +1,44 @@
+"""Architecture registry: ``--arch <id>`` resolution for all launchers."""
+from __future__ import annotations
+
+from typing import Dict
+
+from .base import SHAPES, ArchConfig, ShapeSpec, shape_applicable
+from .deepseek_v3_671b import CONFIG as deepseek_v3_671b
+from .granite_20b import CONFIG as granite_20b
+from .granite_3_8b import CONFIG as granite_3_8b
+from .internvl2_76b import CONFIG as internvl2_76b
+from .mamba2_130m import CONFIG as mamba2_130m
+from .mixtral_8x7b import CONFIG as mixtral_8x7b
+from .qwen3_8b import CONFIG as qwen3_8b
+from .seamless_m4t_medium import CONFIG as seamless_m4t_medium
+from .yi_34b import CONFIG as yi_34b
+from .zamba2_2_7b import CONFIG as zamba2_2_7b
+
+ARCHS: Dict[str, ArchConfig] = {c.name: c for c in [
+    mixtral_8x7b, deepseek_v3_671b, mamba2_130m, yi_34b, granite_3_8b,
+    granite_20b, qwen3_8b, zamba2_2_7b, seamless_m4t_medium, internvl2_76b,
+]}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name.endswith("-reduced"):
+        return get_arch(name[:-len("-reduced")]).reduced()
+    try:
+        return ARCHS[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; choose from {sorted(ARCHS)}")
+
+
+def all_cells():
+    """All 40 (arch, shape) cells with applicability verdicts."""
+    out = []
+    for arch in ARCHS.values():
+        for shape in SHAPES.values():
+            ok, why = shape_applicable(arch, shape)
+            out.append((arch, shape, ok, why))
+    return out
+
+
+__all__ = ["ARCHS", "SHAPES", "get_arch", "all_cells", "ArchConfig",
+           "ShapeSpec", "shape_applicable"]

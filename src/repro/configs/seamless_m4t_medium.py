@@ -1,0 +1,22 @@
+"""seamless-m4t-medium [audio]: 12L d_model=1024 16H (kv=16) d_ff=4096
+vocab=256206 — enc-dec, multimodal.  [arXiv:2308.11596; hf]
+
+Backbone only: the audio frontend is a stub — ``input_specs`` provides
+precomputed frame embeddings (B, T_src, d_model) per the assignment.
+12 encoder + 12 decoder layers.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="seamless-m4t-medium",
+    family="encdec",
+    n_layers=12,
+    n_enc_layers=12,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab=256206,
+    src_len=1024,        # encoder frame positions per sequence
+    source="arXiv:2308.11596; hf:facebook/seamless-m4t-medium",
+)

@@ -1,0 +1,22 @@
+"""yi-34b [dense]: 60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000,
+llama-arch GQA.  [arXiv:2403.04652; hf]
+
+Note: 56 heads is not divisible by the 16-way model axis; the partitioner's
+divisibility fallback replicates the head dim and shards the flattened
+projection instead (DESIGN.md §4, sharding/partition.py).
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="yi-34b",
+    family="dense",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=20480,
+    vocab=64000,
+    rope_theta=5e6,
+    microbatches=8,
+    source="arXiv:2403.04652; hf:01-ai/Yi-34B",
+)

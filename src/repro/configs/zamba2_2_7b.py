@@ -1,0 +1,29 @@
+"""zamba2-2.7b [hybrid]: 54L d_model=2560 32H (GQA kv=32) d_ff=10240
+vocab=32000, ssm_state=64 — Mamba2 + shared attention blocks.
+[arXiv:2411.15242; hf]
+
+Adaptation (DESIGN.md): one shared-weight attention+MLP block applied after
+every 6 Mamba2 layers (9 groups); Zamba2's per-invocation LoRA deltas on the
+shared block are omitted.  At long context the shared block uses SWA
+(window 4096) — that is what makes the ``long_500k`` shape runnable.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=10240,
+    vocab=32000,
+    ssm_state=64,
+    ssm_headdim=64,
+    ssm_expand=2,
+    ssm_conv=4,
+    attn_every=6,
+    sliding_window=4096,
+    microbatches=2,
+    source="arXiv:2411.15242; hf:Zyphra/Zamba2-2.7B",
+)

@@ -1,0 +1,19 @@
+"""Core library: the paper's contribution — stencil-aware process-to-node
+mapping for Cartesian grids (Hunold et al., CS.DC 2020)."""
+from .cost import MappingCost, blocked_assignment, evaluate, node_of_rank_blocked
+from .grid import CartGrid, dims_create
+from .mapping import (MAPPERS, BlockedMapper, GraphGreedyMapper,
+                      HyperplaneMapper, KDTreeMapper, Mapper,
+                      MapperInapplicable, NodecartMapper, RandomMapper,
+                      StencilStripsMapper, get_mapper)
+from .remap import device_layout, layout_cost, mapped_device_array
+from .stencil import Stencil
+
+__all__ = [
+    "CartGrid", "dims_create", "Stencil", "MappingCost", "evaluate",
+    "blocked_assignment", "node_of_rank_blocked",
+    "Mapper", "MapperInapplicable", "MAPPERS", "get_mapper",
+    "BlockedMapper", "RandomMapper", "NodecartMapper", "HyperplaneMapper",
+    "KDTreeMapper", "StencilStripsMapper", "GraphGreedyMapper",
+    "device_layout", "layout_cost", "mapped_device_array",
+]

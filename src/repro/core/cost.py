@@ -1,0 +1,76 @@
+"""Mapping cost functions (paper §II, "Optimization Problem").
+
+``J_sum`` — total number of (directed) communication edges whose endpoints
+live on different compute nodes.  The paper's edge set ``E`` contains one
+edge per (rank, stencil offset) pair with a valid target, so a symmetric
+stencil contributes two directed edges per undirected neighbour pair; this
+matches the paper's accounting (each partition "outgoing edge" is counted at
+both endpoints, cf. the Q = 2|N| - 6 bound in Thm IV.3).
+
+``J_max`` — outgoing inter-node edge count of the bottleneck node.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .grid import CartGrid
+from .stencil import Stencil
+
+__all__ = ["MappingCost", "evaluate", "node_of_rank_blocked", "blocked_assignment"]
+
+
+@dataclass(frozen=True)
+class MappingCost:
+    j_sum: float
+    j_max: float
+    per_node: np.ndarray  # (N,) outgoing inter-node edge weight per node
+    bottleneck: int       # argmax node id
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"MappingCost(j_sum={self.j_sum}, j_max={self.j_max}, node={self.bottleneck})"
+
+
+def node_of_rank_blocked(node_sizes: Sequence[int]) -> np.ndarray:
+    """The scheduler's original allocation: ranks 0..n_0-1 on node 0, etc."""
+    sizes = np.asarray(node_sizes, dtype=np.int64)
+    if (sizes <= 0).any():
+        raise ValueError("node sizes must be positive")
+    return np.repeat(np.arange(len(sizes)), sizes)
+
+
+def blocked_assignment(grid: CartGrid, node_sizes: Sequence[int]) -> np.ndarray:
+    """node-of-grid-position for the identity (blocked) mapping."""
+    owner = node_of_rank_blocked(node_sizes)
+    if owner.shape[0] != grid.size:
+        raise ValueError(f"sum(node_sizes)={owner.shape[0]} != grid size {grid.size}")
+    return owner
+
+
+def evaluate(grid: CartGrid, stencil: Stencil, node_of_pos: np.ndarray,
+             num_nodes: Optional[int] = None, weighted: bool = False) -> MappingCost:
+    """Evaluate J_sum / J_max of a mapping.
+
+    Args:
+      node_of_pos: (p,) node id owning each *grid position* (row-major).
+      weighted: if True, use the stencil's per-offset byte weights instead of
+        unit edge weights.
+    """
+    node_of_pos = np.asarray(node_of_pos)
+    if node_of_pos.shape != (grid.size,):
+        raise ValueError(f"node_of_pos must have shape ({grid.size},)")
+    n_nodes = int(num_nodes if num_nodes is not None else node_of_pos.max() + 1)
+    per_node = np.zeros(n_nodes, dtype=np.float64)
+    total = 0.0
+    weights = stencil.weight_array() if weighted else np.ones(stencil.k)
+    for off, w in zip(stencil.offsets, weights):
+        valid, tgt = grid.shift_ranks(off)
+        src_nodes = node_of_pos
+        crossing = valid & (src_nodes != node_of_pos[tgt])
+        total += w * float(crossing.sum())
+        np.add.at(per_node, src_nodes[crossing], w)
+    bottleneck = int(per_node.argmax()) if n_nodes else 0
+    return MappingCost(j_sum=total, j_max=float(per_node.max(initial=0.0)),
+                       per_node=per_node, bottleneck=bottleneck)

@@ -1,0 +1,108 @@
+"""Cartesian process grids (paper §II).
+
+A :class:`CartGrid` is the virtual topology the application requests:
+``p`` processes arranged in a ``d``-dimensional grid with dimension sizes
+``dims``.  Ranks are assigned to grid positions in row-major order (the
+paper's w.l.o.g. convention), i.e. rank ``r`` sits at
+``np.unravel_index(r, dims)``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Iterable, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["CartGrid", "dims_create"]
+
+
+@dataclass(frozen=True)
+class CartGrid:
+    """A d-dimensional Cartesian grid of processes."""
+
+    dims: Tuple[int, ...]
+    periodic: Tuple[bool, ...] = field(default=None)  # type: ignore[assignment]
+
+    def __post_init__(self):
+        dims = tuple(int(d) for d in self.dims)
+        if not dims or any(d <= 0 for d in dims):
+            raise ValueError(f"grid dims must be positive, got {self.dims}")
+        object.__setattr__(self, "dims", dims)
+        per = self.periodic
+        if per is None:
+            per = (False,) * len(dims)
+        per = tuple(bool(x) for x in per)
+        if len(per) != len(dims):
+            raise ValueError("periodic must match dims rank")
+        object.__setattr__(self, "periodic", per)
+
+    # -- basic geometry ----------------------------------------------------
+    @property
+    def ndim(self) -> int:
+        return len(self.dims)
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.dims))
+
+    def coords(self) -> np.ndarray:
+        """(p, d) int array: row-major coordinates of every rank."""
+        idx = np.arange(self.size)
+        return np.stack(np.unravel_index(idx, self.dims), axis=1)
+
+    def rank_of(self, coord: Sequence[int]) -> int:
+        return int(np.ravel_multi_index(tuple(int(c) for c in coord), self.dims))
+
+    def coord_of(self, rank: int) -> Tuple[int, ...]:
+        if not 0 <= rank < self.size:
+            raise ValueError(f"rank {rank} out of range for grid of size {self.size}")
+        return tuple(int(c) for c in np.unravel_index(rank, self.dims))
+
+    # -- stencil neighbourhoods ---------------------------------------------
+    def shift_ranks(self, offset: Sequence[int]) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized neighbour lookup for one stencil offset.
+
+        Returns ``(valid_mask, target_rank)`` over all source ranks, applying
+        periodic wrap on axes marked periodic and truncating at the boundary
+        otherwise (MPI_PROC_NULL semantics).
+        """
+        c = self.coords()
+        t = c + np.asarray(offset, dtype=np.int64)[None, :]
+        valid = np.ones(self.size, dtype=bool)
+        for ax, (d, per) in enumerate(zip(self.dims, self.periodic)):
+            if per:
+                t[:, ax] %= d
+            else:
+                valid &= (t[:, ax] >= 0) & (t[:, ax] < d)
+        t = np.clip(t, 0, np.asarray(self.dims) - 1)
+        tr = np.ravel_multi_index(tuple(t.T), self.dims)
+        return valid, tr
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"CartGrid(dims={self.dims}, periodic={self.periodic})"
+
+
+def dims_create(p: int, ndims: int) -> Tuple[int, ...]:
+    """``MPI_Dims_create``-style decomposition: dimension sizes as close to
+    each other as possible, sorted in decreasing order (MPI 3.1 §7.5.2).
+
+    Deterministic balanced prime-factor assignment: repeatedly fold the
+    largest remaining prime factor into the currently smallest dimension.
+    """
+    if p <= 0 or ndims <= 0:
+        raise ValueError("p and ndims must be positive")
+    factors: list[int] = []
+    x = p
+    f = 2
+    while f * f <= x:
+        while x % f == 0:
+            factors.append(f)
+            x //= f
+        f += 1
+    if x > 1:
+        factors.append(x)
+    dims = [1] * ndims
+    for f in sorted(factors, reverse=True):
+        dims[int(np.argmin(dims))] *= f
+    return tuple(sorted(dims, reverse=True))

@@ -1,0 +1,39 @@
+"""Process-to-node mapping algorithms (paper §V + baselines §III)."""
+from __future__ import annotations
+
+from typing import Dict, Type
+
+from .base import Mapper, MapperInapplicable, aggregate_node_size, check_bijection
+from .blocked import BlockedMapper
+from .graphgreedy import GraphGreedyMapper
+from .hyperplane import HyperplaneMapper
+from .kdtree import KDTreeMapper
+from .nodecart import NodecartMapper
+from .random_map import RandomMapper
+from .stencil_strips import StencilStripsMapper
+
+MAPPERS: Dict[str, Type[Mapper]] = {
+    "blocked": BlockedMapper,
+    "random": RandomMapper,
+    "nodecart": NodecartMapper,
+    "hyperplane": HyperplaneMapper,
+    "kdtree": KDTreeMapper,
+    "stencil_strips": StencilStripsMapper,
+    "graphgreedy": GraphGreedyMapper,
+}
+
+
+def get_mapper(name: str, **kwargs) -> Mapper:
+    try:
+        cls = MAPPERS[name]
+    except KeyError:
+        raise KeyError(f"unknown mapper {name!r}; choose from {sorted(MAPPERS)}")
+    return cls(**kwargs)
+
+
+__all__ = [
+    "Mapper", "MapperInapplicable", "aggregate_node_size", "check_bijection",
+    "BlockedMapper", "RandomMapper", "NodecartMapper", "HyperplaneMapper",
+    "KDTreeMapper", "StencilStripsMapper", "GraphGreedyMapper",
+    "MAPPERS", "get_mapper",
+]

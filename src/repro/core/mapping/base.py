@@ -1,0 +1,90 @@
+"""Mapper interface (paper §V preamble).
+
+A mapper computes, for every rank ``r`` (process/device), its *new coordinate*
+in the Cartesian grid.  The scheduler's allocation is blocked — ranks
+``0..n_0-1`` live on node 0, the next ``n_1`` on node 1, ... — and must be
+respected, so the induced node-of-grid-position assignment is
+``node_of_pos[coord(r)] = blocked_node(r)``.
+
+The paper's algorithms are *fully distributed*: each rank can compute
+``coord_of_rank(dims, stencil, n, r)`` from the inputs alone.  We expose that
+per-rank form where the algorithm admits it, plus a batch ``coords()`` used
+for evaluation and mesh construction.
+"""
+from __future__ import annotations
+
+import abc
+import math
+from typing import Optional, Sequence
+
+import numpy as np
+
+from ..cost import MappingCost, evaluate, node_of_rank_blocked
+from ..grid import CartGrid
+from ..stencil import Stencil
+
+__all__ = ["Mapper", "MapperInapplicable", "aggregate_node_size", "check_bijection"]
+
+
+class MapperInapplicable(ValueError):
+    """Raised when an algorithm's preconditions don't hold (e.g. Nodecart
+    with heterogeneous node sizes or a non-factorizable layout)."""
+
+
+def aggregate_node_size(node_sizes: Sequence[int], mode: str = "mean") -> int:
+    """Heterogeneous-node handling (paper §V.A): collapse n_i to a single n."""
+    sizes = np.asarray(node_sizes, dtype=np.int64)
+    if mode == "mean":
+        return max(1, int(round(float(sizes.mean()))))
+    if mode == "min":
+        return int(sizes.min())
+    if mode == "max":
+        return int(sizes.max())
+    raise ValueError(f"unknown aggregate mode {mode!r}")
+
+
+def check_bijection(coords: np.ndarray, dims: Sequence[int]) -> None:
+    """Assert the rank->coordinate map is a bijection onto the grid."""
+    p = int(math.prod(dims))
+    if coords.shape != (p, len(dims)):
+        raise AssertionError(f"coords shape {coords.shape} != ({p}, {len(dims)})")
+    flat = np.ravel_multi_index(tuple(coords.T), tuple(dims))
+    if len(np.unique(flat)) != p:
+        raise AssertionError("rank->coordinate map is not a bijection")
+
+
+class Mapper(abc.ABC):
+    """Base class for process-to-node mapping algorithms."""
+
+    name: str = "base"
+    #: True if the algorithm needs a single homogeneous node size.
+    requires_homogeneous: bool = False
+
+    @abc.abstractmethod
+    def coords(self, grid: CartGrid, stencil: Stencil,
+               node_sizes: Sequence[int]) -> np.ndarray:
+        """(p, d) new coordinate for every rank."""
+
+    # -- derived ------------------------------------------------------------
+    def assignment(self, grid: CartGrid, stencil: Stencil,
+                   node_sizes: Sequence[int]) -> np.ndarray:
+        """(p,) node id owning each grid *position* (row-major raveled)."""
+        sizes = np.asarray(node_sizes, dtype=np.int64)
+        if int(sizes.sum()) != grid.size:
+            raise ValueError(
+                f"sum(node_sizes)={int(sizes.sum())} != grid size {grid.size}")
+        coords = self.coords(grid, stencil, node_sizes)
+        check_bijection(coords, grid.dims)
+        owner_of_rank = node_of_rank_blocked(node_sizes)
+        node_of_pos = np.empty(grid.size, dtype=np.int64)
+        flat = np.ravel_multi_index(tuple(coords.T), grid.dims)
+        node_of_pos[flat] = owner_of_rank
+        return node_of_pos
+
+    def cost(self, grid: CartGrid, stencil: Stencil, node_sizes: Sequence[int],
+             weighted: bool = False) -> MappingCost:
+        return evaluate(grid, stencil, self.assignment(grid, stencil, node_sizes),
+                        num_nodes=len(node_sizes), weighted=weighted)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"<Mapper {self.name}>"

@@ -1,0 +1,24 @@
+"""Blocked (identity) mapping — the MPI default the paper compares against."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from ..grid import CartGrid
+from ..stencil import Stencil
+from .base import Mapper
+
+__all__ = ["BlockedMapper"]
+
+
+class BlockedMapper(Mapper):
+    name = "blocked"
+
+    def coords(self, grid: CartGrid, stencil: Stencil,
+               node_sizes: Sequence[int]) -> np.ndarray:
+        return grid.coords()
+
+    @staticmethod
+    def coord_of_rank(dims, stencil, n, r):
+        return tuple(int(c) for c in np.unravel_index(r, tuple(dims)))

@@ -1,0 +1,147 @@
+"""Hyperplane algorithm (paper §V.A, Algorithm 1).
+
+Recursive bisection of the grid.  Each step cuts one dimension ``d_i`` into
+``d_i' + d_i''`` such that both induced sub-grid sizes are multiples of the
+node size ``n``.  The cut dimension is chosen by Eq. (2): the dimension most
+orthogonal to the stencil vectors (minimal sum of squared cosines), ties
+broken towards the *larger* dimension.  The hyperplane starts at the center
+of the candidate dimension and moves outward until a suitable split is found
+(Thm V.1 guarantees one exists when p = C*n; Thm V.2 bounds the imbalance by
+|g'|/|g''| >= 1/2).
+
+The recursion stops when the grid holds <= 2n vertices; the base case places
+ranks directly in "preferred dimension order" (most orthogonal dimension
+slowest-varying), which avoids degenerate cuts of skewed grids (the paper's
+[2, n] example).
+
+Fully distributed: ``coord_of_rank`` needs only (D, S, n, r) and runs in
+O(log N * sum_i d_i).
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..grid import CartGrid
+from ..stencil import Stencil
+from .base import Mapper, aggregate_node_size
+
+__all__ = ["HyperplaneMapper"]
+
+
+def _preference_order(dims: Sequence[int], cos2: np.ndarray) -> List[int]:
+    """Dimensions sorted by (ascending cos^2 sum, descending size, index)."""
+    return sorted(range(len(dims)), key=lambda i: (cos2[i], -dims[i], i))
+
+
+def _find_split(dims: Sequence[int], cos2: np.ndarray, n: int
+                ) -> Optional[Tuple[int, int]]:
+    """Return (dim index, left extent d') of the best suitable split.
+
+    Tries candidate dimensions in preference order; within a dimension,
+    positions from the center outward (left-biased so |g'| <= |g''|).
+    Suitable means both induced sizes are multiples of n.
+    """
+    total = math.prod(dims)
+    for i in _preference_order(dims, cos2):
+        d_i = dims[i]
+        if d_i < 2:
+            continue
+        rest = total // d_i
+        center = d_i // 2
+        for delta in range(0, d_i):
+            for h in (center - delta, center + delta):
+                if delta == 0 and h != center:
+                    continue
+                if 1 <= h <= d_i - 1 and (h * rest) % n == 0:
+                    return i, h
+    return None
+
+
+def _base_coordinate(dims: Sequence[int], cos2: np.ndarray, rank: int
+                     ) -> List[int]:
+    """Direct placement for grids <= 2n: mixed-radix decomposition of the
+    rank with the *preferred* dimension as the most significant digit."""
+    order = _preference_order(dims, cos2)
+    coord = [0] * len(dims)
+    rem = rank
+    for ax in reversed(order):
+        coord[ax] = rem % dims[ax]
+        rem //= dims[ax]
+    return coord
+
+
+class HyperplaneMapper(Mapper):
+    name = "hyperplane"
+
+    def __init__(self, aggregate: str = "mean", weighted: bool = False):
+        self.aggregate = aggregate
+        self.weighted = weighted  # byte-weighted Eq.(2) (beyond-paper)
+
+    @staticmethod
+    def coord_of_rank(dims: Sequence[int], stencil: Stencil, n: int, r: int
+                      ) -> Tuple[int, ...]:
+        cos2 = stencil.cos2_sums()
+        D = list(int(d) for d in dims)
+        origin = [0] * len(D)
+        rank = int(r)
+        while math.prod(D) > 2 * n:
+            split = _find_split(D, cos2, n)
+            if split is None:
+                # p not a multiple of n (heterogeneous input): fall back to a
+                # center cut of the most preferred splittable dimension.
+                i = next(j for j in _preference_order(D, cos2) if D[j] >= 2)
+                split = (i, D[i] // 2)
+            i, d_left = split
+            left_size = d_left * (math.prod(D) // D[i])
+            if rank < left_size:
+                D[i] = d_left
+            else:
+                rank -= left_size
+                origin[i] += d_left
+                D[i] = D[i] - d_left
+        base = _base_coordinate(D, cos2, rank)
+        return tuple(o + b for o, b in zip(origin, base))
+
+    def coords(self, grid: CartGrid, stencil: Stencil,
+               node_sizes: Sequence[int]) -> np.ndarray:
+        """Batch form: the recursion is identical for every rank inside a
+        sub-grid's rank range, so we traverse the bisection tree once
+        (O(N) nodes) and fill base-case ranges vectorized — orders of
+        magnitude faster than per-rank recursion, bit-identical to it."""
+        n = aggregate_node_size(node_sizes, self.aggregate)
+        cos2 = stencil.cos2_sums(weighted=self.weighted)
+        out = np.empty((grid.size, grid.ndim), dtype=np.int64)
+        base_cache: dict = {}  # leaf dims repeat; memoize their templates
+        stack = [(list(grid.dims), [0] * grid.ndim, 0, grid.size)]
+        while stack:
+            D, origin, lo, hi = stack.pop()
+            if math.prod(D) <= 2 * n:
+                key = tuple(D)
+                coords = base_cache.get(key)
+                if coords is None:
+                    order = _preference_order(D, cos2)
+                    rem = np.arange(hi - lo)
+                    coords = np.empty((hi - lo, len(D)), dtype=np.int64)
+                    for ax in reversed(order):
+                        coords[:, ax] = rem % D[ax]
+                        rem //= D[ax]
+                    base_cache[key] = coords
+                out[lo:hi] = coords + np.asarray(origin)[None, :]
+                continue
+            split = _find_split(D, cos2, n)
+            if split is None:
+                i = next(j for j in _preference_order(D, cos2) if D[j] >= 2)
+                split = (i, D[i] // 2)
+            i, d_left = split
+            left_size = d_left * (math.prod(D) // D[i])
+            Dl, Dr = list(D), list(D)
+            Dl[i] = d_left
+            Dr[i] = D[i] - d_left
+            origin_r = list(origin)
+            origin_r[i] += d_left
+            stack.append((Dl, list(origin), lo, lo + left_size))
+            stack.append((Dr, origin_r, lo + left_size, hi))
+        return out

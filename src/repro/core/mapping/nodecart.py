@@ -1,0 +1,104 @@
+"""Nodecart — Gropp's node-aware Cartesian mapping (paper §III, [9]).
+
+Decomposes the grid dimensions into a node grid and a within-node block via a
+prime factorization of the (homogeneous) node size ``n``: find per-dimension
+block extents ``c_i`` with ``prod(c) = n`` and ``c_i | d_i``; rank ``r`` is
+then placed at ``node_coord * c + local_coord``.
+
+Among all feasible factor assignments we pick the block minimizing its
+surface area ``sum_i n / c_i`` (fewest inter-node faces for the implied
+nearest-neighbor stencil — Nodecart is stencil-oblivious, which is exactly
+the weakness the paper's algorithms address).
+
+Raises :class:`MapperInapplicable` when node sizes are heterogeneous, when
+``n`` does not divide ``p``, or when no divisibility-respecting factor
+assignment exists.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence, Tuple
+
+import numpy as np
+
+from ..grid import CartGrid
+from ..stencil import Stencil
+from .base import Mapper, MapperInapplicable
+
+__all__ = ["NodecartMapper", "prime_factors", "find_block_dims"]
+
+
+def prime_factors(n: int) -> list[int]:
+    out = []
+    f = 2
+    while f * f <= n:
+        while n % f == 0:
+            out.append(f)
+            n //= f
+        f += 1
+    if n > 1:
+        out.append(n)
+    return out
+
+
+def find_block_dims(dims: Sequence[int], n: int) -> Tuple[int, ...]:
+    """Exhaustive (tiny) search over prime->dimension assignments."""
+    dims = tuple(int(d) for d in dims)
+    primes = sorted(prime_factors(n), reverse=True)
+    best: Tuple[float, Tuple[int, ...]] | None = None
+
+    def rec(idx: int, c: list[int]):
+        nonlocal best
+        if idx == len(primes):
+            surface = sum(n // ci for ci in c)
+            key = (surface, tuple(-x for x in sorted(c)))  # deterministic tie-break
+            if best is None or key < best[0]:
+                best = (key, tuple(c))
+            return
+        f = primes[idx]
+        tried = set()
+        for i in range(len(dims)):
+            nc = c[i] * f
+            if dims[i] % nc != 0 or nc in tried:
+                continue
+            tried.add(nc)
+            c[i] = nc
+            rec(idx + 1, c)
+            c[i] //= f
+
+    rec(0, [1] * len(dims))
+    if best is None:
+        raise MapperInapplicable(
+            f"Nodecart: no factorization of n={n} divides dims={dims}")
+    return best[1]
+
+
+class NodecartMapper(Mapper):
+    name = "nodecart"
+    requires_homogeneous = True
+
+    def coords(self, grid: CartGrid, stencil: Stencil,
+               node_sizes: Sequence[int]) -> np.ndarray:
+        sizes = np.asarray(node_sizes, dtype=np.int64)
+        if len(np.unique(sizes)) != 1:
+            raise MapperInapplicable("Nodecart requires homogeneous node sizes")
+        n = int(sizes[0])
+        p = grid.size
+        if p % n != 0:
+            raise MapperInapplicable(f"Nodecart: n={n} does not divide p={p}")
+        c = np.asarray(find_block_dims(grid.dims, n), dtype=np.int64)
+        node_grid = np.asarray(grid.dims, dtype=np.int64) // c
+        r = np.arange(p)
+        node_id, local = r // n, r % n
+        node_coord = np.stack(np.unravel_index(node_id, tuple(node_grid)), axis=1)
+        local_coord = np.stack(np.unravel_index(local, tuple(c)), axis=1)
+        return node_coord * c[None, :] + local_coord
+
+    @staticmethod
+    def coord_of_rank(dims, stencil, n, r) -> Tuple[int, ...]:
+        c = find_block_dims(dims, n)
+        node_grid = tuple(d // ci for d, ci in zip(dims, c))
+        node_coord = np.unravel_index(r // n, node_grid)
+        local_coord = np.unravel_index(r % n, c)
+        return tuple(int(nc * ci + lc) for nc, ci, lc in
+                     zip(node_coord, c, local_coord))

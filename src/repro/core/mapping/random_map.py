@@ -1,0 +1,25 @@
+"""Random mapping baseline (paper §VI, "Random" column of Tables II-VII)."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from ..grid import CartGrid
+from ..stencil import Stencil
+from .base import Mapper
+
+__all__ = ["RandomMapper"]
+
+
+class RandomMapper(Mapper):
+    name = "random"
+
+    def __init__(self, seed: int = 0):
+        self.seed = int(seed)
+
+    def coords(self, grid: CartGrid, stencil: Stencil,
+               node_sizes: Sequence[int]) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        perm = rng.permutation(grid.size)
+        return np.stack(np.unravel_index(perm, grid.dims), axis=1)

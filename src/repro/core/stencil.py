@@ -1,0 +1,151 @@
+"""k-neighborhood stencils (paper §II, "Target Stencils").
+
+A stencil is a list of relative coordinate vectors
+``S = {R_0 .. R_{k-1}}``; process at grid coordinate ``c`` communicates with
+``c + R_i`` for every ``i``.  We extend the paper's unit-weight edges with an
+optional per-offset byte weight (used by the mesh builder to encode how much
+traffic each mesh axis carries; weight 1.0 everywhere reproduces the paper).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["Stencil"]
+
+
+def _unit(d: int, i: int, a: int = 1) -> Tuple[int, ...]:
+    v = [0] * d
+    v[i] = a
+    return tuple(v)
+
+
+@dataclass(frozen=True)
+class Stencil:
+    """A k-neighborhood: offsets (k, d) plus optional per-offset weights."""
+
+    offsets: Tuple[Tuple[int, ...], ...]
+    weights: Tuple[float, ...] = None  # type: ignore[assignment]
+    name: str = "custom"
+
+    def __post_init__(self):
+        offs = tuple(tuple(int(x) for x in o) for o in self.offsets)
+        if not offs:
+            raise ValueError("stencil must have at least one offset")
+        d = len(offs[0])
+        if any(len(o) != d for o in offs):
+            raise ValueError("all offsets must have the same rank")
+        if any(all(x == 0 for x in o) for o in offs):
+            raise ValueError("zero offset (self-communication) not allowed")
+        if len(set(offs)) != len(offs):
+            raise ValueError(f"duplicate offsets in stencil: {offs}")
+        object.__setattr__(self, "offsets", offs)
+        w = self.weights
+        if w is None:
+            w = (1.0,) * len(offs)
+        w = tuple(float(x) for x in w)
+        if len(w) != len(offs) or any(x <= 0 for x in w):
+            raise ValueError("weights must be positive, one per offset")
+        object.__setattr__(self, "weights", w)
+
+    # -- constructors for the paper's three stencils ------------------------
+    @staticmethod
+    def nearest_neighbor(d: int) -> "Stencil":
+        """(a): S = {±1_i | 0 <= i < d}."""
+        offs = [_unit(d, i, s) for i in range(d) for s in (+1, -1)]
+        return Stencil(tuple(offs), name="nearest_neighbor")
+
+    @staticmethod
+    def component(d: int, axes: Sequence[int] | None = None) -> "Stencil":
+        """(b): S = {±1_i | 0 <= i < d-1} (or explicit ``axes``)."""
+        if axes is None:
+            axes = range(d - 1) if d > 1 else range(d)
+        offs = [_unit(d, i, s) for i in axes for s in (+1, -1)]
+        return Stencil(tuple(offs), name="component")
+
+    @staticmethod
+    def nn_with_hops(d: int, hops: Sequence[int] = (2, 3), axis: int = 0) -> "Stencil":
+        """(c): nearest neighbor plus ±a·1_axis for a in hops."""
+        offs = [_unit(d, i, s) for i in range(d) for s in (+1, -1)]
+        offs += [_unit(d, axis, s * a) for a in hops for s in (+1, -1)]
+        return Stencil(tuple(offs), name="nn_with_hops")
+
+    @staticmethod
+    def from_flat(flat: Sequence[int], ndims: int, k: int,
+                  weights: Sequence[float] | None = None) -> "Stencil":
+        """The paper's ``MPIX_Cart_stencil_comm`` interface: ``stencil[]`` is a
+        flattened list of k relative offsets of length ndims each."""
+        flat = list(flat)
+        if len(flat) != ndims * k:
+            raise ValueError(f"flat stencil length {len(flat)} != ndims*k = {ndims * k}")
+        offs = tuple(tuple(flat[i * ndims:(i + 1) * ndims]) for i in range(k))
+        return Stencil(offs, tuple(weights) if weights is not None else None,
+                       name="flat")
+
+    # -- derived quantities used by the algorithms --------------------------
+    @property
+    def k(self) -> int:
+        return len(self.offsets)
+
+    @property
+    def ndim(self) -> int:
+        return len(self.offsets[0])
+
+    def array(self) -> np.ndarray:
+        return np.asarray(self.offsets, dtype=np.int64)
+
+    def weight_array(self) -> np.ndarray:
+        return np.asarray(self.weights, dtype=np.float64)
+
+    def cos2_sums(self, weighted: bool = False) -> np.ndarray:
+        """Eq. (2): per-dimension sum over offsets of cos^2(angle(R, e_j)).
+
+        Low value == dimension most orthogonal to the stencil == preferred
+        cut dimension for the Hyperplane algorithm.
+
+        ``weighted=True`` is our beyond-paper extension: each offset's
+        contribution is scaled by its byte weight, so a cut avoids the
+        *heaviest* traffic, not just the most edges (needed when mesh axes
+        carry asymmetric collective volumes — TP bytes >> DP bytes).
+        """
+        R = self.array().astype(np.float64)
+        norms2 = np.sum(R * R, axis=1)
+        w = self.weight_array() if weighted else np.ones(self.k)
+        w = w / w.mean()
+        # cos^2(R, e_j) = R_j^2 / |R|^2  (|e_j| = 1)
+        return np.sum(w[:, None] * (R * R) / norms2[:, None], axis=0)
+
+    def axis_comm_counts(self, weighted: bool = False) -> np.ndarray:
+        """k-d tree's f_j = |{R in S : R_j != 0}| per dimension
+        (``weighted=True``: sum of byte weights instead of the count)."""
+        nz = self.array() != 0
+        if weighted:
+            return (nz * self.weight_array()[:, None]).sum(axis=0)
+        return np.count_nonzero(nz, axis=0).astype(np.int64)
+
+    def extents(self) -> np.ndarray:
+        """Stencil Strips' e_i = max R_i - min R_i per dimension."""
+        R = self.array()
+        return (R.max(axis=0) - R.min(axis=0)).astype(np.int64)
+
+    def distortion_factors(self) -> np.ndarray:
+        """Stencil Strips' alpha_i = e_i / V_b^(1/d_b) (paper §V.C).
+
+        V_b uses eps_i = max(e_i, 1); the numerator keeps the paper's raw
+        e_i, so dimensions with no communication get alpha_i = 0 — their
+        strip length clamps to 1 (thinnest strips across silent dimensions),
+        which is what makes Stencil Strips optimal on the component stencil
+        (paper §VI.D).
+        """
+        e = self.extents().astype(np.float64)
+        eps = np.where(e == 0, 1.0, e)
+        d_b = int(np.count_nonzero(e))
+        if d_b == 0:
+            return np.ones_like(eps)
+        v_b = float(np.prod(eps))
+        return e / (v_b ** (1.0 / d_b))
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"Stencil({self.name}, k={self.k}, d={self.ndim})"

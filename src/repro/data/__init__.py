@@ -1,0 +1,3 @@
+from .synthetic import DataConfig, batch_spec, global_batches, host_batch
+
+__all__ = ["DataConfig", "batch_spec", "global_batches", "host_batch"]

@@ -1,0 +1,36 @@
+"""jit'd wrapper: GQA-aware flash attention entry point."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .flash import flash_attention_pallas
+from .ref import attention_ref
+
+__all__ = ["flash_attention", "attention_ref"]
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "use_pallas",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    use_pallas: bool = True, interpret: bool = None):
+    """q: (B, Sq, H, d); k/v: (B, Sk, K, d) with H = K*G (GQA broadcast
+    handled here). Returns (B, Sq, H, d)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, Sq, H, d = q.shape
+    K = k.shape[2]
+    G = H // K
+    kb = jnp.repeat(k, G, axis=2)
+    vb = jnp.repeat(v, G, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, d)
+    kf = kb.transpose(0, 2, 1, 3).reshape(B * H, -1, d)
+    vf = vb.transpose(0, 2, 1, 3).reshape(B * H, -1, d)
+    if use_pallas:
+        out = flash_attention_pallas(qf, kf, vf, causal=causal, window=window,
+                                     interpret=interpret)
+    else:
+        out = attention_ref(qf, kf, vf, causal=causal, window=window)
+    return out.reshape(B, H, Sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,21 @@
+"""jit'd wrapper for the fused RMSNorm kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .ref import rmsnorm_ref
+from .rmsnorm import rmsnorm_pallas
+
+__all__ = ["rmsnorm", "rmsnorm_ref"]
+
+
+@partial(jax.jit, static_argnames=("eps", "use_pallas", "interpret"))
+def rmsnorm(x, w, eps: float = 1e-6, use_pallas: bool = True,
+            interpret: bool = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if use_pallas:
+        return rmsnorm_pallas(x, w, eps, interpret=interpret)
+    return rmsnorm_ref(x, w, eps)

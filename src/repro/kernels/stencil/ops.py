@@ -1,0 +1,30 @@
+"""jit'd public wrapper for the stencil kernel: picks Pallas on TPU,
+interpret mode elsewhere (CPU validation), oracle available for testing."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .ref import stencil_ref
+from .stencil import stencil_pallas
+
+__all__ = ["stencil_apply", "stencil_ref"]
+
+
+@partial(jax.jit, static_argnames=("offsets", "weights", "halo", "use_pallas",
+                                   "interpret"))
+def stencil_apply(u_halo: jnp.ndarray,
+                  offsets: Tuple[Tuple[int, int], ...],
+                  weights: Tuple[float, ...],
+                  halo: int,
+                  use_pallas: bool = True,
+                  interpret: bool = None) -> jnp.ndarray:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if use_pallas:
+        return stencil_pallas(u_halo, offsets, weights, halo,
+                              interpret=interpret)
+    return stencil_ref(u_halo, offsets, weights, halo)

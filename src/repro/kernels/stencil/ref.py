@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the stencil kernel."""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["stencil_ref", "stencil3d_ref"]
+
+
+def stencil_ref(u_halo: jnp.ndarray, offsets: Sequence[Tuple[int, int]],
+                weights: Sequence[float], halo: int) -> jnp.ndarray:
+    H = u_halo.shape[0] - 2 * halo
+    W = u_halo.shape[1] - 2 * halo
+    acc = jnp.zeros((H, W), jnp.float32)
+    for (dy, dx), w in zip(offsets, weights):
+        win = u_halo[halo + dy:halo + dy + H, halo + dx:halo + dx + W]
+        acc = acc + win.astype(jnp.float32) * jnp.float32(w)
+    return acc.astype(u_halo.dtype)
+
+
+def stencil3d_ref(u_halo, offsets, weights, halo: int):
+    D = u_halo.shape[0] - 2 * halo
+    H = u_halo.shape[1] - 2 * halo
+    W = u_halo.shape[2] - 2 * halo
+    acc = jnp.zeros((D, H, W), jnp.float32)
+    for (dz, dy, dx), w in zip(offsets, weights):
+        win = u_halo[halo + dz:halo + dz + D, halo + dy:halo + dy + H,
+                     halo + dx:halo + dx + W]
+        acc = acc + win.astype(jnp.float32) * jnp.float32(w)
+    return acc.astype(u_halo.dtype)

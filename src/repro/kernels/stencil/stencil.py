@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: k-neighborhood stencil apply (the paper's compute).
+
+Computes ``out[i,j] = sum_k w_k * u[i + R_k0, j + R_k1]`` over a 2-d local
+shard with an attached halo of width ``h`` (the halo is what the mapped
+``MPI_Neighbor_alltoall`` analog exchanges; see examples/stencil_jacobi.py).
+
+TPU adaptation (DESIGN.md): the CUDA-style version threads one point per
+thread; on TPU we tile the *output* over a 1-d grid of row panels sized to
+the VPU lanes (multiples of 8x128) and keep the haloed input resident in
+VMEM, reading k statically-shifted windows per tile.  Input residency in
+VMEM bounds the shard size (~VMEM/4 elements); the production variant would
+stream row panels with ``pl.Element`` indexing — recorded as a §Perf note.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["stencil_kernel", "stencil_pallas", "stencil3d_kernel", "stencil3d_pallas"]
+
+
+def stencil_kernel(u_ref, out_ref, *, offsets, weights, halo, tile_rows):
+    """One grid step: compute a (tile_rows, W) output panel."""
+    i = pl.program_id(0)
+    r0 = i * tile_rows
+    acc = None
+    for (dy, dx), w in zip(offsets, weights):
+        win = u_ref[pl.dslice(r0 + halo + dy, tile_rows),
+                    pl.dslice(halo + dx, out_ref.shape[1])]
+        term = win.astype(jnp.float32) * jnp.float32(w)
+        acc = term if acc is None else acc + term
+    out_ref[pl.dslice(r0, tile_rows), :] = acc.astype(out_ref.dtype)
+
+
+def stencil_pallas(u_halo: jnp.ndarray, offsets: Sequence[Tuple[int, int]],
+                   weights: Sequence[float], halo: int,
+                   tile_rows: int = 8, interpret: bool = False) -> jnp.ndarray:
+    """u_halo: (H + 2*halo, W + 2*halo) -> out: (H, W)."""
+    H = u_halo.shape[0] - 2 * halo
+    W = u_halo.shape[1] - 2 * halo
+    if H % tile_rows:
+        tile_rows = 1
+    grid = (H // tile_rows,)
+    kern = functools.partial(stencil_kernel, offsets=tuple(map(tuple, offsets)),
+                             weights=tuple(float(w) for w in weights),
+                             halo=halo, tile_rows=tile_rows)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec(u_halo.shape, lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((H, W), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, W), u_halo.dtype),
+        interpret=interpret,
+    )(u_halo)
+
+
+def stencil3d_kernel(u_ref, out_ref, *, offsets, weights, halo, tile_z):
+    """3-d variant: grid over z-slabs; each step reads the (tile_z + 2h)
+    slab window and k statically-shifted (H, W) windows per z offset."""
+    i = pl.program_id(0)
+    z0 = i * tile_z
+    H, W = out_ref.shape[1], out_ref.shape[2]
+    acc = None
+    for (dz, dy, dx), w in zip(offsets, weights):
+        win = u_ref[pl.dslice(z0 + halo + dz, tile_z),
+                    pl.dslice(halo + dy, H),
+                    pl.dslice(halo + dx, W)]
+        term = win.astype(jnp.float32) * jnp.float32(w)
+        acc = term if acc is None else acc + term
+    out_ref[pl.dslice(z0, tile_z), :, :] = acc.astype(out_ref.dtype)
+
+
+def stencil3d_pallas(u_halo: jnp.ndarray, offsets, weights, halo: int,
+                     tile_z: int = 4, interpret: bool = False) -> jnp.ndarray:
+    """u_halo: (D+2h, H+2h, W+2h) -> out: (D, H, W)."""
+    D = u_halo.shape[0] - 2 * halo
+    H = u_halo.shape[1] - 2 * halo
+    W = u_halo.shape[2] - 2 * halo
+    if D % tile_z:
+        tile_z = 1
+    kern = functools.partial(stencil3d_kernel,
+                             offsets=tuple(map(tuple, offsets)),
+                             weights=tuple(float(w) for w in weights),
+                             halo=halo, tile_z=tile_z)
+    return pl.pallas_call(
+        kern,
+        grid=(D // tile_z,),
+        in_specs=[pl.BlockSpec(u_halo.shape, lambda i: (0, 0, 0))],
+        out_specs=pl.BlockSpec((D, H, W), lambda i: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((D, H, W), u_halo.dtype),
+        interpret=interpret,
+    )(u_halo)

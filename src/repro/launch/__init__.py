@@ -1,0 +1,6 @@
+from .input_specs import CellSpec, build_cell
+from .mesh import (machine_for, make_mapped_mesh, make_production_mesh,
+                   mesh_axes, stencil_for_plan)
+
+__all__ = ["CellSpec", "build_cell", "machine_for", "make_mapped_mesh",
+           "make_production_mesh", "mesh_axes", "stencil_for_plan"]

@@ -1,0 +1,169 @@
+"""Allocation-free input specs + shardings for every (arch × shape) cell.
+
+``build_cell`` returns everything the dry-run needs to lower a cell:
+the step function, ShapeDtypeStruct arguments, and in/out shardings —
+without allocating a single device buffer (the assignment's requirement:
+full configs exist only as ShapeDtypeStructs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeSpec
+from ..data.synthetic import batch_spec
+from ..models import lm
+from ..models.common import param_shardings, param_structs
+from ..optim.adamw import AdamWConfig, opt_state_specs
+from ..runtime.steps import make_decode_step, make_prefill_step, make_train_step
+from ..sharding.partition import Partitioning, use_partitioning
+
+__all__ = ["CellSpec", "build_cell", "batch_shardings", "cache_shardings"]
+
+
+@dataclass
+class CellSpec:
+    arch: str
+    shape: str
+    kind: str
+    step_fn: Callable
+    args: Tuple
+    in_shardings: Tuple
+    out_shardings: Any
+    partitioning: Partitioning
+    model_flops: float
+    model_flops_full: float = 0.0
+    donate_argnums: Tuple[int, ...] = ()
+
+
+def batch_shardings(cfg: ArchConfig, shape: ShapeSpec, part: Partitioning
+                    ) -> Dict[str, NamedSharding]:
+    out = {}
+    for name, (shp, _) in batch_spec(cfg, shape).items():
+        logical = ("batch",) + (None,) * (len(shp) - 1)
+        out[name] = part.sharding(logical, shp)
+    return out
+
+
+def batch_structs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {name: jax.ShapeDtypeStruct(shp, dt)
+            for name, (shp, dt) in batch_spec(cfg, shape).items()}
+
+
+def cache_shardings(cfg: ArchConfig, caches_struct, shape: ShapeSpec,
+                    max_len: int, part: Partitioning):
+    """Value-matched specs: dims equal to the global batch shard over
+    ("pod","data"); dims equal to the KV allocation length (max_len, or the
+    SWA window for ring caches) shard over "model" (flash-decoding style
+    length sharding)."""
+    B = shape.global_batch
+    kv_lens = {max_len}
+    if cfg.swa_ring_cache and cfg.sliding_window:
+        kv_lens.add(min(max_len, cfg.sliding_window))
+
+    def leaf_spec(leaf):
+        logical = []
+        seen_batch = False
+        for dim in leaf.shape:
+            if dim == B and not seen_batch:
+                logical.append("batch")
+                seen_batch = True
+            elif dim in kv_lens:
+                logical.append("seq_kv")
+            else:
+                logical.append(None)
+        return part.sharding(tuple(logical), leaf.shape)
+
+    return jax.tree.map(leaf_spec, caches_struct)
+
+
+def _partitioning(mesh: Mesh) -> Partitioning:
+    part = Partitioning(mesh=mesh)
+    # KV-length sharding rule used by the decode cells
+    part.rules["seq_kv"] = ("model",)
+    return part
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+               opt_cfg: Optional[AdamWConfig] = None,
+               moe_dispatch: str = "einsum") -> CellSpec:
+    import dataclasses
+    part = _partitioning(mesh)
+    opt_cfg = opt_cfg or AdamWConfig(quantized=cfg.quantized_opt_state)
+    # each microbatch must still cover every batch shard: cap microbatches
+    # at global_batch / n_batch_shards (internvl's mb=16 on the 32-wide
+    # multi-pod batch axis would otherwise leave shards empty -> replication)
+    bshards = 1
+    for ax in ("pod", "data"):
+        bshards *= mesh.shape.get(ax, 1)
+    eff_mb = max(1, min(cfg.microbatches, shape.global_batch // max(bshards, 1)))
+    if eff_mb != cfg.microbatches:
+        cfg = dataclasses.replace(cfg, microbatches=eff_mb)
+    specs = lm.param_specs(cfg)
+    with use_partitioning(part):
+        p_structs = param_structs(specs)
+        p_shard = param_shardings(specs, part)
+
+        if shape.kind == "train":
+            o_specs = opt_state_specs(specs, opt_cfg)
+            o_structs = param_structs(o_specs)
+            o_shard = param_shardings(o_specs, part)
+            b_structs = batch_structs(cfg, shape)
+            b_shard = batch_shardings(cfg, shape, part)
+            step = make_train_step(cfg, opt_cfg, moe_dispatch=moe_dispatch)
+            return CellSpec(
+                arch=cfg.name, shape=shape.name, kind="train",
+                step_fn=step,
+                args=(p_structs, o_structs, b_structs),
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None),
+                partitioning=part,
+                model_flops=cfg.model_flops(shape),
+                model_flops_full=cfg.model_flops(shape) + cfg.attn_flops(shape),
+                donate_argnums=(0, 1))
+
+        B = shape.global_batch
+        # VLM prepends patch embeddings: the cache must hold them too
+        max_len = shape.seq_len + cfg.num_patches
+        if shape.kind == "prefill":
+            caches_struct = jax.eval_shape(
+                lambda: lm.init_caches(cfg, B, max_len))
+            c_shard = cache_shardings(cfg, caches_struct, shape, max_len, part)
+            # prompt occupies the sequence; batch of prompts
+            b_structs = batch_structs(cfg, shape)
+            b_shard = batch_shardings(cfg, shape, part)
+            step = make_prefill_step(cfg, moe_dispatch=moe_dispatch)
+            return CellSpec(
+                arch=cfg.name, shape=shape.name, kind="prefill",
+                step_fn=step,
+                args=(p_structs, b_structs, caches_struct),
+                in_shardings=(p_shard, b_shard, c_shard),
+                out_shardings=None,
+                partitioning=part,
+                model_flops=cfg.model_flops(shape),
+                model_flops_full=cfg.model_flops(shape) + cfg.attn_flops(shape),
+                donate_argnums=(2,))
+
+        # decode: one new token against a seq_len KV cache
+        caches_struct = jax.eval_shape(lambda: lm.init_caches(cfg, B, max_len))
+        c_shard = cache_shardings(cfg, caches_struct, shape, max_len, part)
+        tok_struct = jax.ShapeDtypeStruct((B,), np.int32)
+        tok_shard = part.sharding(("batch",), (B,))
+        pos_struct = jax.ShapeDtypeStruct((), np.int32)
+        pos_shard = part.sharding((), ())
+        step = make_decode_step(cfg, moe_dispatch=moe_dispatch)
+        return CellSpec(
+            arch=cfg.name, shape=shape.name, kind="decode",
+            step_fn=step,
+            args=(p_structs, caches_struct, tok_struct, pos_struct),
+            in_shardings=(p_shard, c_shard, tok_shard, pos_shard),
+            out_shardings=(None, c_shard),
+            partitioning=part,
+            model_flops=cfg.model_flops(shape),
+            model_flops_full=cfg.model_flops(shape) + cfg.attn_flops(shape),
+            donate_argnums=(1,))

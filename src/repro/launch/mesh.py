@@ -1,0 +1,97 @@
+"""Mesh construction — where the paper's technique becomes a JAX feature.
+
+``make_production_mesh`` builds the assignment's fixed meshes; the
+topology-aware variant ``make_mapped_mesh`` permutes the device ndarray with
+one of the paper's mapping algorithms so that logical mesh coordinates that
+exchange the most bytes land on the same pod / adjacent ICI links (the
+``MPI_Cart_create(reorder=1)`` analog, DESIGN.md §2).
+
+``stencil_for_plan`` derives the byte-weighted communication stencil of a
+training/serving step from the architecture + parallelism plan:
+  * data axis  — FSDP param all-gather + grad reduce-scatter: ring traffic =
+    periodic ±1 stencil along "data" (and "pod" when the batch spans pods);
+  * model axis — TP activation collectives + (MoE) expert all-to-all:
+    periodic ±1 along "model", weight = per-step bytes.
+All functions are allocation-free (a Mesh of ShapeDtypeStruct-only usage).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from ..configs.base import ArchConfig, ShapeSpec
+from ..core import Stencil, get_mapper, mapped_device_array
+from ..topology.machine import MachineSpec, V5E_2POD, V5E_POD
+
+__all__ = ["make_production_mesh", "make_mapped_mesh", "stencil_for_plan",
+           "machine_for", "mesh_axes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_axes(multi_pod: bool) -> Tuple[str, ...]:
+    return ("pod", "data", "model") if multi_pod else ("data", "model")
+
+
+def machine_for(multi_pod: bool) -> MachineSpec:
+    return V5E_2POD if multi_pod else V5E_POD
+
+
+def stencil_for_plan(cfg: ArchConfig, shape: ShapeSpec,
+                     multi_pod: bool = False) -> Stencil:
+    """Byte-weighted ring stencil over the mesh grid for this (arch, shape)."""
+    axes = mesh_axes(multi_pod)
+    d = len(axes)
+    param_bytes = cfg.param_count() * 2  # bf16
+    if shape.kind == "train":
+        dp_bytes = 3.0 * param_bytes       # fsdp all-gather + reduce-scatter
+    else:
+        dp_bytes = 0.25 * param_bytes      # weight gathers only
+    act = shape.global_batch * min(shape.seq_len, 8192) * cfg.d_model * 2
+    tp_bytes = 2.0 * cfg.n_layers * act    # per-layer activation collectives
+    if cfg.n_experts:
+        tp_bytes += 2.0 * cfg.n_layers * act * min(cfg.top_k, 4)  # EP a2a
+
+    offsets, weights = [], []
+    for ax_i, ax in enumerate(axes):
+        w = dp_bytes if ax in ("pod", "data") else tp_bytes
+        if w <= 0:
+            continue
+        for s in (+1, -1):
+            v = [0] * d
+            v[ax_i] = s
+            offsets.append(tuple(v))
+            weights.append(w)
+    return Stencil(tuple(offsets), tuple(weights), name=f"plan-{cfg.name}")
+
+
+def make_mapped_mesh(mapper_name: str, *, multi_pod: bool = False,
+                     cfg: Optional[ArchConfig] = None,
+                     shape: Optional[ShapeSpec] = None,
+                     stencil: Optional[Stencil] = None,
+                     devices: Optional[Sequence] = None) -> Mesh:
+    """Production mesh with a paper-algorithm device permutation."""
+    mesh_shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = mesh_axes(multi_pod)
+    machine = machine_for(multi_pod)
+    if stencil is None:
+        if cfg is None or shape is None:
+            stencil = Stencil.nearest_neighbor(len(mesh_shape))
+        else:
+            stencil = stencil_for_plan(cfg, shape, multi_pod)
+    devs = list(devices) if devices is not None else list(jax.devices())
+    if len(devs) != math.prod(mesh_shape):
+        raise ValueError(f"need {math.prod(mesh_shape)} devices, "
+                         f"have {len(devs)} (dry-run sets XLA_FLAGS)")
+    arr = mapped_device_array(devs, get_mapper(mapper_name), mesh_shape,
+                              stencil, machine.chips_per_pod)
+    return Mesh(arr, axes)

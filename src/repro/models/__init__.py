@@ -1,0 +1,3 @@
+from . import attention, common, lm, moe, ssm, transformer
+
+__all__ = ["attention", "common", "lm", "moe", "ssm", "transformer"]

@@ -1,0 +1,349 @@
+"""Attention variants: GQA/MHA/MQA (+ qk-norm, sliding window), blocked
+flash-style attention for long prefill, KV caches for decode, and DeepSeek
+MLA with the absorbed decode path.
+
+Layout conventions:
+  activations: (batch, seq, d_model)
+  q/k/v:       (batch, seq, heads, head_dim)
+  GQA grouping: q heads reshaped to (kv_heads, group) for shared-KV einsums.
+
+KV cache: slots carry an explicit absolute-position array ``pos`` so the
+same code path serves both the dense cache (slot i holds position i) and the
+**ring cache** for sliding-window attention (slot = position mod window —
+the beyond-paper long-context optimization; cfg.swa_ring_cache): masking is
+always computed from stored positions, never from slot indices.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding.partition import ParamSpec, shard
+from .common import apply_rope, rmsnorm
+
+__all__ = ["attn_specs", "attn_apply", "init_kv_cache", "mla_specs",
+           "mla_apply", "init_mla_cache", "KVCache", "MLACache"]
+
+NEG_INF = -1e30
+EMPTY_POS = -(2 ** 30)
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray       # (B, S_alloc, K, hd)
+    v: jnp.ndarray       # (B, S_alloc, K, hd)
+    pos: jnp.ndarray     # (S_alloc,) absolute position per slot (EMPTY_POS = empty)
+    length: jnp.ndarray  # () tokens seen so far
+
+
+class MLACache(NamedTuple):
+    c_kv: jnp.ndarray    # (B, S_max, kv_lora)
+    k_rope: jnp.ndarray  # (B, S_max, rope_dim)
+    length: jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# masks / softmax helpers
+def _mask(pos_q, pos_k, causal: bool, window: Optional[int], valid_k=None):
+    m = jnp.ones((pos_q.shape[-1], pos_k.shape[-1]), bool)
+    if causal:
+        m &= pos_q[:, None] >= pos_k[None, :]
+    if window is not None:
+        m &= (pos_q[:, None] - pos_k[None, :]) < window
+    if valid_k is not None:
+        m &= valid_k[None, :]
+    return m
+
+
+def _sdpa(q, k, v, mask, scale):
+    """Plain attention. q:(B,Sq,K,G,hd) k:(B,Sk,K,hd) v:(B,Sk,K,hv)."""
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32) * scale
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgqs,bskv->bqkgv", w, v)
+
+
+def _blocked_sdpa(q, k, v, pos_q, pos_k, causal, window, scale,
+                  q_block: int = 512, kv_block: int = 1024):
+    """Flash-style online-softmax attention, double-blocked with lax.scan.
+
+    Memory per step is O(q_block * kv_block) instead of O(Sq * Sk); compute
+    covers all block pairs (masked), which the roofline accounts as the
+    standard 2x causal overhead (hillclimb item: Pallas kernel / block
+    skipping).
+    """
+    B, Sq, K, G, hd = q.shape
+    Sk = k.shape[1]
+    hv = v.shape[-1]
+    qb = min(q_block, Sq)
+    kb = min(kv_block, Sk)
+    # pad to multiples
+    nq, nk = -(-Sq // qb), -(-Sk // kb)
+    pq = nq * qb - Sq
+    pk = nk * kb - Sk
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    posq = jnp.pad(pos_q, (0, pq), constant_values=-1)
+    posk = jnp.pad(pos_k, (0, pk), constant_values=2**30)
+
+    qs = qp.reshape(B, nq, qb, K, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    pqs = posq.reshape(nq, qb)
+    ks = kp.reshape(B, nk, kb, K, hd).transpose(1, 0, 2, 3, 4)
+    vs = vp.reshape(B, nk, kb, K, hv).transpose(1, 0, 2, 3, 4)
+    pks = posk.reshape(nk, kb)
+
+    def q_step(_, qx):
+        qi, pqi = qx
+
+        def kv_step(carry, kx):
+            acc, m, l = carry
+            ki, vi, pki = kx
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qi, ki).astype(jnp.float32) * scale
+            msk = _mask(pqi, pki, causal, window)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskv->bkgqv", p.astype(vi.dtype), vi).astype(jnp.float32)
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, K, G, qb, hv), jnp.float32)
+        m0 = jnp.full((B, K, G, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, qb), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), (ks, vs, pks))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.transpose(0, 3, 1, 2, 4)  # (B, qb, K, G, hv)
+
+    _, outs = jax.lax.scan(q_step, None, (qs, pqs))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * qb, K, G, hv)
+    return out[:, :Sq].astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA family
+def attn_specs(cfg: ArchConfig, dtype) -> Dict[str, ParamSpec]:
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    specs = {
+        "wq": ParamSpec((d, H * hd), dtype, ("fsdp", "tp")),
+        "wk": ParamSpec((d, K * hd), dtype, ("fsdp", "tp")),
+        "wv": ParamSpec((d, K * hd), dtype, ("fsdp", "tp")),
+        "wo": ParamSpec((H * hd, d), dtype, ("tp", "fsdp")),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = ParamSpec((hd,), dtype, (None,), init="ones")
+        specs["k_norm"] = ParamSpec((hd,), dtype, (None,), init="ones")
+    return specs
+
+
+def _alloc_len(cfg: ArchConfig, max_len: int) -> int:
+    if getattr(cfg, "swa_ring_cache", False) and cfg.sliding_window:
+        return min(max_len, cfg.sliding_window)
+    return max_len
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> KVCache:
+    K, hd = cfg.n_kv_heads, cfg.hd
+    S = _alloc_len(cfg, max_len)
+    return KVCache(
+        k=jnp.zeros((batch, S, K, hd), dtype),
+        v=jnp.zeros((batch, S, K, hd), dtype),
+        pos=jnp.full((S,), EMPTY_POS, jnp.int32),
+        length=jnp.zeros((), jnp.int32))
+
+
+def attn_apply(cfg: ArchConfig, p: Dict[str, jnp.ndarray], x: jnp.ndarray,
+               positions: jnp.ndarray, *, causal: bool = True,
+               cache: Optional[KVCache] = None,
+               kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+               window: Optional[int] = None,
+               ) -> Tuple[jnp.ndarray, Optional[KVCache]]:
+    """x: (B, S, d). decode when cache is not None and S == 1.
+
+    kv_override: (k_src, v_src) for cross-attention (enc-dec): keys/values
+    computed from encoder output positions instead of x.
+    """
+    B, S, d = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // K
+    window = window if window is not None else cfg.sliding_window
+
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    src = kv_override[0] if kv_override is not None else x
+    k = (src @ p["wk"]).reshape(B, src.shape[1], K, hd)
+    v = ((kv_override[1] if kv_override is not None else x) @ p["wv"]
+         ).reshape(B, src.shape[1], K, hd)
+
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+
+    if kv_override is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, S, K, G, hd)
+
+    if cache is not None and kv_override is None and S == 1:
+        # decode: append the new token (ring slot = pos mod alloc when the
+        # ring cache is on; dense slot otherwise), attend over stored
+        # positions.  (Prefill — S > 1 — must NOT take this path: it goes
+        # through the blocked path below and then writes the cache.)
+        S_alloc = cache.k.shape[1]
+        slot = jnp.mod(cache.length, S_alloc)
+        new_k = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                             (0, slot, 0, 0))
+        new_v = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                             (0, slot, 0, 0))
+        new_pos = jax.lax.dynamic_update_slice(
+            cache.pos, positions.astype(jnp.int32), (slot,))
+        valid = new_pos >= 0
+        mask = _mask(positions, new_pos, causal, window, valid_k=valid)
+        out = _sdpa(qg, new_k, new_v, mask, scale)
+        cache = KVCache(new_k, new_v, new_pos, cache.length + S)
+    else:
+        pos_k = (jnp.arange(src.shape[1]) if kv_override is not None
+                 else positions)
+        if (getattr(cfg, "use_pallas_attention", False)
+                and kv_override is None and S == src.shape[1]):
+            # Pallas flash kernel (kernels/attention): contiguous positions
+            # only (training/prefill); interpret-mode on CPU backends.
+            from ..kernels.attention.ops import flash_attention
+            out = flash_attention(q, k, v, causal=causal, window=window
+                                  ).reshape(B, S, K, G, hd)
+        elif S * src.shape[1] <= 1 << 22:  # small: plain attention
+            mask = _mask(positions, pos_k, causal and kv_override is None, window)
+            out = _sdpa(qg, k, v, mask, scale)
+        else:
+            out = _blocked_sdpa(qg, k, v, positions, pos_k,
+                                causal and kv_override is None, window, scale)
+        if cache is not None:  # prefill into cache
+            from ..sharding.partition import current_partitioning
+            part = current_partitioning()
+            if part.rules.get("seq_kv") and part.rules.get("prefill_kv_constrain"):
+                # reshard k/v to the cache's KV-length sharding *before* the
+                # cache write, so the update is a local dynamic-update-slice
+                # instead of a replicate-then-partition all-reduce (§Perf)
+                k = part.constrain(k, "batch", "seq_kv", None, None)
+                v = part.constrain(v, "batch", "seq_kv", None, None)
+            S_alloc = cache.k.shape[1]
+            if S <= S_alloc:
+                new_k = jax.lax.dynamic_update_slice(
+                    cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0))
+                new_v = jax.lax.dynamic_update_slice(
+                    cache.v, v.astype(cache.v.dtype), (0, 0, 0, 0))
+                new_pos = jax.lax.dynamic_update_slice(
+                    cache.pos, positions.astype(jnp.int32), (0,))
+            else:
+                # ring cache + long prompt: keep the trailing window, placed
+                # at slot = position mod S_alloc
+                shift = S % S_alloc
+                new_k = jnp.roll(k[:, S - S_alloc:], shift, axis=1
+                                 ).astype(cache.k.dtype)
+                new_v = jnp.roll(v[:, S - S_alloc:], shift, axis=1
+                                 ).astype(cache.v.dtype)
+                new_pos = jnp.roll(positions[S - S_alloc:], shift
+                                   ).astype(jnp.int32)
+            cache = KVCache(new_k, new_v, new_pos, jnp.asarray(S, jnp.int32))
+
+    out = out.reshape(B, S, H * hd).astype(x.dtype)
+    return out @ p["wo"], cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3)
+def mla_specs(cfg: ArchConfig, dtype) -> Dict[str, ParamSpec]:
+    d, H = cfg.d_model, cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "wq_a": ParamSpec((d, cfg.q_lora_rank), dtype, ("fsdp", None)),
+        "q_norm": ParamSpec((cfg.q_lora_rank,), dtype, (None,), init="ones"),
+        "wq_b": ParamSpec((cfg.q_lora_rank, H * qk), dtype, (None, "tp")),
+        "wkv_a": ParamSpec((d, cfg.kv_lora_rank + cfg.qk_rope_dim), dtype,
+                           ("fsdp", None)),
+        "kv_norm": ParamSpec((cfg.kv_lora_rank,), dtype, (None,), init="ones"),
+        "wk_b": ParamSpec((cfg.kv_lora_rank, H * cfg.qk_nope_dim), dtype,
+                          (None, "tp")),
+        "wv_b": ParamSpec((cfg.kv_lora_rank, H * cfg.v_head_dim), dtype,
+                          (None, "tp")),
+        "wo": ParamSpec((H * cfg.v_head_dim, d), dtype, ("tp", "fsdp")),
+    }
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> MLACache:
+    return MLACache(
+        c_kv=jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+        length=jnp.zeros((), jnp.int32))
+
+
+def mla_apply(cfg: ArchConfig, p: Dict[str, jnp.ndarray], x: jnp.ndarray,
+              positions: jnp.ndarray, *, cache: Optional[MLACache] = None,
+              ) -> Tuple[jnp.ndarray, Optional[MLACache]]:
+    B, S, d = x.shape
+    H = cfg.n_heads
+    nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    scale = 1.0 / math.sqrt(nd + rd)
+
+    q = rmsnorm(x @ p["wq_a"], p["q_norm"]) @ p["wq_b"]
+    q = q.reshape(B, S, H, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = x @ p["wkv_a"]
+    c_kv = rmsnorm(kv_a[..., :cfg.kv_lora_rank], p["kv_norm"])
+    k_rope = apply_rope(kv_a[..., None, cfg.kv_lora_rank:], positions,
+                        cfg.rope_theta)[..., 0, :]  # single shared rope head
+
+    if cache is not None and S == 1:
+        # absorbed decode: queries projected into the latent space so the
+        # cache stays compressed (the MLA serving trick).
+        start = cache.length
+        c_all = jax.lax.dynamic_update_slice(
+            cache.c_kv, c_kv.astype(cache.c_kv.dtype), (0, start, 0))
+        r_all = jax.lax.dynamic_update_slice(
+            cache.k_rope, k_rope.astype(cache.k_rope.dtype), (0, start, 0))
+        wk_b = p["wk_b"].reshape(cfg.kv_lora_rank, H, nd)
+        q_lat = jnp.einsum("bshn,lhn->bshl", q_nope, wk_b)  # (B,1,H,latent)
+        s_lat = jnp.einsum("bshl,btl->bhst", q_lat, c_all)
+        s_rope = jnp.einsum("bshr,btr->bhst", q_rope, r_all)
+        scores = (s_lat + s_rope).astype(jnp.float32) * scale
+        pos_k = jnp.arange(c_all.shape[1])
+        valid = pos_k < (start + S)
+        mask = (positions[:, None] >= pos_k[None, :]) & valid[None, :]
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1).astype(c_all.dtype)
+        o_lat = jnp.einsum("bhst,btl->bshl", w, c_all)
+        wv_b = p["wv_b"].reshape(cfg.kv_lora_rank, H, vd)
+        out = jnp.einsum("bshl,lhv->bshv", o_lat, wv_b)
+        cache = MLACache(c_all, r_all, cache.length + S)
+    else:
+        k_nope = (c_kv @ p["wk_b"]).reshape(B, S, H, nd)
+        value = (c_kv @ p["wv_b"]).reshape(B, S, H, vd)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, rd))],
+            axis=-1)
+        qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+        qg = qfull.reshape(B, S, H, 1, nd + rd)
+        if S * S <= 1 << 22:
+            mask = _mask(positions, positions, True, None)
+            out = _sdpa(qg, k, value, mask, scale)
+        else:
+            out = _blocked_sdpa(qg, k, value, positions, positions, True,
+                                None, scale)
+        out = out.reshape(B, S, H, vd)
+        if cache is not None:
+            c_all = jax.lax.dynamic_update_slice(
+                cache.c_kv, c_kv.astype(cache.c_kv.dtype), (0, 0, 0))
+            r_all = jax.lax.dynamic_update_slice(
+                cache.k_rope, k_rope.astype(cache.k_rope.dtype), (0, 0, 0))
+            cache = MLACache(c_all, r_all, jnp.asarray(S, jnp.int32))
+
+    out = out.reshape(B, S, H * vd).astype(x.dtype)
+    return out @ p["wo"], cache

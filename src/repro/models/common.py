@@ -1,0 +1,100 @@
+"""Shared model building blocks (pure JAX, no external NN library).
+
+Parameters are flat dicts ``name -> jnp.ndarray`` described by
+``ParamSpec``s (shape/dtype/logical axes/init), so initialization, sharding
+specs and allocation-free dry-run structs all derive from one source.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding.partition import ParamSpec, current_partitioning, shard
+
+__all__ = ["init_params", "param_structs", "param_shardings", "rmsnorm",
+           "apply_rope", "rope_freqs", "cross_entropy_loss", "count_params",
+           "DTYPES"]
+
+DTYPES = {"bf16": jnp.bfloat16, "f32": jnp.float32, "f16": jnp.float16}
+
+
+def _init_one(key, spec: ParamSpec):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "normal":
+        scale = spec.init_scale / math.sqrt(max(spec.shape[0], 1))
+        return (jax.random.normal(key, spec.shape, jnp.float32) * scale
+                ).astype(spec.dtype)
+    if spec.init == "scaled":  # scale given explicitly
+        return (jax.random.normal(key, spec.shape, jnp.float32) * spec.init_scale
+                ).astype(spec.dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def init_params(specs: Dict[str, ParamSpec], key) -> Dict[str, jnp.ndarray]:
+    out = {}
+    for i, (name, spec) in enumerate(sorted(specs.items())):
+        out[name] = _init_one(jax.random.fold_in(key, i), spec)
+    return out
+
+
+def param_structs(specs: Dict[str, ParamSpec]) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Allocation-free stand-ins for the dry-run."""
+    return {name: jax.ShapeDtypeStruct(s.shape, s.dtype)
+            for name, s in specs.items()}
+
+
+def param_shardings(specs: Dict[str, ParamSpec], part=None) -> Dict[str, object]:
+    part = part or current_partitioning()
+    return {name: part.sharding(s.logical, s.shape)
+            for name, s in specs.items()}
+
+
+def count_params(specs: Dict[str, ParamSpec]) -> int:
+    return sum(s.size for s in specs.values())
+
+
+# -- numerics ----------------------------------------------------------------
+def rmsnorm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * w
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    """Inverse frequencies for rotary embeddings (half of head_dim)."""
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    hd = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(hd, theta), dtype=jnp.float32)
+    ang = positions[..., :, None].astype(jnp.float32) * inv[None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)          # (..., seq, hd//2)
+    cos = cos[..., :, None, :]
+    sin = sin[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy_loss(logits, labels, z_loss: float = 0.0,
+                       ignore_id: int = -1):
+    """Mean token cross-entropy in f32 with optional z-loss stabilizer."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    ce = lse - gold
+    if z_loss:
+        ce = ce + z_loss * jnp.square(lse)
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,256 @@
+"""Top-level language models for all assigned architecture families.
+
+Public API (everything the launcher / examples / tests use):
+  * ``param_specs(cfg)``      flat dict name -> ParamSpec
+  * ``init(cfg, key)``        materialized params
+  * ``forward(cfg, params, batch)``          -> (logits, aux)
+  * ``loss_fn(cfg, params, batch)``          -> (loss, metrics)
+  * ``init_caches(cfg, batch, max_len)``     decode caches
+  * ``prefill(cfg, params, batch, caches)``  -> (last_logits, caches)
+  * ``decode_step(cfg, params, token, caches)`` -> (logits, caches)
+
+Batches are dicts: tokens (B, S) int32 "inputs"/"targets"; VLM adds
+"patches" (B, P, d_model) stub patch embeddings; enc-dec adds "src"
+(B, T_src, d_model) stub frame embeddings (modality frontends are stubs per
+the assignment — ``input_specs`` provides precomputed embeddings).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding.partition import ParamSpec, shard
+from .common import DTYPES, cross_entropy_loss, init_params, rmsnorm
+from .transformer import (add_prefix, decoder_stack, encoder_stack,
+                          hybrid_stack, init_layer_caches, layer_specs,
+                          stack_specs, sub)
+
+__all__ = ["param_specs", "init", "forward", "loss_fn", "init_caches",
+           "prefill", "decode_step"]
+
+
+def _dtype(cfg: ArchConfig):
+    return DTYPES[cfg.param_dtype]
+
+
+def param_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    dt = _dtype(cfg)
+    d, V = cfg.d_model, cfg.vocab_padded
+    specs: Dict[str, ParamSpec] = {
+        "embed": ParamSpec((V, d), dt, ("vocab", "fsdp"), init="scaled",
+                           init_scale=0.02),
+        "final_norm": ParamSpec((d,), dt, (None,), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = ParamSpec((d, V), dt, ("fsdp", "vocab"))
+
+    if cfg.family == "hybrid":
+        G = cfg.n_layers // cfg.attn_every
+        ssm_layer = layer_specs(cfg, dt, "ssm")
+        grouped = {k: ParamSpec((G, cfg.attn_every) + s.shape, s.dtype,
+                                (None, None) + s.logical, s.init, s.init_scale)
+                   for k, s in ssm_layer.items()}
+        specs.update(add_prefix(grouped, "layers"))
+        specs.update(add_prefix(layer_specs(cfg, dt, "decoder"), "shared_attn"))
+    elif cfg.family == "encdec":
+        dec = layer_specs(cfg, dt, "decoder_cross")
+        specs.update(add_prefix(stack_specs(dec, cfg.n_layers), "layers"))
+        enc = layer_specs(cfg, dt, "encoder")
+        specs.update(add_prefix(stack_specs(enc, cfg.n_enc_layers), "enc_layers"))
+        specs["enc_final_norm"] = ParamSpec((d,), dt, (None,), init="ones")
+    else:
+        kind = "ssm" if cfg.family == "ssm" else "decoder"
+        nd = cfg.n_dense_layers if cfg.n_experts else 0
+        if nd:  # DeepSeek-style leading dense layers before the MoE stack
+            dense = layer_specs(cfg, dt, "decoder_dense")
+            specs.update(add_prefix(stack_specs(dense, nd), "dense_layers"))
+        layer = layer_specs(cfg, dt, kind)
+        specs.update(add_prefix(stack_specs(layer, cfg.n_layers - nd), "layers"))
+
+    if cfg.num_patches:  # VLM stub frontend projection
+        specs["patch_proj"] = ParamSpec((d, d), dt, ("fsdp", "tp"))
+    if cfg.mtp_depth:    # DeepSeek multi-token prediction module
+        specs["mtp_norm_h"] = ParamSpec((d,), dt, (None,), init="ones")
+        specs["mtp_norm_e"] = ParamSpec((d,), dt, (None,), init="ones")
+        specs["mtp_proj"] = ParamSpec((2 * d, d), dt, ("fsdp", "tp"))
+        specs.update(add_prefix(
+            stack_specs(layer_specs(cfg, dt, "decoder"), cfg.mtp_depth), "mtp_layers"))
+    return specs
+
+
+def init(cfg: ArchConfig, key) -> Dict[str, jnp.ndarray]:
+    return init_params(param_specs(cfg), key)
+
+
+# ---------------------------------------------------------------------------
+def _embed(cfg, params, tokens):
+    x = params["embed"][tokens]
+    return shard(x, "batch", "seq", "embed")
+
+
+def _head(cfg, params, x, mask_padding: bool = False):
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = x @ w.astype(x.dtype)
+    if mask_padding and cfg.vocab_padded != cfg.vocab:
+        # serve paths: padded vocab entries must never win an argmax
+        keep = jnp.arange(cfg.vocab_padded) < cfg.vocab
+        logits = jnp.where(keep, logits, -1e30)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def _positions(batch_tokens, offset=0):
+    S = batch_tokens.shape[1]
+    return jnp.arange(S, dtype=jnp.int32) + offset
+
+
+def _backbone(cfg: ArchConfig, params, x, positions, caches=None,
+              enc_out=None, moe_dispatch="einsum"):
+    """Run the layer stack for any family. Returns (hidden, aux, caches)."""
+    if cfg.family == "hybrid":
+        c, sc = (None, None) if caches is None else caches
+        h, aux, nc, nsc = hybrid_stack(cfg, sub(params, "layers"),
+                                       sub(params, "shared_attn"), x, positions,
+                                       caches=c, shared_caches=sc)
+        return h, aux, (None if caches is None else (nc, nsc))
+    kind = "ssm" if cfg.family == "ssm" else (
+        "decoder_cross" if cfg.family == "encdec" else "decoder")
+    nd = cfg.n_dense_layers if cfg.n_experts else 0
+    if nd:
+        dense_c, moe_c = (None, None) if caches is None else caches
+        h, aux0, ndc = decoder_stack(cfg, sub(params, "dense_layers"), x,
+                                     positions, kind="decoder_dense",
+                                     caches=dense_c, n_layers=nd)
+        h, aux, nc = decoder_stack(cfg, sub(params, "layers"), h, positions,
+                                   kind=kind, caches=moe_c, enc_out=enc_out,
+                                   moe_dispatch=moe_dispatch,
+                                   n_layers=cfg.n_layers - nd)
+        return h, aux + aux0, (None if caches is None else (ndc, nc))
+    h, aux, nc = decoder_stack(cfg, sub(params, "layers"), x, positions,
+                               kind=kind, caches=caches, enc_out=enc_out,
+                               moe_dispatch=moe_dispatch)
+    return h, aux, nc
+
+
+def _encode(cfg, params, src):
+    pos = jnp.arange(src.shape[1], dtype=jnp.int32)
+    enc, aux = encoder_stack(cfg, sub(params, "enc_layers"), src, pos)
+    return rmsnorm(enc, params["enc_final_norm"]), aux
+
+
+def forward(cfg: ArchConfig, params, batch: Dict[str, Any],
+            moe_dispatch: str = "einsum"):
+    """Training/eval forward. Returns (logits, aux_loss)."""
+    tokens = batch["inputs"]
+    x = _embed(cfg, params, tokens)
+    enc_out = None
+    aux_total = jnp.zeros((), jnp.float32)
+    if cfg.family == "encdec":
+        enc_out, enc_aux = _encode(cfg, params, batch["src"].astype(x.dtype))
+        aux_total += enc_aux
+    if cfg.num_patches and "patches" in batch:
+        pe = batch["patches"].astype(x.dtype) @ params["patch_proj"]
+        x = jnp.concatenate([pe, x], axis=1)
+    positions = _positions(x[:, :, 0] if x.ndim == 3 else x)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    h, aux, _ = _backbone(cfg, params, x, positions, enc_out=enc_out,
+                          moe_dispatch=moe_dispatch)
+    aux_total += aux
+    if cfg.num_patches and "patches" in batch:
+        h = h[:, -tokens.shape[1]:]
+    hidden = rmsnorm(h, params["final_norm"])
+    logits = _head(cfg, params, hidden)
+    if cfg.mtp_depth and cfg.use_mtp_loss:
+        # one-step MTP: combine hidden_t with embedding of token t+1
+        emb_next = jnp.roll(_embed(cfg, params, tokens), -1, axis=1)
+        mtp_in = jnp.concatenate(
+            [rmsnorm(h, params["mtp_norm_h"]),
+             rmsnorm(emb_next, params["mtp_norm_e"])], axis=-1) @ params["mtp_proj"]
+        mtp_h, mtp_aux, _ = decoder_stack(cfg, sub(params, "mtp_layers"),
+                                          mtp_in, positions,
+                                          n_layers=cfg.mtp_depth,
+                                          moe_dispatch=moe_dispatch)
+        aux_total += mtp_aux
+        mtp_logits = _head(cfg, params, rmsnorm(mtp_h, params["final_norm"]))
+        return logits, aux_total, mtp_logits
+    return logits, aux_total, None
+
+
+def loss_fn(cfg: ArchConfig, params, batch, moe_dispatch: str = "einsum"):
+    logits, aux, mtp_logits = forward(cfg, params, batch,
+                                      moe_dispatch=moe_dispatch)
+    loss = cross_entropy_loss(logits, batch["targets"])
+    metrics = {"ce": loss, "aux": aux}
+    if mtp_logits is not None:
+        # MTP predicts one token further: shift targets by one more step
+        t2 = jnp.concatenate(
+            [batch["targets"][:, 1:],
+             jnp.full_like(batch["targets"][:, :1], -1)], axis=1)
+        mtp_loss = cross_entropy_loss(mtp_logits, t2)
+        metrics["mtp"] = mtp_loss
+        loss = loss + 0.3 * mtp_loss
+    total = loss + aux
+    metrics["loss"] = total
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving
+def init_caches(cfg: ArchConfig, batch: int, max_len: int):
+    dt = _dtype(cfg)
+    if cfg.family == "hybrid":
+        G = cfg.n_layers // cfg.attn_every
+        ssm = init_layer_caches(cfg, cfg.attn_every, batch, max_len, dt, "ssm")
+        ssm = jax.tree.map(lambda a: jnp.broadcast_to(a, (G,) + a.shape), ssm)
+        attn = init_layer_caches(cfg, G, batch, max_len, dt, "decoder")
+        return (ssm, attn)
+    kind = "ssm" if cfg.family == "ssm" else "decoder"
+    nd = cfg.n_dense_layers if cfg.n_experts else 0
+    if nd:
+        return (init_layer_caches(cfg, nd, batch, max_len, dt, kind),
+                init_layer_caches(cfg, cfg.n_layers - nd, batch, max_len, dt,
+                                  kind))
+    return init_layer_caches(cfg, cfg.n_layers, batch, max_len, dt, kind)
+
+
+def prefill(cfg: ArchConfig, params, batch, caches,
+            moe_dispatch: str = "einsum"):
+    """Process the prompt; returns (last-token logits, filled caches)."""
+    tokens = batch["inputs"]
+    x = _embed(cfg, params, tokens)
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out, _ = _encode(cfg, params, batch["src"].astype(x.dtype))
+    if cfg.num_patches and "patches" in batch:
+        pe = batch["patches"].astype(x.dtype) @ params["patch_proj"]
+        x = jnp.concatenate([pe, x], axis=1)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    h, _, caches = _backbone(cfg, params, x, positions, caches=caches,
+                             enc_out=enc_out, moe_dispatch=moe_dispatch)
+    hidden = rmsnorm(h[:, -1:], params["final_norm"])
+    return _head(cfg, params, hidden, mask_padding=True)[:, 0], caches
+
+
+def decode_step(cfg: ArchConfig, params, token, caches, *, enc_out=None,
+                pos=None, moe_dispatch: str = "einsum"):
+    """One decode step. token: (B,) int32. Returns (logits (B, V), caches)."""
+    x = _embed(cfg, params, token[:, None])
+    if pos is None:
+        pos = _cache_length(cfg, caches)
+    positions = pos[None] if pos.ndim == 0 else pos
+    positions = jnp.reshape(positions, (1,)).astype(jnp.int32)
+    h, _, caches = _backbone(cfg, params, x, positions, caches=caches,
+                             enc_out=enc_out)
+    hidden = rmsnorm(h, params["final_norm"])
+    return _head(cfg, params, hidden, mask_padding=True)[:, 0], caches
+
+
+def _cache_length(cfg, caches):
+    leaves = jax.tree.leaves(caches)
+    # 'length' leaves are scalar int32 stacked over layers
+    for leaf in leaves:
+        if leaf.dtype == jnp.int32:
+            return leaf.reshape(-1)[0]
+    return jnp.zeros((), jnp.int32)

@@ -1,0 +1,129 @@
+"""Mixture-of-Experts layer (Mixtral / DeepSeek-V3 style).
+
+Routing: softmax top-k with capacity factor.  Two dispatch engines:
+
+  * ``einsum`` — GShard-style one-hot dispatch/combine einsums.  The
+    paper-faithful baseline every MoE system starts from; its dispatch
+    einsum burns 2·T·E·C·d FLOPs which for DeepSeek's 256 experts rivals
+    the expert FFN compute itself (visible in the roofline useful_ratio).
+  * ``scatter`` — capacity-slot scatter/gather dispatch (no matmul): each
+    token computes its slot via a cumsum over expert one-hots and is moved
+    with scatter-add; saves the dispatch FLOPs entirely (beyond-paper
+    optimization measured in EXPERIMENTS.md §Perf).
+
+Experts are sharded over the "expert" logical axis (EP on the mesh's model
+axis); resharding token buffers between data- and expert-sharded layouts is
+what produces the all-to-all collectives in the compiled module.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding.partition import ParamSpec, shard
+
+__all__ = ["moe_specs", "moe_apply"]
+
+
+def moe_specs(cfg: ArchConfig, dtype) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    f = cfg.d_ff_expert or cfg.d_ff
+    E = cfg.n_experts
+    specs = {
+        "router": ParamSpec((d, E), jnp.float32, ("fsdp", None)),
+        # ("expert","fsdp","tp"): EP over the model axis when E divides it
+        # (DeepSeek 256e); otherwise experts replicate across "model" and
+        # d_ff takes the model axis instead — TP-within-expert, the standard
+        # plan for E < mesh (Mixtral 8e).  Conflict resolution in
+        # Partitioning.spec guarantees the model axis is used at most once.
+        "w_gate": ParamSpec((E, d, f), dtype, ("expert", "fsdp", "tp")),
+        "w_up": ParamSpec((E, d, f), dtype, ("expert", "fsdp", "tp")),
+        "w_down": ParamSpec((E, f, d), dtype, ("expert", "tp", "fsdp")),
+    }
+    for s in range(cfg.n_shared_experts):
+        specs[f"shared{s}/w_gate"] = ParamSpec((d, f), dtype, ("fsdp", "tp"))
+        specs[f"shared{s}/w_up"] = ParamSpec((d, f), dtype, ("fsdp", "tp"))
+        specs[f"shared{s}/w_down"] = ParamSpec((f, d), dtype, ("tp", "fsdp"))
+    return specs
+
+
+def _capacity(cfg: ArchConfig, tokens_per_group: int) -> int:
+    c = int(cfg.top_k * tokens_per_group * cfg.capacity_factor / cfg.n_experts)
+    return max(4, -(-c // 4) * 4)
+
+
+def _expert_ffn(xe, w_gate, w_up, w_down):
+    """xe: (E, C, d) dispatched tokens; SwiGLU per expert."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w_gate))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, w_up)
+    return jnp.einsum("ecf,efd->ecd", h, w_down)
+
+
+def moe_apply(cfg: ArchConfig, p: Dict[str, jnp.ndarray], x: jnp.ndarray,
+              dispatch: str = "einsum") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out, aux_loss)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = _capacity(cfg, S)
+
+    logits = (x.astype(jnp.float32) @ p["router"])          # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)                 # (B, S, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=(0, 1))                        # (E,)
+    onehot_topk = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # (B,S,k,E)
+    ce = jnp.mean(onehot_topk.sum(2), axis=(0, 1)) / k
+    aux = cfg.router_aux_weight * E * jnp.sum(me * ce)
+
+    # position of each (token, choice) within its expert's capacity buffer
+    flat_choice = onehot_topk.reshape(B, S * k, E)
+    pos_in_expert = (jnp.cumsum(flat_choice, axis=1) - 1.0).reshape(B, S, k, E)
+    pos = jnp.einsum("bske,bske->bsk", pos_in_expert, onehot_topk)
+    keep = pos < C
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    if dispatch == "einsum":
+        # GShard: dispatch mask (B, S, k, E, C) contracted immediately
+        cap_onehot = jax.nn.one_hot(
+            jnp.where(keep, pos, C).astype(jnp.int32), C + 1,
+            dtype=x.dtype)[..., :C]                            # (B,S,k,C)
+        disp = jnp.einsum("bske,bskc->bsec", onehot_topk.astype(x.dtype),
+                          cap_onehot)                          # (B,S,E,C)
+        xe = jnp.einsum("bsec,bsd->becd", disp, x)
+        xe = shard(xe, "batch", "expert", None, None)
+        ye = jax.vmap(lambda xb: _expert_ffn(xb, p["w_gate"], p["w_up"],
+                                             p["w_down"]))(xe)
+        ye = shard(ye, "batch", "expert", None, None)
+        comb = jnp.einsum("bske,bskc,bsk->bsec", onehot_topk.astype(x.dtype),
+                          cap_onehot, gate_vals.astype(x.dtype))
+        out = jnp.einsum("bsec,becd->bsd", comb, ye)
+    elif dispatch == "scatter":
+        # capacity-slot scatter: no dispatch matmuls
+        slot = jnp.where(keep, idx * C + pos.astype(jnp.int32), E * C)
+        slot = slot.reshape(B, S * k).astype(jnp.int32)
+        xk = jnp.repeat(x, k, axis=1)                          # (B, S*k, d)
+        buf = jnp.zeros((B, E * C + 1, d), x.dtype)
+        xe = jax.vmap(lambda b, s, v: b.at[s].add(v))(buf, slot, xk)
+        xe = xe[:, :E * C].reshape(B, E, C, d)
+        xe = shard(xe, "batch", "expert", None, None)
+        ye = jax.vmap(lambda xb: _expert_ffn(xb, p["w_gate"], p["w_up"],
+                                             p["w_down"]))(xe)
+        ye = shard(ye, "batch", "expert", None, None)
+        yflat = ye.reshape(B, E * C, d)
+        ypad = jnp.concatenate([yflat, jnp.zeros((B, 1, d), ye.dtype)], axis=1)
+        yk = jax.vmap(lambda yb, s: yb[s])(ypad, slot)         # (B, S*k, d)
+        yk = yk.reshape(B, S, k, d)
+        out = jnp.einsum("bskd,bsk->bsd", yk, gate_vals.astype(x.dtype))
+    else:
+        raise ValueError(f"unknown moe dispatch {dispatch!r}")
+
+    for s in range(cfg.n_shared_experts):
+        h = jax.nn.silu(x @ p[f"shared{s}/w_gate"]) * (x @ p[f"shared{s}/w_up"])
+        out = out + h @ p[f"shared{s}/w_down"]
+    return out.astype(x.dtype), aux

@@ -1,0 +1,185 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked scan implementation.
+
+Faithful to the minimal SSD formulation (Dao & Gu 2024): per-head scalar
+decay ``A``, state size N, head dim P; within chunks the quadratic "dual"
+form, across chunks a linear state recurrence (lax.scan).  Decode keeps a
+constant-size recurrent state — this is why mamba archs run the ``long_500k``
+shape that full attention cannot.
+
+Layout: x (B, L, d_model); internal (B, L, H, P) with H·P = expand·d_model.
+Single B/C group (G=1) as in mamba2-130m.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding.partition import ParamSpec, shard
+from .common import rmsnorm
+
+__all__ = ["ssm_specs", "ssm_apply", "init_ssm_cache", "SSMCache"]
+
+
+class SSMCache(NamedTuple):
+    state: jnp.ndarray      # (B, H, P, N)
+    conv: jnp.ndarray       # (B, W-1, conv_dim) trailing inputs
+    length: jnp.ndarray
+
+
+def ssm_specs(cfg: ArchConfig, dtype) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    di = cfg.d_inner_ssm
+    N, H, W = cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_conv
+    conv_dim = di + 2 * N
+    return {
+        # separate projections (not one fused in_proj) so each output dim
+        # divides the 16-way model axis: di and N shard, the tiny dt head
+        # replicates — the fused (2di+2N+H)-wide projection would fall back
+        # to full replication (divisibility rule, sharding/partition.py).
+        "in_z": ParamSpec((d, di), dtype, ("fsdp", "tp")),
+        "in_x": ParamSpec((d, di), dtype, ("fsdp", "tp")),
+        "in_B": ParamSpec((d, N), dtype, ("fsdp", "tp")),
+        "in_C": ParamSpec((d, N), dtype, ("fsdp", "tp")),
+        "in_dt": ParamSpec((d, H), dtype, ("fsdp", None)),
+        "conv_w": ParamSpec((W, conv_dim), dtype, (None, "tp"), init="scaled",
+                            init_scale=0.1),
+        "conv_b": ParamSpec((conv_dim,), dtype, ("tp",), init="zeros"),
+        "A_log": ParamSpec((H,), jnp.float32, (None,), init="ones"),
+        "dt_bias": ParamSpec((H,), jnp.float32, (None,), init="zeros"),
+        "D": ParamSpec((H,), jnp.float32, (None,), init="ones"),
+        "gate_norm": ParamSpec((di,), dtype, ("tp",), init="ones"),
+        "out_proj": ParamSpec((di, d), dtype, ("tp", "fsdp")),
+    }
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype) -> SSMCache:
+    H, P, N, W = (cfg.n_ssm_heads, cfg.ssm_headdim, cfg.ssm_state,
+                  cfg.ssm_conv)
+    conv_dim = cfg.d_inner_ssm + 2 * N
+    return SSMCache(
+        state=jnp.zeros((batch, H, P, N), jnp.float32),
+        conv=jnp.zeros((batch, W - 1, conv_dim), dtype),
+        length=jnp.zeros((), jnp.int32))
+
+
+def _causal_conv(u, w, b, tail=None):
+    """Depthwise causal conv along seq. u: (B, L, C), w: (W, C)."""
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((u.shape[0], W - 1, u.shape[2]), u.dtype)
+    up = jnp.concatenate([tail, u], axis=1)
+    out = jnp.zeros_like(u)
+    for i in range(W):
+        out = out + up[:, i:i + u.shape[1], :] * w[i][None, None, :]
+    new_tail = up[:, up.shape[1] - (W - 1):, :]
+    return out + b, new_tail
+
+
+def ssm_apply(cfg: ArchConfig, p: Dict[str, jnp.ndarray], x: jnp.ndarray,
+              cache: Optional[SSMCache] = None
+              ) -> Tuple[jnp.ndarray, Optional[SSMCache]]:
+    B, L, d = x.shape
+    di, N, H, P = (cfg.d_inner_ssm, cfg.ssm_state, cfg.n_ssm_heads,
+                   cfg.ssm_headdim)
+    A = -jnp.exp(p["A_log"])                        # (H,) negative decay
+
+    z = x @ p["in_z"]
+    xin = x @ p["in_x"]
+    Bc = x @ p["in_B"]
+    Cc = x @ p["in_C"]
+    dt = x @ p["in_dt"]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,L,H)
+
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    tail = cache.conv if cache is not None else None
+    conv_out, new_tail = _causal_conv(conv_in, p["conv_w"], p["conv_b"], tail)
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bc, Cc = jnp.split(conv_out, [di, di + N], axis=-1)
+    xh = xin.reshape(B, L, H, P)
+
+    if cache is not None and L == 1:
+        # recurrent decode step
+        dt1 = dt[:, 0]                                   # (B,H)
+        decay = jnp.exp(dt1 * A[None, :])                # (B,H)
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dt1, Bc[:, 0].astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32))
+        state = cache.state * decay[..., None, None] + dBx
+        y = jnp.einsum("bn,bhpn->bhp", Cc[:, 0].astype(jnp.float32), state)
+        y = y + p["D"][None, :, None] * xh[:, 0].astype(jnp.float32)
+        y = y.reshape(B, 1, di)
+        new_cache = SSMCache(state, new_tail, cache.length + 1)
+    else:
+        y, final_state = _ssd_chunked(cfg, xh, dt, A, Bc, Cc)
+        y = y + (p["D"][None, None, :, None] * xh.astype(jnp.float32))
+        y = y.reshape(B, L, di)
+        new_cache = None
+        if cache is not None:  # prefill
+            new_cache = SSMCache(final_state, new_tail,
+                                 jnp.asarray(L, jnp.int32))
+
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    y = rmsnorm(y, p["gate_norm"])
+    return y @ p["out_proj"], new_cache
+
+
+def _ssd_chunked(cfg: ArchConfig, xh, dt, A, Bc, Cc):
+    """Chunked SSD: quadratic within chunks, linear scan across chunks.
+
+    xh: (B, L, H, P); dt: (B, L, H) f32; Bc/Cc: (B, L, N).
+    Returns y (B, L, H, P) f32 and final state (B, H, P, N) f32.
+    """
+    B, L, H, P = xh.shape
+    N = Bc.shape[-1]
+    Q = min(cfg.ssm_chunk, L)
+    pad = (-L) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+    nc = (L + pad) // Q
+
+    xc = xh.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, Q, H)
+    Bcc = Bc.reshape(B, nc, Q, N).astype(jnp.float32)
+    Ccc = Cc.reshape(B, nc, Q, N).astype(jnp.float32)
+
+    a = dtc * A[None, None, None, :]                  # (B,nc,Q,H) negative
+    acum = jnp.cumsum(a, axis=2)
+
+    # intra-chunk (dual / attention-like) term
+    rel = acum[:, :, :, None, :] - acum[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask the *input* of exp: above the diagonal rel > 0 can overflow, and
+    # where(mask, exp(rel), 0) would still propagate inf*0 = nan gradients.
+    rel = jnp.where(causal[None, None, :, :, None], rel, -jnp.inf)
+    decay = jnp.exp(rel)
+    scores = jnp.einsum("bcin,bcjn->bcij", Ccc, Bcc)         # (B,nc,Q,Q)
+    w = scores[..., None] * decay * dtc[:, :, None, :, :]    # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xc)
+
+    # chunk summary states
+    last = acum[:, :, -1:, :]                                 # (B,nc,1,H)
+    wj = jnp.exp(last - acum) * dtc                           # (B,nc,Q,H)
+    S_chunk = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", wj, Bcc, xc)
+    chunk_decay = jnp.exp(jnp.sum(a, axis=2))                 # (B,nc,H)
+
+    def scan_body(h, inp):
+        s_c, dec = inp
+        h_next = h * dec[..., None, None] + s_c
+        return h_next, h  # emit state *before* this chunk
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    hT, h_prevs = jax.lax.scan(
+        scan_body,
+        h0,
+        (S_chunk.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcin,bchpn->bcihp", Ccc, h_prevs)
+    y_inter = y_inter * jnp.exp(acum)[..., None]
+    y = (y_intra + y_inter).reshape(B, nc * Q, H, P)
+    return y[:, :L], hT

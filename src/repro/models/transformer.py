@@ -1,0 +1,206 @@
+"""Layer stacks: decoder / encoder / SSM / hybrid, with scan-over-layers and
+configurable remat — the compile-size and activation-memory levers the §Perf
+loop tunes.
+
+Parameters are flat dicts; layer-stacked leaves carry a leading (L,) dim and
+are scanned with ``lax.scan`` (keeps the HLO one-layer-sized, which is what
+makes 61-layer x 512-device dry-runs compile quickly).  Caches follow the
+same convention: leaves stacked over layers, scanned alongside params.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding.partition import ParamSpec, shard
+from .attention import (attn_apply, attn_specs, init_kv_cache, init_mla_cache,
+                        mla_apply, mla_specs)
+from .common import rmsnorm
+from .moe import moe_apply, moe_specs
+from .ssm import init_ssm_cache, ssm_apply, ssm_specs
+
+__all__ = ["layer_specs", "stack_specs", "decoder_stack", "encoder_stack",
+           "hybrid_stack", "init_layer_caches", "sub", "add_prefix",
+           "remat_wrap"]
+
+
+def sub(params: Dict[str, Any], prefix: str) -> Dict[str, Any]:
+    pl = prefix + "/"
+    return {k[len(pl):]: v for k, v in params.items() if k.startswith(pl)}
+
+
+def add_prefix(specs: Dict[str, Any], prefix: str) -> Dict[str, Any]:
+    return {f"{prefix}/{k}": v for k, v in specs.items()}
+
+
+def stack_specs(specs: Dict[str, ParamSpec], n: int) -> Dict[str, ParamSpec]:
+    return {k: ParamSpec((n,) + s.shape, s.dtype, (None,) + s.logical,
+                         s.init, s.init_scale) for k, s in specs.items()}
+
+
+# ---------------------------------------------------------------------------
+def mlp_specs(cfg: ArchConfig, dtype, d_ff: Optional[int] = None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    return {
+        "w_gate": ParamSpec((d, f), dtype, ("fsdp", "tp")),
+        "w_up": ParamSpec((d, f), dtype, ("fsdp", "tp")),
+        "w_down": ParamSpec((f, d), dtype, ("tp", "fsdp")),
+    }
+
+
+def mlp_apply(p, x):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = shard(h, "batch", "seq", "tp")
+    return h @ p["w_down"]
+
+
+def norm_spec(cfg: ArchConfig, dtype) -> ParamSpec:
+    return ParamSpec((cfg.d_model,), dtype, (None,), init="ones")
+
+
+def layer_specs(cfg: ArchConfig, dtype, kind: str) -> Dict[str, ParamSpec]:
+    """One layer's parameter specs. kind: decoder|decoder_cross|encoder|ssm."""
+    if kind == "ssm":
+        return {"norm": norm_spec(cfg, dtype),
+                **add_prefix(ssm_specs(cfg, dtype), "ssm")}
+    specs: Dict[str, ParamSpec] = {"attn_norm": norm_spec(cfg, dtype)}
+    if cfg.use_mla:
+        specs.update(add_prefix(mla_specs(cfg, dtype), "attn"))
+    else:
+        specs.update(add_prefix(attn_specs(cfg, dtype), "attn"))
+    if kind == "decoder_cross":
+        specs["cross_norm"] = norm_spec(cfg, dtype)
+        specs.update(add_prefix(attn_specs(cfg, dtype), "cross"))
+    specs["ffn_norm"] = norm_spec(cfg, dtype)
+    if cfg.n_experts > 0 and kind in ("decoder", "decoder_cross"):
+        specs.update(add_prefix(moe_specs(cfg, dtype), "moe"))
+    else:
+        specs.update(add_prefix(mlp_specs(cfg, dtype), "mlp"))
+    return specs
+
+
+def layer_apply(cfg: ArchConfig, p, x, positions, *, kind: str,
+                cache=None, enc_out=None, moe_dispatch: str = "einsum"):
+    """Returns (x, aux, new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "ssm":
+        h, new_cache = ssm_apply(cfg, sub(p, "ssm"), rmsnorm(x, p["norm"]),
+                                 cache=cache)
+        return x + h, aux, new_cache
+    h = rmsnorm(x, p["attn_norm"])
+    if cfg.use_mla:
+        h, new_cache = mla_apply(cfg, sub(p, "attn"), h, positions, cache=cache)
+    else:
+        h, new_cache = attn_apply(cfg, sub(p, "attn"), h, positions,
+                                  causal=(kind != "encoder"), cache=cache)
+    x = x + h
+    if kind == "decoder_cross" and enc_out is not None:
+        h = rmsnorm(x, p["cross_norm"])
+        h, _ = attn_apply(cfg, sub(p, "cross"), h, positions, causal=False,
+                          kv_override=(enc_out, enc_out))
+        x = x + h
+    h = rmsnorm(x, p["ffn_norm"])
+    if cfg.n_experts > 0 and kind in ("decoder", "decoder_cross"):
+        h, aux = moe_apply(cfg, sub(p, "moe"), h, dispatch=moe_dispatch)
+    else:
+        h = mlp_apply(sub(p, "mlp"), h)
+    x = x + h
+    x = shard(x, "batch", "seq", "embed")
+    return x, aux, new_cache
+
+
+def remat_wrap(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)  # "full": save nothing
+
+
+# ---------------------------------------------------------------------------
+def init_layer_caches(cfg: ArchConfig, n_layers: int, batch: int, max_len: int,
+                      dtype, kind: str):
+    if kind == "ssm":
+        one = init_ssm_cache(cfg, batch, dtype)
+    elif cfg.use_mla:
+        one = init_mla_cache(cfg, batch, max_len, dtype)
+    else:
+        one = init_kv_cache(cfg, batch, max_len, dtype)
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (n_layers,) + a.shape),
+                        one)
+
+
+def decoder_stack(cfg: ArchConfig, params, x, positions, *, kind="decoder",
+                  caches=None, enc_out=None, n_layers=None,
+                  moe_dispatch="einsum"):
+    """params: flat dict of layer-stacked leaves. Returns (x, aux, caches)."""
+    L = n_layers or cfg.n_layers
+
+    def body(carry, xs):
+        h, aux = carry
+        layer_p, layer_cache = xs
+        h, a, new_cache = layer_apply(cfg, layer_p, h, positions, kind=kind,
+                                      cache=layer_cache, enc_out=enc_out,
+                                      moe_dispatch=moe_dispatch)
+        return (h, aux + a), new_cache
+
+    body = remat_wrap(body, cfg.remat)
+    if cfg.scan_layers:
+        (x, aux), new_caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                            (params, caches))
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        new_list = []
+        for i in range(L):
+            layer_p = jax.tree.map(lambda a: a[i], params)
+            layer_c = jax.tree.map(lambda a: a[i], caches) if caches is not None else None
+            (x, aux), nc = body((x, aux), (layer_p, layer_c))
+            new_list.append(nc)
+        new_caches = (jax.tree.map(lambda *xs: jnp.stack(xs), *new_list)
+                      if caches is not None else None)
+    return x, aux, new_caches
+
+
+def encoder_stack(cfg: ArchConfig, params, x, positions):
+    out, aux, _ = decoder_stack(cfg, params, x, positions, kind="encoder",
+                                n_layers=cfg.n_enc_layers)
+    return out, aux
+
+
+def hybrid_stack(cfg: ArchConfig, params, shared_p, x, positions, *,
+                 caches=None, shared_caches=None):
+    """Zamba2-style: groups of ``attn_every`` SSM layers, each followed by one
+    *shared-weight* attention+MLP block (own activations/caches per use).
+
+    params: SSM layer leaves stacked (G, attn_every, ...); shared_p: single
+    attention block params; shared_caches: KV caches stacked (G, ...).
+    """
+    G = cfg.n_layers // cfg.attn_every
+
+    def group_body(carry, xs):
+        h, aux = carry
+        group_p, group_cache, sh_cache = xs
+
+        def inner(carry2, xs2):
+            h2, aux2 = carry2
+            lp, lc = xs2
+            h2, a, nc = layer_apply(cfg, lp, h2, positions, kind="ssm",
+                                    cache=lc)
+            return (h2, aux2 + a), nc
+
+        (h, aux), new_group_cache = jax.lax.scan(inner, (h, aux),
+                                                 (group_p, group_cache))
+        h, a2, new_sh_cache = layer_apply(cfg, shared_p, h, positions,
+                                          kind="decoder", cache=sh_cache)
+        return (h, aux + a2), (new_group_cache, new_sh_cache)
+
+    group_body = remat_wrap(group_body, cfg.remat)
+    (x, aux), (new_caches, new_shared) = jax.lax.scan(
+        group_body, (x, jnp.zeros((), jnp.float32)),
+        (params, caches, shared_caches))
+    return x, aux, new_caches, new_shared

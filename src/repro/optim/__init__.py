@@ -1,0 +1,11 @@
+from .adamw import (AdamWConfig, adamw_update, clip_by_global_norm,
+                    dequantize_blockwise, global_norm, init_opt_state,
+                    opt_state_specs, quantize_blockwise)
+from .compression import (compressed_psum_mean, ef_compress, ef_decompress,
+                          init_error_state)
+
+__all__ = ["AdamWConfig", "adamw_update", "clip_by_global_norm",
+           "global_norm", "init_opt_state", "opt_state_specs",
+           "quantize_blockwise", "dequantize_blockwise",
+           "compressed_psum_mean", "ef_compress", "ef_decompress",
+           "init_error_state"]

@@ -1,0 +1,9 @@
+from .fault import FaultInjector, SimulatedFault
+from .serve_loop import Request, ServeLoop
+from .steps import make_decode_step, make_prefill_step, make_train_step
+from .straggler import StragglerMonitor
+from .train_loop import Trainer, TrainResult
+
+__all__ = ["FaultInjector", "SimulatedFault", "Request", "ServeLoop",
+           "make_train_step", "make_prefill_step", "make_decode_step",
+           "StragglerMonitor", "Trainer", "TrainResult"]

@@ -1,0 +1,44 @@
+"""Fault injection + health model for the training driver.
+
+On a real fleet, failures arrive as ICI/host errors or missed heartbeats;
+here they are injected deterministically so the recovery paths (restore,
+restart, elastic re-mesh) are exercised by CPU tests.  Failure kinds:
+
+  * "step_crash"   — transient: the step raises; driver restores from the
+                     last checkpoint and continues (same topology);
+  * "node_loss"    — persistent: a pod/host is gone; driver re-meshes onto
+                     the survivors (heterogeneous node sizes — the paper's
+                     n_i support doing real work) and continues.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+__all__ = ["SimulatedFault", "FaultInjector"]
+
+
+class SimulatedFault(RuntimeError):
+    def __init__(self, kind: str, step: int, node: Optional[int] = None):
+        super().__init__(f"simulated {kind} at step {step}"
+                         + (f" (node {node})" if node is not None else ""))
+        self.kind = kind
+        self.step = step
+        self.node = node
+
+
+@dataclass
+class FaultInjector:
+    """schedule: step -> kind ("step_crash" | "node_loss[:node]")."""
+    schedule: Dict[int, str] = field(default_factory=dict)
+    fired: set = field(default_factory=set)
+
+    def check(self, step: int) -> None:
+        if step in self.schedule and step not in self.fired:
+            self.fired.add(step)
+            kind = self.schedule[step]
+            node = None
+            if ":" in kind:
+                kind, node_s = kind.split(":", 1)
+                node = int(node_s)
+            raise SimulatedFault(kind, step, node)

@@ -1,0 +1,103 @@
+"""Batched serving loop: fixed-slot continuous batching.
+
+A request arrives with a prompt; the scheduler prefills it into a free slot
+of the running batch and the decode loop advances every active slot each
+step.  Slots free on EOS/max-tokens.  This is the serving analog the decode
+shapes lower (one ``decode_step`` for the whole batch).
+
+Single-slot-batch prefill keeps it simple (one prefill jit per prompt
+length bucket); production would chunk-prefill — noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..models import lm
+from .steps import make_decode_step
+
+__all__ = ["Request", "ServeLoop"]
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeLoop:
+    def __init__(self, cfg: ArchConfig, params, batch_slots: int = 4,
+                 max_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.B = batch_slots
+        self.max_len = max_len
+        self.caches = lm.init_caches(cfg, 1, max_len)  # per-slot caches
+        self.slot_caches = [lm.init_caches(cfg, 1, max_len)
+                            for _ in range(batch_slots)]
+        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.slot_pos = [0] * batch_slots
+        self.slot_last_tok = [0] * batch_slots
+        self._decode = jax.jit(make_decode_step(cfg))
+
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                return i
+        return None
+
+    def admit(self, req: Request) -> bool:
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        batch = {"inputs": jnp.asarray(req.prompt[None, :], jnp.int32),
+                 "targets": jnp.asarray(req.prompt[None, :], jnp.int32)}
+        caches = lm.init_caches(self.cfg, 1, self.max_len)
+        logits, caches = lm.prefill(self.cfg, self.params, batch, caches)
+        tok = int(jnp.argmax(logits[0]))
+        req.out_tokens.append(tok)
+        self.slot_req[slot] = req
+        self.slot_caches[slot] = caches
+        self.slot_pos[slot] = len(req.prompt)
+        self.slot_last_tok[slot] = tok
+        return True
+
+    def step(self) -> int:
+        """Advance every active slot one token. Returns #active slots."""
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        for i in active:
+            req = self.slot_req[i]
+            tok = jnp.asarray([self.slot_last_tok[i]], jnp.int32)
+            pos = jnp.asarray(self.slot_pos[i], jnp.int32)
+            logits, self.slot_caches[i] = self._decode(
+                self.params, self.slot_caches[i], tok, pos)
+            nxt = int(jnp.argmax(logits[0]))
+            req.out_tokens.append(nxt)
+            self.slot_pos[i] += 1
+            self.slot_last_tok[i] = nxt
+            if (len(req.out_tokens) >= req.max_new_tokens
+                    or (req.eos_id is not None and nxt == req.eos_id)
+                    or self.slot_pos[i] >= self.max_len - 1):
+                req.done = True
+                self.slot_req[i] = None
+        return len([r for r in self.slot_req if r is not None])
+
+    def run(self, requests: List[Request], max_steps: int = 1000) -> None:
+        pending = list(requests)
+        steps = 0
+        while (pending or any(r is not None for r in self.slot_req)) \
+                and steps < max_steps:
+            while pending and self._free_slot() is not None:
+                self.admit(pending.pop(0))
+            self.step()
+            steps += 1

@@ -1,0 +1,74 @@
+"""jit-able step functions: training (with microbatch gradient accumulation)
+and serving (prefill / decode).  Shared by the real drivers and the dry-run.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models import lm
+from ..optim.adamw import AdamWConfig, adamw_update
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step"]
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig,
+                    moe_dispatch: str = "einsum"):
+    """train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With cfg.microbatches > 1 the global batch is split along the batch dim
+    and gradients accumulate through a lax.scan — per-microbatch backward
+    passes overlap with the (sharded) gradient reduce in XLA's schedule.
+    Accumulation dtype = param dtype (bf16 for the big archs; DESIGN.md §7
+    discusses the memory trade).
+    """
+
+    def loss_of(p, b):
+        return lm.loss_fn(cfg, p, b, moe_dispatch=moe_dispatch)
+
+    def train_step(params, opt_state, batch):
+        M = cfg.microbatches
+        if M > 1:
+            mb = {k: v.reshape((M, v.shape[0] // M) + v.shape[1:])
+                  for k, v in batch.items()}
+
+            def micro(acc, b):
+                (_, metrics), grads = jax.value_and_grad(
+                    loss_of, has_aux=True)(params, b)
+                acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype),
+                                   acc, grads)
+                return acc, metrics
+
+            acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+            grads, metrics_all = jax.lax.scan(micro, acc0, mb)
+            grads = jax.tree.map(lambda g: g / M, grads)
+            metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), metrics_all)
+        else:
+            (_, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, moe_dispatch: str = "einsum"):
+    def prefill_step(params, batch, caches):
+        return lm.prefill(cfg, params, batch, caches,
+                          moe_dispatch=moe_dispatch)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, moe_dispatch: str = "einsum"):
+    def decode_step(params, caches, token, pos):
+        logits, caches = lm.decode_step(cfg, params, token, caches, pos=pos,
+                                        moe_dispatch=moe_dispatch)
+        return logits, caches
+    return decode_step

@@ -1,0 +1,48 @@
+"""Straggler detection: per-step wall-time EWMA with a slow-step policy.
+
+At fleet scale one slow host serializes every collective; the standard
+mitigations are (a) replace/evict the host and re-map its shards, (b) shed
+non-critical work.  The monitor implements the detection and recommends an
+action; the driver wires it to the elastic re-mesh path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+__all__ = ["StragglerMonitor"]
+
+
+@dataclass
+class StragglerMonitor:
+    alpha: float = 0.2          # EWMA factor
+    warn_ratio: float = 1.5     # step slower than ratio x EWMA -> warn
+    remap_ratio: float = 2.5    # persistently slower -> recommend remap
+    patience: int = 3           # consecutive slow steps before remap
+    ewma: Optional[float] = None
+    slow_streak: int = 0
+    events: List[tuple] = field(default_factory=list)
+
+    def record(self, step: int, dt: float) -> Optional[str]:
+        if self.ewma is None:
+            self.ewma = dt
+            return None
+        action = None
+        if dt > self.remap_ratio * self.ewma:
+            self.slow_streak += 1
+            if self.slow_streak >= self.patience:
+                action = "remap"
+                self.slow_streak = 0
+            else:
+                action = "warn"
+        elif dt > self.warn_ratio * self.ewma:
+            self.slow_streak = 0
+            action = "warn"
+        else:
+            self.slow_streak = 0
+        # EWMA excludes extreme outliers so a single hiccup does not poison it
+        if dt < self.remap_ratio * self.ewma:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        if action:
+            self.events.append((step, dt, action))
+        return action

@@ -1,0 +1,148 @@
+"""Fault-tolerant training driver.
+
+Responsibilities: state init/resume, data feeding, stepping, checkpoint
+rotation, fault recovery (restore + restart), elastic re-mesh on node loss,
+straggler monitoring.  Runs on one CPU device (smoke/examples) and on real
+meshes unchanged — device placement flows through the partitioning layer.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint.manager import CheckpointManager
+from ..configs.base import ArchConfig, ShapeSpec
+from ..core import CartGrid, Stencil, get_mapper
+from ..data.synthetic import DataConfig, host_batch
+from ..models import lm
+from ..models.common import init_params
+from ..optim.adamw import AdamWConfig, init_opt_state
+from .fault import FaultInjector, SimulatedFault
+from .steps import make_train_step
+from .straggler import StragglerMonitor
+
+__all__ = ["Trainer", "TrainResult"]
+
+
+@dataclass
+class TrainResult:
+    steps_done: int
+    final_loss: float
+    losses: list
+    restarts: int
+    remaps: int
+    straggler_events: list
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, shape: ShapeSpec,
+                 opt_cfg: Optional[AdamWConfig] = None,
+                 data_cfg: Optional[DataConfig] = None,
+                 ckpt_dir: Optional[str] = None,
+                 ckpt_every: int = 20,
+                 fault: Optional[FaultInjector] = None,
+                 straggler: Optional[StragglerMonitor] = None,
+                 num_nodes: int = 1,
+                 seed: int = 0,
+                 moe_dispatch: str = "einsum"):
+        self.cfg, self.shape = cfg, shape
+        self.opt_cfg = opt_cfg or AdamWConfig(lr=1e-3, warmup_steps=10,
+                                              total_steps=1000)
+        self.data_cfg = data_cfg or DataConfig()
+        self.fault = fault or FaultInjector()
+        self.straggler = straggler or StragglerMonitor()
+        self.ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
+        self.ckpt_every = ckpt_every
+        self.seed = seed
+        self.num_nodes = num_nodes          # simulated node count (elastic)
+        self.alive_nodes = list(range(num_nodes))
+        self.remaps = 0
+        self._step_fn = jax.jit(make_train_step(cfg, self.opt_cfg,
+                                                moe_dispatch=moe_dispatch))
+
+    # ------------------------------------------------------------------
+    def _init_state(self):
+        specs = lm.param_specs(self.cfg)
+        params = init_params(specs, jax.random.PRNGKey(self.seed))
+        opt = init_opt_state(specs, self.opt_cfg)
+        return params, opt, 0
+
+    def _resume_or_init(self):
+        if self.ckpt is not None:
+            step, state = self.ckpt.restore()
+            if state is not None:
+                expected = set(lm.param_specs(self.cfg))
+                if set(state.get("params", {})) != expected:
+                    # checkpoint belongs to a different arch/config: ignore
+                    # rather than load garbage (defensive restore)
+                    return self._init_state()
+                params = {k: jnp.asarray(v) for k, v in state["params"].items()}
+                opt = {k: jnp.asarray(v) for k, v in state["opt"].items()}
+                return params, opt, int(step)
+        return self._init_state()
+
+    def _batch(self, step: int) -> Dict[str, jnp.ndarray]:
+        shards = [host_batch(self.cfg, self.shape, self.data_cfg, step, s,
+                             max(len(self.alive_nodes), 1))
+                  for s in range(max(len(self.alive_nodes), 1))]
+        return {k: jnp.asarray(np.concatenate([sh[k] for sh in shards]))
+                for k in shards[0]}
+
+    def _elastic_remap(self, lost_node: int) -> None:
+        """Drop a node and recompute the process-to-node mapping for the
+        survivors (the paper's heterogeneous-n_i path).  On real hardware
+        this would rebuild the jax Mesh from the surviving devices via
+        ``core.remap.mapped_device_array``; here we recompute the mapping
+        and shrink the data-parallel width."""
+        if lost_node in self.alive_nodes and len(self.alive_nodes) > 1:
+            self.alive_nodes.remove(lost_node)
+        self.remaps += 1
+        n = len(self.alive_nodes)
+        # re-run the mapper on the shrunken allocation to verify feasibility
+        grid = CartGrid((max(n, 1), 1))
+        st = Stencil.component(2, axes=[0])
+        get_mapper("hyperplane").assignment(grid, st, [1] * max(n, 1))
+
+    # ------------------------------------------------------------------
+    def run(self, num_steps: int, max_restarts: int = 5) -> TrainResult:
+        params, opt, start = self._resume_or_init()
+        losses = []
+        restarts = 0
+        step = start
+        while step < num_steps:
+            try:
+                self.fault.check(step)
+                t0 = time.perf_counter()
+                batch = self._batch(step)
+                params, opt, metrics = self._step_fn(params, opt, batch)
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+                action = self.straggler.record(step, dt)
+                if action == "remap":
+                    self.remaps += 1  # evict+remap recommendation honored
+                losses.append(loss)
+                step += 1
+                if self.ckpt is not None and (step % self.ckpt_every == 0
+                                              or step == num_steps):
+                    self.ckpt.save(step, {"params": params, "opt": opt},
+                                   meta={"arch": self.cfg.name})
+            except SimulatedFault as f:
+                restarts += 1
+                if restarts > max_restarts:
+                    raise
+                if f.kind == "node_loss":
+                    self._elastic_remap(f.node if f.node is not None else 0)
+                # restore from last durable state (or reinit)
+                params, opt, step = self._resume_or_init()
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return TrainResult(steps_done=step - start,
+                           final_loss=losses[-1] if losses else float("nan"),
+                           losses=losses, restarts=restarts,
+                           remaps=self.remaps,
+                           straggler_events=list(self.straggler.events))

@@ -1,0 +1,5 @@
+from .partition import (LOGICAL_DEFAULTS, ParamSpec, Partitioning,
+                        current_partitioning, shard, use_partitioning)
+
+__all__ = ["LOGICAL_DEFAULTS", "ParamSpec", "Partitioning",
+           "current_partitioning", "shard", "use_partitioning"]

@@ -1,0 +1,149 @@
+"""Logical-axis partitioning (MaxText-style, adapted).
+
+Model code annotates every parameter dimension and key activations with
+*logical* axis names ("batch", "fsdp", "tp", "vocab", ...).  A
+:class:`Partitioning` maps logical names to mesh axes and produces
+``PartitionSpec``s / ``NamedSharding``s.  Two robustness rules:
+
+  * divisibility fallback: a dim whose size is not divisible by the mesh
+    axis size is replicated instead (recorded in ``fallbacks``) — this is
+    what lets odd head counts (yi-34b's 56 heads) compile on a fixed 16-way
+    model axis;
+  * outside a mesh context (CPU smoke tests) all constraints are no-ops.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["Partitioning", "ParamSpec", "LOGICAL_DEFAULTS", "shard",
+           "current_partitioning", "use_partitioning"]
+
+AxisAssign = Optional[Union[str, Tuple[str, ...]]]
+
+# default logical -> mesh-axis rules for the production meshes
+LOGICAL_DEFAULTS: Dict[str, AxisAssign] = {
+    "batch": ("pod", "data"),      # activation batch
+    "fsdp": ("pod", "data"),       # weight dim sharded ZeRO-style; the pod
+                                   # axis drops out automatically on the
+                                   # single-pod mesh (spec() filters axes)
+    "tp": ("model",),              # tensor-parallel weight dim
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "expert": ("model",),          # expert-parallel axis
+    "embed": None,                 # d_model usually replicated in activations
+    "seq": None,                   # sequence (context-parallel when set)
+    "stage": None,                 # pipeline stage axis (when PP enabled)
+    None: None,
+}
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """Allocation-free parameter description (drives init, sharding and the
+    dry-run's ShapeDtypeStructs)."""
+    shape: Tuple[int, ...]
+    dtype: object
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"       # normal | zeros | ones | scaled
+    init_scale: float = 1.0
+
+    def __post_init__(self):
+        if len(self.logical) != len(self.shape):
+            raise ValueError(f"logical axes {self.logical} rank != shape {self.shape}")
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+
+@dataclass
+class Partitioning:
+    mesh: Optional[Mesh] = None
+    rules: Dict[str, AxisAssign] = field(default_factory=lambda: dict(LOGICAL_DEFAULTS))
+    fallbacks: list = field(default_factory=list)
+
+    def _axis_size(self, axes: Tuple[str, ...]) -> int:
+        if self.mesh is None:
+            return 1
+        return int(np.prod([self.mesh.shape[a] for a in axes]))
+
+    def spec(self, logical: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+        """PartitionSpec for logical dim names, with divisibility fallback
+        and first-come-first-served mesh-axis conflict resolution (a mesh
+        axis may appear once per tensor: e.g. MoE weights annotated
+        ("expert", "fsdp", "tp") use the model axis for "expert" when the
+        expert count divides it — DeepSeek's 256 — and fall through to "tp"
+        sharding of d_ff when it doesn't — Mixtral's 8)."""
+        out = []
+        used: set = set()
+        for i, name in enumerate(logical):
+            assign = self.rules.get(name, None)
+            if assign is None:
+                out.append(None)
+                continue
+            axes = (assign,) if isinstance(assign, str) else tuple(assign)
+            # drop axes not present in the mesh (single-pod mesh has no
+            # "pod") and axes already consumed by an earlier dim
+            if self.mesh is not None:
+                axes = tuple(a for a in axes if a in self.mesh.shape)
+            axes = tuple(a for a in axes if a not in used)
+            if not axes:
+                out.append(None)
+                continue
+            if shape is not None and self.mesh is not None:
+                size = self._axis_size(axes)
+                if shape[i] % size != 0:
+                    self.fallbacks.append((tuple(shape), i, name, axes))
+                    out.append(None)
+                    continue
+            used.update(axes)
+            out.append(axes[0] if len(axes) == 1 else axes)
+        return P(*out)
+
+    def sharding(self, logical: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(logical, shape))
+
+    def constrain(self, x, *logical: Optional[str]):
+        """with_sharding_constraint when a mesh is active, else identity."""
+        if self.mesh is None or getattr(self.mesh, "empty", False):
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(logical, x.shape)))
+
+
+# ---------------------------------------------------------------------------
+# ambient partitioning context (so model code stays framework-free)
+_CURRENT: list = [Partitioning(mesh=None)]
+
+
+def current_partitioning() -> Partitioning:
+    return _CURRENT[-1]
+
+
+class use_partitioning:
+    def __init__(self, part: Partitioning):
+        self.part = part
+
+    def __enter__(self):
+        _CURRENT.append(self.part)
+        return self.part
+
+    def __exit__(self, *exc):
+        _CURRENT.pop()
+
+
+def shard(x, *logical: Optional[str]):
+    """Constrain activation x to the ambient partitioning (no-op on CPU)."""
+    return current_partitioning().constrain(x, *logical)

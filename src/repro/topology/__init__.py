@@ -1,0 +1,3 @@
+from .machine import V5E_2POD, V5E_POD, MachineSpec
+
+__all__ = ["MachineSpec", "V5E_POD", "V5E_2POD"]

@@ -1,0 +1,77 @@
+"""Physical machine model (TPU analog of the paper's compute-node cluster).
+
+The paper's abstraction: N nodes of n cores, fast intra-node / slow
+inter-node communication.  Ours: ``num_pods`` pods of ``chips_per_pod``
+chips; within a pod chips sit on a 2-d ICI torus with per-link bandwidth
+``ici_bw``; pods are connected by DCI with per-chip bandwidth ``dci_bw``
+(slower, the analog of the inter-node network).
+
+Default constants are TPU v5e (the assignment's roofline constants):
+197 TFLOP/s bf16, 819 GB/s HBM, 16 GiB HBM, ~50 GB/s per ICI link.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["MachineSpec", "V5E_POD", "V5E_2POD"]
+
+
+@dataclass(frozen=True)
+class MachineSpec:
+    name: str = "tpu-v5e"
+    num_pods: int = 1
+    torus: Tuple[int, ...] = (16, 16)        # intra-pod ICI torus shape
+    peak_flops_bf16: float = 197e12          # per chip
+    hbm_bw: float = 819e9                    # bytes/s per chip
+    hbm_bytes: float = 16 * 2**30            # per chip
+    ici_bw: float = 50e9                     # bytes/s per ICI link (per dir)
+    dci_bw: float = 6.25e9                   # bytes/s per chip across pods
+    vmem_bytes: float = 128 * 2**20          # VMEM per chip (v5e ~128MB)
+
+    @property
+    def chips_per_pod(self) -> int:
+        return int(math.prod(self.torus))
+
+    @property
+    def num_chips(self) -> int:
+        return self.num_pods * self.chips_per_pod
+
+    # -- chip addressing ----------------------------------------------------
+    def pod_of(self, chip: int) -> int:
+        return chip // self.chips_per_pod
+
+    def torus_coord(self, chip: int) -> Tuple[int, ...]:
+        return tuple(int(c) for c in
+                     np.unravel_index(chip % self.chips_per_pod, self.torus))
+
+    def node_sizes(self) -> list[int]:
+        """The paper's N x n allocation: pods as nodes."""
+        return [self.chips_per_pod] * self.num_pods
+
+    def torus_hop_path(self, a: int, b: int) -> list[Tuple[int, Tuple[int, ...], int]]:
+        """Dimension-ordered shortest-path routing between two chips in the
+        same pod.  Returns a list of directed link identifiers
+        ``(axis, from_coord, direction)`` traversed."""
+        assert self.pod_of(a) == self.pod_of(b)
+        ca, cb = list(self.torus_coord(a)), list(self.torus_coord(b))
+        links = []
+        for ax, size in enumerate(self.torus):
+            while ca[ax] != cb[ax]:
+                fwd = (cb[ax] - ca[ax]) % size
+                bwd = (ca[ax] - cb[ax]) % size
+                step = +1 if fwd <= bwd else -1
+                links.append((ax, tuple(ca), step))
+                ca[ax] = (ca[ax] + step) % size
+        return links
+
+    def __post_init__(self):
+        if self.num_pods < 1 or self.chips_per_pod < 1:
+            raise ValueError("machine must have at least one pod and one chip")
+
+
+V5E_POD = MachineSpec(name="tpu-v5e-256", num_pods=1, torus=(16, 16))
+V5E_2POD = MachineSpec(name="tpu-v5e-2x256", num_pods=2, torus=(16, 16))

@@ -1,0 +1,15 @@
+import os
+import sys
+
+# Tests must see exactly ONE device (the dry-run alone uses 512 fake ones).
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,74 @@
+"""Checkpoint I/O + manager: roundtrip, atomicity, corruption, rotation."""
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_arrays, save_arrays
+
+
+def _state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"params": {"layers/w": rng.standard_normal((4, 8)).astype(np.float32),
+                       "embed": rng.standard_normal((16, 4)).astype(np.float32)},
+            "opt": {"m/layers/w": np.zeros((4, 8), np.float32),
+                    "count": np.asarray(7, np.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    state = _state()
+    mgr.save(10, state)
+    step, restored = mgr.restore()
+    assert step == 10
+    np.testing.assert_array_equal(restored["params"]["layers/w"],
+                                  state["params"]["layers/w"])
+    np.testing.assert_array_equal(restored["opt"]["count"], 7)
+
+
+def test_uncommitted_checkpoint_ignored(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    mgr.save(10, _state())
+    mgr.save(20, _state(1))
+    (mgr.path(20) / "COMMIT").unlink()  # simulate crash mid-publish
+    step, _ = mgr.restore()
+    assert step == 10
+
+
+def test_corrupted_checkpoint_falls_back(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=5, async_save=False)
+    mgr.save(10, _state())
+    mgr.save(20, _state(1))
+    # corrupt step 20's payload but keep META/COMMIT
+    f = mgr.path(20) / "host0.npz"
+    data = bytearray(f.read_bytes())
+    data[100:200] = b"\x00" * 100
+    f.write_bytes(bytes(data))
+    step, restored = mgr.restore()
+    assert step == 10 and restored is not None
+
+
+def test_rotation_keeps_last_k(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2, async_save=False)
+    for s in (10, 20, 30, 40):
+        mgr.save(s, _state(s))
+    assert mgr.steps() == [30, 40]
+
+
+def test_async_save_then_restore(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=True)
+    mgr.save(5, _state())
+    mgr.wait()
+    assert mgr.latest_step() == 5
+
+
+def test_digest_detects_bitflip(tmp_path):
+    save_arrays(tmp_path / "c", {"x": np.arange(100, dtype=np.float32)})
+    # flip a byte in the payload
+    f = tmp_path / "c" / "host0.npz"
+    data = bytearray(f.read_bytes())
+    data[-10] ^= 0xFF
+    f.write_bytes(bytes(data))
+    with pytest.raises(Exception):
+        load_arrays(tmp_path / "c")

@@ -1,0 +1,67 @@
+"""Decode consistency: teacher-forced forward logits must match the
+prefill + decode_step path for every architecture family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_arch
+from repro.models import lm
+from repro.models.lm import _encode
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_decode_matches_forward(arch):
+    cfg = get_arch(arch).reduced()
+    if cfg.n_experts:
+        # avoid MoE capacity drops (decode never drops; forward would)
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    key = jax.random.PRNGKey(0)
+    params = lm.init(cfg, key)
+    B, S = 2, 12
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    batch = {"inputs": toks, "targets": toks}
+    if cfg.family == "encdec":
+        batch["src"] = jax.random.normal(key, (B, cfg.src_len, cfg.d_model))
+    if cfg.num_patches:
+        batch["patches"] = jax.random.normal(key, (B, cfg.num_patches,
+                                                   cfg.d_model))
+    npz = cfg.num_patches or 0
+    logits_full, _, _ = lm.forward(cfg, params, batch)
+    caches = lm.init_caches(cfg, B, max_len=S + 8 + npz)
+    pre = {k: (v[:, :S - 2] if k in ("inputs", "targets") else v)
+           for k, v in batch.items()}
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out, _ = _encode(cfg, params, batch["src"])
+    lg, caches = lm.prefill(cfg, params, pre, caches)
+    # vocab-padding mask only applies on the serve path
+    ref = jnp.where(jnp.arange(cfg.vocab_padded) < cfg.vocab,
+                    logits_full[:, S - 3], -1e30)
+    assert float(jnp.max(jnp.abs(lg - ref))) < 5e-3
+    lg1, caches = lm.decode_step(cfg, params, toks[:, S - 2], caches,
+                                 enc_out=enc_out,
+                                 pos=jnp.asarray(S - 2 + npz, jnp.int32))
+    ref1 = jnp.where(jnp.arange(cfg.vocab_padded) < cfg.vocab,
+                     logits_full[:, S - 2], -1e30)
+    assert float(jnp.max(jnp.abs(lg1 - ref1))) < 5e-3
+
+
+def test_two_step_decode_chain():
+    cfg = get_arch("qwen3-8b").reduced()
+    key = jax.random.PRNGKey(3)
+    params = lm.init(cfg, key)
+    B, S = 1, 10
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    logits_full, _, _ = lm.forward(cfg, params,
+                                   {"inputs": toks, "targets": toks})
+    caches = lm.init_caches(cfg, B, max_len=S + 4)
+    lg, caches = lm.prefill(cfg, params, {"inputs": toks[:, :S - 3],
+                                          "targets": toks[:, :S - 3]}, caches)
+    for i in range(3):
+        pos = S - 3 + i
+        lg, caches = lm.decode_step(cfg, params, toks[:, pos], caches,
+                                    pos=jnp.asarray(pos, jnp.int32))
+        err = float(jnp.max(jnp.abs(lg - logits_full[:, pos])))
+        assert err < 5e-3, (i, err)

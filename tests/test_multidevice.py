@@ -1,0 +1,128 @@
+"""Multi-device integration (subprocess with 8 XLA host devices): mapped
+mesh construction, sharded train-step lower+compile (mini dry-run), and a
+real shard_map halo exchange matching its oracle."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+def run_py(code: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_mapped_mesh_and_sharded_train_step():
+    print(run_py("""
+        import jax, numpy as np, json
+        import jax.numpy as jnp
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.core import Stencil, get_mapper, mapped_device_array
+        from repro.configs import get_arch
+        from repro.configs.base import ShapeSpec
+        from repro.launch.input_specs import build_cell
+        from repro.sharding.partition import use_partitioning
+
+        # mapped 4x2 mesh over 2 'pods' of 4 chips
+        st = Stencil.nearest_neighbor(2)
+        arr = mapped_device_array(jax.devices(), get_mapper('stencil_strips'),
+                                  (4, 2), st, chips_per_pod=4)
+        mesh = Mesh(arr, ('data', 'model'))
+        assert arr.shape == (4, 2)
+
+        cfg = get_arch('qwen3-8b').reduced()
+        shape = ShapeSpec('mini', seq_len=32, global_batch=8, kind='train')
+        cell = build_cell(cfg, shape, mesh)
+        with mesh, use_partitioning(cell.partitioning):
+            jf = jax.jit(cell.step_fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings)
+            compiled = jf.lower(*cell.args).compile()
+        ma = compiled.memory_analysis()
+        print(json.dumps({'arg_mb': ma.argument_size_in_bytes / 2**20,
+                          'ok': True}))
+    """))
+
+
+def test_real_sharded_execution_runs():
+    out = run_py("""
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from repro.configs import get_arch
+        from repro.configs.base import ShapeSpec
+        from repro.launch.input_specs import build_cell
+        from repro.models import lm
+        from repro.models.common import init_params
+        from repro.optim.adamw import AdamWConfig, init_opt_state
+        from repro.sharding.partition import use_partitioning
+        from jax.sharding import Mesh
+
+        mesh = jax.make_mesh((4, 2), ('data', 'model'),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        cfg = get_arch('granite-3-8b').reduced()
+        shape = ShapeSpec('mini', seq_len=32, global_batch=8, kind='train')
+        cell = build_cell(cfg, shape, mesh)
+        with mesh, use_partitioning(cell.partitioning):
+            params = init_params(lm.param_specs(cfg), jax.random.PRNGKey(0))
+            opt = init_opt_state(lm.param_specs(cfg), AdamWConfig())
+            batch = {'inputs': jnp.zeros((8, 32), jnp.int32),
+                     'targets': jnp.zeros((8, 32), jnp.int32)}
+            params = jax.device_put(params, cell.in_shardings[0])
+            opt = jax.device_put(opt, cell.in_shardings[1])
+            batch = jax.device_put(batch, cell.in_shardings[2])
+            jf = jax.jit(cell.step_fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings)
+            p1, o1, metrics = jf(params, opt, batch)
+            loss = float(metrics['loss'])
+        assert np.isfinite(loss), loss
+        print('loss', loss)
+    """)
+    assert "loss" in out
+
+
+def test_halo_exchange_shard_map_matches_roll():
+    """The paper's MPI_Neighbor_alltoall analog: ppermute halo exchange on a
+    1-d ring of 8 devices equals jnp.roll on the global array."""
+    out = run_py("""
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+
+        mesh = jax.make_mesh((8,), ('x',),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        n = 64
+        x = jnp.arange(n, dtype=jnp.float32)
+
+        def halo_step(u):
+            left = jax.lax.ppermute(u[-1:], 'x',
+                                    [(i, (i + 1) % 8) for i in range(8)])
+            right = jax.lax.ppermute(u[:1], 'x',
+                                     [(i, (i - 1) % 8) for i in range(8)])
+            return left + right + 0 * u[:1]  # just prove neighbor data moves
+
+        f = shard_map(lambda u: jnp.concatenate(
+                [jax.lax.ppermute(u[-1:], 'x', [(i, (i+1) % 8) for i in range(8)]),
+                 u,
+                 jax.lax.ppermute(u[:1], 'x', [(i, (i-1) % 8) for i in range(8)])]),
+            mesh=mesh, in_specs=P('x'), out_specs=P('x'))
+        padded = f(x)
+        padded = np.asarray(padded).reshape(8, 10)
+        shard = np.asarray(x).reshape(8, 8)
+        for i in range(8):
+            assert padded[i, 0] == shard[(i - 1) % 8, -1]
+            assert padded[i, -1] == shard[(i + 1) % 8, 0]
+            np.testing.assert_array_equal(padded[i, 1:-1], shard[i])
+        print('halo ok')
+    """)
+    assert "halo ok" in out

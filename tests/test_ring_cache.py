@@ -1,0 +1,92 @@
+"""Beyond-paper features: SWA ring KV cache, byte-weighted mappers,
+hierarchical intra-node layout ordering (EXPERIMENTS.md §Perf)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core import CartGrid, Stencil, device_layout, get_mapper, layout_cost
+from repro.models import lm
+
+
+def test_ring_cache_matches_dense_decode_chain():
+    """Decode chains through a window-sized ring cache bit-match the dense
+    full-length cache once everything older than the window is masked."""
+    key = jax.random.PRNGKey(0)
+    base = dataclasses.replace(get_arch("mixtral-8x7b").reduced(),
+                               capacity_factor=8.0, sliding_window=8)
+    ring = dataclasses.replace(base, swa_ring_cache=True)
+    params = lm.init(base, key)
+    B, S = 2, 24
+    toks = jax.random.randint(key, (B, S), 0, base.vocab)
+
+    def chain(cfg, n_pre):
+        caches = lm.init_caches(cfg, B, max_len=S + 4)
+        lg, caches = lm.prefill(cfg, params,
+                                {"inputs": toks[:, :n_pre],
+                                 "targets": toks[:, :n_pre]}, caches)
+        outs = [lg]
+        for i in range(n_pre, S):
+            lg, caches = lm.decode_step(cfg, params, toks[:, i], caches,
+                                        pos=jnp.asarray(i, jnp.int32))
+            outs.append(lg)
+        return jnp.stack(outs)
+
+    # prefill longer than the window exercises the ring roll-in too
+    dense = chain(base, 12)
+    ringo = chain(ring, 12)
+    assert float(jnp.max(jnp.abs(dense - ringo))) < 1e-3
+
+
+def test_ring_cache_allocation_is_window_sized():
+    ring = dataclasses.replace(get_arch("mixtral-8x7b").reduced(),
+                               sliding_window=8, swa_ring_cache=True)
+    caches = lm.init_caches(ring, batch=2, max_len=100)
+    seq_dims = {l.shape[2] for l in jax.tree.leaves(caches)
+                if hasattr(l, "ndim") and l.ndim == 5}
+    assert seq_dims == {8}  # (layers, B, S_alloc, K, hd)
+
+
+# -- byte-weighted mapping (beyond-paper) ------------------------------------
+def test_weighted_mapper_prefers_light_axis_cut():
+    """Axis 0 carries 100x the bytes of axis 1: the weighted hyperplane must
+    cut across axis 1 (cheap) even though unit-weight Eq.(2) is indifferent."""
+    st = Stencil(((1, 0), (-1, 0), (0, 1), (0, -1)),
+                 weights=(100.0, 100.0, 1.0, 1.0))
+    grid = CartGrid((8, 8))
+    sizes = [32, 32]
+    jw = get_mapper("hyperplane", weighted=True).cost(grid, st, sizes,
+                                                      weighted=True)
+    ju = get_mapper("hyperplane").cost(grid, st, sizes, weighted=True)
+    assert jw.j_sum <= ju.j_sum
+    # weighted cut crosses only light edges: 8 pairs x 2 dir x w=1 = 16
+    assert jw.j_sum == 16.0
+
+
+def test_weighted_kdtree_splits_heavy_axis_last():
+    st = Stencil(((1, 0), (-1, 0), (0, 1), (0, -1)),
+                 weights=(100.0, 100.0, 1.0, 1.0))
+    grid = CartGrid((8, 8))
+    jw = get_mapper("kdtree", weighted=True).cost(grid, st, [32, 32],
+                                                  weighted=True)
+    ju = get_mapper("kdtree").cost(grid, st, [32, 32], weighted=True)
+    assert jw.j_sum <= ju.j_sum
+
+
+# -- hierarchical intra-node order (beyond-paper) -----------------------------
+def test_rowmajor_intra_order_preserves_node_assignment():
+    st = Stencil.nearest_neighbor(2)
+    sizes = [32, 32]
+    L1 = device_layout(get_mapper("hyperplane"), (8, 8), st, sizes)
+    L2 = device_layout(get_mapper("hyperplane"), (8, 8), st, sizes,
+                       intra_order="rowmajor")
+    # same J (node assignment unchanged) ...
+    assert layout_cost(L1, st, sizes).j_sum == layout_cost(L2, st, sizes).j_sum
+    # ... but rowmajor order is monotone within each node
+    owner = np.repeat([0, 1], 32)
+    for nd in (0, 1):
+        chips = L2.reshape(-1)[owner[L2.reshape(-1)] == nd]
+        assert list(chips) == sorted(chips)
+    assert sorted(L2.reshape(-1).tolist()) == list(range(64))
