@@ -94,17 +94,26 @@ def main():
     ap.add_argument("--cell", default=None)
     ap.add_argument("--list", action="store_true")
     ap.add_argument("--out", default="runs/perf")
+    ap.add_argument("--mappers", default="blocked,stencil_strips",
+                    help="comma list; any name get_mapper resolves")
+    ap.add_argument("--refine", action="store_true",
+                    help="also route collectives over swap-refined layouts "
+                         "(core.refine local search on top of each mapper)")
     args = ap.parse_args()
     if args.list or not args.cell:
         print("cells:", ", ".join(CELLS))
         return
     spec = CELLS[args.cell]
+    mappers = tuple(args.mappers.split(","))
+    if args.refine:
+        mappers += tuple(f"refined:{m}" for m in mappers
+                         if not m.startswith("refined:"))
     out = Path(args.out)
     out.mkdir(parents=True, exist_ok=True)
     results = []
     for name, kw in spec["variants"]:
         r = run_cell(spec["arch"], spec["shape"], spec["multi"],
-                     mappers=("blocked", "stencil_strips"), verbose=False,
+                     mappers=mappers, verbose=False,
                      **kw)
         results.append({"variant": name, **r})
         print(fmt_row(name, r), flush=True)

@@ -1,0 +1,152 @@
+"""Base-vs-refined mapper comparison: J_sum, J_max, and wall-time.
+
+For every (grid shape, node layout, stencil) instance, run each applicable
+base mapper and its ``refined:<base>`` variant and report the cost drop and
+the refinement overhead.  Node layouts include ragged tails (elastic pods
+after failures) — the heterogeneous case Nodecart cannot handle but the
+refiner improves for free.
+
+  PYTHONPATH=src python -m benchmarks.refine_suite            # full sweep
+  PYTHONPATH=src python -m benchmarks.refine_suite --tiny     # smoke (<5 s)
+  PYTHONPATH=src python -m benchmarks.refine_suite --json out.json
+"""
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import (CartGrid, MapperInapplicable, Stencil, evaluate,
+                        get_mapper)
+from repro.core.mapping import MAPPERS
+
+# (label, dims, node_sizes) — ragged tails marked by uneven sizes
+INSTANCES = [
+    ("2d-48x48-hom", (48, 48), [48] * 48),
+    ("2d-50x48-hom", (50, 48), [48] * 50),
+    ("2d-16x28-ragged", (16, 28), [256, 192]),
+    ("3d-8x8x8-hom", (8, 8, 8), [64] * 8),
+    ("3d-12x8x8-ragged", (12, 8, 8), [128] * 5 + [96, 32]),
+]
+TINY_INSTANCES = [
+    ("2d-8x8-hom", (8, 8), [16] * 4),
+    ("2d-6x8-ragged", (6, 8), [16, 16, 10, 6]),
+    ("3d-4x4x4-hom", (4, 4, 4), [16] * 4),
+]
+
+STENCILS = {
+    "nn": Stencil.nearest_neighbor,       # 2D 5-point / 3D 7-point
+    "comp": Stencil.component,
+    "hops": Stencil.nn_with_hops,
+}
+
+
+def run(tiny: bool = False, mappers=None, refine_kwargs=None):
+    """Returns one row per (instance, stencil, mapper)."""
+    instances = TINY_INSTANCES if tiny else INSTANCES
+    mappers = mappers or sorted(MAPPERS)
+    refine_kwargs = refine_kwargs or {}
+    rows = []
+    for label, dims, sizes in instances:
+        grid = CartGrid(dims)
+        for sname, sfn in STENCILS.items():
+            stencil = sfn(grid.ndim)
+            for mname in mappers:
+                try:
+                    t0 = time.perf_counter()
+                    base_assign = get_mapper(mname).assignment(grid, stencil,
+                                                               sizes)
+                    t_base = time.perf_counter() - t0
+                except MapperInapplicable:
+                    continue
+                base = evaluate(grid, stencil, base_assign,
+                                num_nodes=len(sizes))
+                refined_mapper = get_mapper(f"refined:{mname}",
+                                            **refine_kwargs)
+                t0 = time.perf_counter()
+                ref_assign = refined_mapper.assignment(grid, stencil, sizes)
+                t_total = time.perf_counter() - t0
+                ref = evaluate(grid, stencil, ref_assign,
+                               num_nodes=len(sizes))
+                rr = refined_mapper.last_result
+                rows.append({
+                    "instance": label, "stencil": sname, "mapper": mname,
+                    "j_sum_base": base.j_sum, "j_sum_refined": ref.j_sum,
+                    "j_max_base": base.j_max, "j_max_refined": ref.j_max,
+                    "swaps": rr.swaps, "passes": rr.passes,
+                    "t_base_s": t_base, "t_refine_s": rr.wall_time_s,
+                    "t_total_s": t_total,
+                })
+    return rows
+
+
+def validate_claims(rows, objective="j_sum"):
+    """Machine-checkable verdicts mirroring benchmarks.run conventions.
+
+    Under the j_max objective the refiner optimizes (J_max, J_sum)
+    lexicographically — J_sum alone may grow — so the no-worse claim is
+    checked on the metric actually optimized.
+    """
+    claims = []
+    if objective == "j_max":
+        worse = [r for r in rows
+                 if (r["j_max_refined"], r["j_sum_refined"])
+                 > (r["j_max_base"], r["j_sum_base"])]
+        label = "refined (J_max, J_sum) <= base"
+    else:
+        worse = [r for r in rows if r["j_sum_refined"] > r["j_sum_base"]]
+        label = "refined J_sum <= base"
+    claims.append(("PASS" if not worse else "FAIL")
+                  + f": {label} on all {len(rows)} rows"
+                  + (f" (violations: {[(r['instance'], r['mapper']) for r in worse]})"
+                     if worse else ""))
+    key = "j_max" if objective == "j_max" else "j_sum"
+    improved = [r for r in rows
+                if r["mapper"] == "random" and
+                r[f"{key}_refined"] < r[f"{key}_base"]]
+    total_random = [r for r in rows if r["mapper"] == "random"]
+    claims.append(("PASS" if len(improved) == len(total_random) else "FAIL")
+                  + f": refinement improves random's {key} on "
+                  f"{len(improved)}/{len(total_random)} instances")
+    return claims
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true", help="smoke subset")
+    ap.add_argument("--mappers", default=None,
+                    help="comma list (default: all registered)")
+    ap.add_argument("--policy", default="first",
+                    choices=["first", "steepest"])
+    ap.add_argument("--objective", default="j_sum",
+                    choices=["j_sum", "j_max"])
+    ap.add_argument("--json", default=None, help="also dump rows as JSON")
+    args = ap.parse_args()
+
+    rows = run(tiny=args.tiny,
+               mappers=args.mappers.split(",") if args.mappers else None,
+               refine_kwargs={"policy": args.policy,
+                              "objective": args.objective})
+    hdr = (f"{'instance':18s} {'stencil':8s} {'mapper':16s} "
+           f"{'J_sum':>7s} {'->ref':>7s} {'J_max':>6s} {'->ref':>6s} "
+           f"{'swaps':>5s} {'t_map':>9s} {'t_ref':>9s}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['instance']:18s} {r['stencil']:8s} {r['mapper']:16s} "
+              f"{r['j_sum_base']:7.0f} {r['j_sum_refined']:7.0f} "
+              f"{r['j_max_base']:6.0f} {r['j_max_refined']:6.0f} "
+              f"{r['swaps']:5d} {r['t_base_s']*1e3:7.1f}ms "
+              f"{r['t_refine_s']*1e3:7.1f}ms")
+    print()
+    claims = validate_claims(rows, objective=args.objective)
+    for c in claims:
+        print("# " + c)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1, default=float)
+    if any(c.startswith("FAIL") for c in claims):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

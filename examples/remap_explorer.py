@@ -40,6 +40,8 @@ def main():
                     choices=sorted(STENCILS))
     ap.add_argument("--show", default="stencil_strips",
                     help="algorithm to draw (or 'all')")
+    ap.add_argument("--refine", action="store_true",
+                    help="also show each algorithm's swap-refined variant")
     args = ap.parse_args()
 
     grid = CartGrid(dims_create(args.nodes * args.ppn, args.dims))
@@ -47,23 +49,35 @@ def main():
     sizes = [args.ppn] * args.nodes
     print(f"grid {grid.dims}, stencil {args.stencil} (k={stencil.k}), "
           f"{args.nodes} nodes x {args.ppn}\n")
-    print(f"{'algorithm':16s} {'J_sum':>8s} {'J_max':>8s} {'time':>10s}")
+    print(f"{'algorithm':24s} {'J_sum':>8s} {'J_max':>8s} {'time':>10s}")
     results = {}
-    for algo in ("blocked", "hyperplane", "kdtree", "stencil_strips",
-                 "nodecart", "graphgreedy", "random"):
-        mapper = (get_mapper(algo, max_passes=4) if algo == "graphgreedy"
-                  else get_mapper(algo))
+    algos = ["blocked", "hyperplane", "kdtree", "stencil_strips",
+             "nodecart", "graphgreedy", "random"]
+    if args.refine:
+        algos += [f"refined:{a}" for a in algos]
+
+    def make_mapper(name):
+        # same base config in the bare and refined rows (graphgreedy's
+        # max_passes would otherwise go to the refiner, not the base)
+        if name.startswith("refined:"):
+            from repro.core import RefinedMapper
+            return RefinedMapper(make_mapper(name.split(":", 1)[1]))
+        return (get_mapper(name, max_passes=4) if name == "graphgreedy"
+                else get_mapper(name))
+
+    for algo in algos:
+        mapper = make_mapper(algo)
         t0 = time.perf_counter()
         try:
             assignment = mapper.assignment(grid, stencil, sizes)
         except MapperInapplicable as e:
-            print(f"{algo:16s} {'n/a':>8s} {'n/a':>8s}  ({e})")
+            print(f"{algo:24s} {'n/a':>8s} {'n/a':>8s}  ({e})")
             continue
         dt = time.perf_counter() - t0
         from repro.core import evaluate
         c = evaluate(grid, stencil, assignment, num_nodes=args.nodes)
         results[algo] = assignment
-        print(f"{algo:16s} {c.j_sum:8.0f} {c.j_max:8.0f} {dt*1e6:8.0f}us")
+        print(f"{algo:24s} {c.j_sum:8.0f} {c.j_max:8.0f} {dt*1e6:8.0f}us")
 
     to_show = list(results) if args.show == "all" else [args.show]
     for algo in to_show:

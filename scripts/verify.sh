@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Tier-1 verify: fast test suite + a smoke run of the refinement benchmark.
+# No PYTHONPATH needed — pytest.ini sets pythonpath=src, and the benchmark
+# is invoked with an explicit PYTHONPATH below.
+#
+#   scripts/verify.sh          # tier-1 (default, < ~2 min)
+#   scripts/verify.sh --slow   # additionally run the -m slow tests
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pytest -x -q
+
+if [[ "${1:-}" == "--slow" ]]; then
+    python -m pytest -q -m slow
+fi
+
+PYTHONPATH=src python -m benchmarks.refine_suite --tiny
+echo "verify OK"

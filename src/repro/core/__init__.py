@@ -1,19 +1,25 @@
 """Core library: the paper's contribution — stencil-aware process-to-node
 mapping for Cartesian grids (Hunold et al., CS.DC 2020)."""
 from .cost import MappingCost, blocked_assignment, evaluate, node_of_rank_blocked
+from .cost_delta import Delta, IncrementalCost, NeighborTable
 from .grid import CartGrid, dims_create
-from .mapping import (MAPPERS, BlockedMapper, GraphGreedyMapper,
-                      HyperplaneMapper, KDTreeMapper, Mapper,
-                      MapperInapplicable, NodecartMapper, RandomMapper,
-                      StencilStripsMapper, get_mapper)
+from .mapping import (MAPPERS, REFINED_PREFIX, BlockedMapper,
+                      GraphGreedyMapper, HyperplaneMapper, KDTreeMapper,
+                      Mapper, MapperInapplicable, NodecartMapper,
+                      RandomMapper, StencilStripsMapper, available_mappers,
+                      get_mapper)
+from .refine import RefinedMapper, RefineResult, SwapRefiner, refine_assignment
 from .remap import device_layout, layout_cost, mapped_device_array
 from .stencil import Stencil
 
 __all__ = [
     "CartGrid", "dims_create", "Stencil", "MappingCost", "evaluate",
     "blocked_assignment", "node_of_rank_blocked",
-    "Mapper", "MapperInapplicable", "MAPPERS", "get_mapper",
+    "Delta", "IncrementalCost", "NeighborTable",
+    "Mapper", "MapperInapplicable", "MAPPERS", "REFINED_PREFIX",
+    "get_mapper", "available_mappers",
     "BlockedMapper", "RandomMapper", "NodecartMapper", "HyperplaneMapper",
     "KDTreeMapper", "StencilStripsMapper", "GraphGreedyMapper",
+    "SwapRefiner", "RefineResult", "refine_assignment", "RefinedMapper",
     "device_layout", "layout_cost", "mapped_device_array",
 ]

@@ -1,0 +1,271 @@
+"""Incremental delta-evaluation of mapping cost (local-search engine).
+
+:func:`~repro.core.cost.evaluate` re-walks every (rank, offset) edge of the
+grid, which makes a local-search step O(p * k).  :class:`IncrementalCost`
+precomputes the stencil neighbour table once (one ``grid.shift_ranks`` call
+per offset, plus its inverse) and afterwards answers "what happens to
+J_sum / per-node load if position ``p`` moves from node ``a`` to node ``b``"
+by touching only the O(k) edges incident to the affected positions.
+
+State is kept as *integer* crossing counts per (node, offset), so the
+reconstructed ``j_sum`` matches a full recomputation bit-for-bit (same
+``total += w * count`` accumulation order as ``evaluate``), as does
+``per_node`` for unit weights.  For arbitrary float weights ``per_node``
+computes ``w * count`` where ``evaluate`` adds ``w`` count times — equal
+for dyadic/integer weights, otherwise within an ulp.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .cost import MappingCost
+from .grid import CartGrid
+from .stencil import Stencil
+
+__all__ = ["IncrementalCost", "NeighborTable", "Delta"]
+
+
+@dataclass(frozen=True)
+class NeighborTable:
+    """Per-offset forward and inverse neighbour lookups for one grid."""
+
+    #: (k, p) bool — does position i have an out-neighbour under offset j?
+    out_valid: np.ndarray
+    #: (k, p) int — the out-neighbour's position (garbage where invalid).
+    out_tgt: np.ndarray
+    #: (k, p) bool — does position i have an in-neighbour under offset j?
+    in_valid: np.ndarray
+    #: (k, p) int — the in-neighbour's position (garbage where invalid).
+    in_src: np.ndarray
+
+    @staticmethod
+    def build(grid: CartGrid, stencil: Stencil) -> "NeighborTable":
+        p, k = grid.size, stencil.k
+        out_valid = np.zeros((k, p), dtype=bool)
+        out_tgt = np.zeros((k, p), dtype=np.int64)
+        in_valid = np.zeros((k, p), dtype=bool)
+        in_src = np.zeros((k, p), dtype=np.int64)
+        for j, off in enumerate(stencil.offsets):
+            valid, tgt = grid.shift_ranks(off)
+            out_valid[j] = valid
+            out_tgt[j] = tgt
+            # a coordinate shift is injective on its valid domain, so the
+            # inverse is single-valued: in_src[j][tgt[q]] = q.
+            src = np.nonzero(valid)[0]
+            in_valid[j][tgt[src]] = True
+            in_src[j][tgt[src]] = src
+        return NeighborTable(out_valid, out_tgt, in_valid, in_src)
+
+
+@dataclass(frozen=True)
+class Delta:
+    """Effect of a proposed move/swap.  ``d_count_off[j]`` is the change in
+    the number of crossing edges under offset j; ``d_count_node`` maps
+    ``(node, offset) -> count change`` for the per-node outgoing loads."""
+
+    d_j_sum: float
+    d_count_off: np.ndarray                     # (k,) int64
+    d_count_node: Dict[Tuple[int, int], int]    # (node, offset) -> int
+
+
+class IncrementalCost:
+    """Mutable mapping-cost state with O(k) move/swap deltas.
+
+    Args:
+      node_of_pos: (p,) node id owning each grid position (row-major); a
+        private copy is taken.
+      weighted: use the stencil's per-offset byte weights (as in
+        ``evaluate(weighted=True)``).
+    """
+
+    def __init__(self, grid: CartGrid, stencil: Stencil,
+                 node_of_pos: np.ndarray, num_nodes: Optional[int] = None,
+                 weighted: bool = False):
+        node_of_pos = np.asarray(node_of_pos, dtype=np.int64)
+        if node_of_pos.shape != (grid.size,):
+            raise ValueError(f"node_of_pos must have shape ({grid.size},)")
+        self.grid = grid
+        self.stencil = stencil
+        self.table = NeighborTable.build(grid, stencil)
+        self.n_nodes = int(num_nodes if num_nodes is not None
+                           else node_of_pos.max() + 1)
+        self.weights = (stencil.weight_array() if weighted
+                        else np.ones(stencil.k))
+        self.node_of_pos = node_of_pos.copy()
+        # integer crossing counts: (k,) total and (N, k) per source node
+        k = stencil.k
+        self._count_off = np.zeros(k, dtype=np.int64)
+        self._count_node = np.zeros((self.n_nodes, k), dtype=np.int64)
+        for j in range(k):
+            valid, tgt = self.table.out_valid[j], self.table.out_tgt[j]
+            crossing = valid & (self.node_of_pos != self.node_of_pos[tgt])
+            self._count_off[j] = int(crossing.sum())
+            np.add.at(self._count_node[:, j], self.node_of_pos[crossing], 1)
+        self._per_node_cache: Optional[np.ndarray] = None
+
+    # -- read-only views ----------------------------------------------------
+    @property
+    def j_sum(self) -> float:
+        # identical accumulation order to evaluate(): total += w * count
+        total = 0.0
+        for j, w in enumerate(self.weights):
+            total += float(self.weights[j]) * float(self._count_off[j])
+        return total
+
+    def _per_node(self) -> np.ndarray:
+        # rebuilt from counts only after a commit (cache keeps repeated
+        # j_max queries between swaps at O(N) instead of O(N*k))
+        if self._per_node_cache is None:
+            per_node = np.zeros(self.n_nodes, dtype=np.float64)
+            for j, w in enumerate(self.weights):
+                per_node += w * self._count_node[:, j]
+            self._per_node_cache = per_node
+        return self._per_node_cache
+
+    @property
+    def per_node(self) -> np.ndarray:
+        return self._per_node().copy()
+
+    @property
+    def j_max(self) -> float:
+        return float(self._per_node().max(initial=0.0))
+
+    def cost(self) -> MappingCost:
+        per_node = self.per_node
+        bottleneck = int(per_node.argmax()) if self.n_nodes else 0
+        return MappingCost(j_sum=self.j_sum,
+                           j_max=float(per_node.max(initial=0.0)),
+                           per_node=per_node, bottleneck=bottleneck)
+
+    # -- edge enumeration ---------------------------------------------------
+    def _edges_touching(self, positions: Sequence[int]) \
+            -> List[Tuple[int, int, int]]:
+        """Directed stencil edges (src, dst, offset) with an endpoint in
+        ``positions``, each listed exactly once."""
+        S = set(int(p) for p in positions)
+        t = self.table
+        edges: List[Tuple[int, int, int]] = []
+        for s in S:
+            for j in range(self.stencil.k):
+                if t.out_valid[j, s]:
+                    edges.append((s, int(t.out_tgt[j, s]), j))
+                if t.in_valid[j, s]:
+                    src = int(t.in_src[j, s])
+                    if src not in S:   # else already listed as its out-edge
+                        edges.append((src, s, j))
+        return edges
+
+    def _delta(self, overrides: Dict[int, int]) -> Delta:
+        """Delta for reassigning ``overrides`` (position -> new node)."""
+        node = self.node_of_pos
+        d_count_off = np.zeros(self.stencil.k, dtype=np.int64)
+        d_count_node: Dict[Tuple[int, int], int] = {}
+
+        def bump(n: int, j: int, by: int):
+            key = (n, j)
+            d_count_node[key] = d_count_node.get(key, 0) + by
+
+        for (u, v, j) in self._edges_touching(tuple(overrides)):
+            old_u, old_v = int(node[u]), int(node[v])
+            new_u = overrides.get(u, old_u)
+            new_v = overrides.get(v, old_v)
+            if old_u != old_v:
+                d_count_off[j] -= 1
+                bump(old_u, j, -1)
+            if new_u != new_v:
+                d_count_off[j] += 1
+                bump(new_u, j, +1)
+        d_j_sum = 0.0
+        for j in range(self.stencil.k):
+            d_j_sum += float(self.weights[j]) * float(d_count_off[j])
+        return Delta(d_j_sum, d_count_off,
+                     {k: v for k, v in d_count_node.items() if v != 0})
+
+    # -- proposals ----------------------------------------------------------
+    def delta_move(self, pos: int, new_node: int) -> Delta:
+        """Delta if position ``pos`` is reassigned to ``new_node``.
+
+        Note a bare move changes the per-node cardinalities — mapping
+        pipelines that must respect the scheduler allocation should use
+        :meth:`delta_swap` instead.
+        """
+        if not 0 <= new_node < self.n_nodes:
+            raise ValueError(f"node {new_node} out of range")
+        return self._delta({int(pos): int(new_node)})
+
+    def delta_swap(self, p: int, q: int) -> Delta:
+        """Delta if positions ``p`` and ``q`` exchange owning nodes."""
+        p, q = int(p), int(q)
+        return self._delta({p: int(self.node_of_pos[q]),
+                            q: int(self.node_of_pos[p])})
+
+    def delta_swap_j_sum(self, p: int, q: int) -> float:
+        """J_sum-only fast path for swap proposals."""
+        return self.delta_swap(p, q).d_j_sum
+
+    def peek_per_node(self, delta: Delta) -> np.ndarray:
+        """per_node as it would be after applying ``delta`` (no mutation),
+        rebuilt from counts — exact w.r.t. the committed state."""
+        counts = self._count_node.copy()
+        for (n, j), by in delta.d_count_node.items():
+            counts[n, j] += by
+        per_node = np.zeros(self.n_nodes, dtype=np.float64)
+        for j in range(self.stencil.k):
+            per_node += self.weights[j] * counts[:, j]
+        return per_node
+
+    def peek_j_max(self, delta: Delta) -> float:
+        """j_max after ``delta``, O(N + touched): adjusts only the touched
+        nodes of the cached per_node (advisory — may differ from the exact
+        count-rebuilt value by an ulp for non-dyadic float weights)."""
+        per_node = self._per_node().copy()
+        for (n, j), by in delta.d_count_node.items():
+            per_node[n] += self.weights[j] * by
+        return float(per_node.max(initial=0.0))
+
+    # -- commits ------------------------------------------------------------
+    def _apply(self, overrides: Dict[int, int], delta: Delta) -> Delta:
+        self._count_off += delta.d_count_off
+        for (n, j), by in delta.d_count_node.items():
+            self._count_node[n, j] += by
+        for pos, n in overrides.items():
+            self.node_of_pos[pos] = n
+        self._per_node_cache = None
+        return delta
+
+    def apply_move(self, pos: int, new_node: int) -> Delta:
+        delta = self.delta_move(pos, new_node)
+        return self._apply({int(pos): int(new_node)}, delta)
+
+    def apply_swap(self, p: int, q: int) -> Delta:
+        p, q = int(p), int(q)
+        overrides = {p: int(self.node_of_pos[q]), q: int(self.node_of_pos[p])}
+        delta = self._delta(overrides)
+        return self._apply(overrides, delta)
+
+    # -- boundary extraction (the refiner's candidate set) -------------------
+    def boundary_positions(self) -> np.ndarray:
+        """Positions with at least one crossing incident edge, ascending."""
+        node, t = self.node_of_pos, self.table
+        on_boundary = np.zeros(self.grid.size, dtype=bool)
+        for j in range(self.stencil.k):
+            valid, tgt = t.out_valid[j], t.out_tgt[j]
+            crossing = valid & (node != node[tgt])
+            on_boundary |= crossing
+            # the target of a crossing out-edge is on the boundary too
+            on_boundary[tgt[crossing]] = True
+        return np.nonzero(on_boundary)[0]
+
+    def neighbors_of(self, pos: int) -> np.ndarray:
+        """Distinct stencil neighbours (out or in) of ``pos``, ascending."""
+        t, pos = self.table, int(pos)
+        out = t.out_tgt[t.out_valid[:, pos], pos]
+        inc = t.in_src[t.in_valid[:, pos], pos]
+        return np.unique(np.concatenate([out, inc]))
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (f"IncrementalCost(p={self.grid.size}, k={self.stencil.k}, "
+                f"N={self.n_nodes}, j_sum={self.j_sum})")

@@ -22,18 +22,41 @@ MAPPERS: Dict[str, Type[Mapper]] = {
     "graphgreedy": GraphGreedyMapper,
 }
 
+#: Prefix turning any registered mapper into its local-search variant.
+REFINED_PREFIX = "refined:"
+
 
 def get_mapper(name: str, **kwargs) -> Mapper:
+    """Instantiate a mapper by name.
+
+    ``"refined:<base>"`` wraps ``<base>`` with swap-refinement local search
+    (``kwargs`` then configure the refiner, not the base algorithm); the
+    prefix composes with every key in :data:`MAPPERS`.
+    """
+    if name.startswith(REFINED_PREFIX):
+        from ..refine import RefinedMapper
+        base = get_mapper(name[len(REFINED_PREFIX):])
+        return RefinedMapper(base, **kwargs)
     try:
         cls = MAPPERS[name]
     except KeyError:
-        raise KeyError(f"unknown mapper {name!r}; choose from {sorted(MAPPERS)}")
+        raise KeyError(
+            f"unknown mapper {name!r}; choose from {sorted(MAPPERS)} "
+            f"or '{REFINED_PREFIX}<base>'")
     return cls(**kwargs)
+
+
+def available_mappers(include_refined: bool = True) -> list:
+    """All resolvable mapper names (base + their refined variants)."""
+    names = sorted(MAPPERS)
+    if include_refined:
+        names += [REFINED_PREFIX + n for n in sorted(MAPPERS)]
+    return names
 
 
 __all__ = [
     "Mapper", "MapperInapplicable", "aggregate_node_size", "check_bijection",
     "BlockedMapper", "RandomMapper", "NodecartMapper", "HyperplaneMapper",
     "KDTreeMapper", "StencilStripsMapper", "GraphGreedyMapper",
-    "MAPPERS", "get_mapper",
+    "MAPPERS", "REFINED_PREFIX", "get_mapper", "available_mappers",
 ]

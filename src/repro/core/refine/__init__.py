@@ -1,0 +1,16 @@
+"""Local-search refinement of process-to-node mappings.
+
+The paper's mappers (§V) are one-shot constructions; related work
+(Glantz/Meyerhenke/Noe; Schulz/Träff "Better Process Mapping and Sparse
+Quadratic Assignment") shows that cheap pairwise-swap local search on top of
+a good initial mapping recovers most of the remaining J_sum/J_max gap.  This
+package supplies that pass: :class:`SwapRefiner` walks the partition
+boundary proposing node-exchanging swaps scored by the O(k) incremental
+engine (:class:`~repro.core.cost_delta.IncrementalCost`), and
+:class:`RefinedMapper` packages it as a drop-in :class:`~repro.core.mapping.Mapper`
+so ``get_mapper("refined:<base>")`` upgrades any registered algorithm.
+"""
+from .swap import RefineResult, SwapRefiner, refine_assignment
+from .mapper import RefinedMapper
+
+__all__ = ["SwapRefiner", "RefineResult", "refine_assignment", "RefinedMapper"]

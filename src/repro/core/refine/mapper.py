@@ -1,0 +1,63 @@
+"""`refined:<base>` — any registered mapper plus swap refinement.
+
+The wrapper runs the base algorithm, refines its node-of-position
+assignment with :class:`SwapRefiner`, then rebuilds a rank->coordinate
+bijection that realises the refined assignment while respecting the
+blocked scheduler allocation: node i's ranks take node i's grid positions
+in row-major position order (same convention as
+``remap.device_layout(intra_order="rowmajor")``).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+from ..cost import node_of_rank_blocked
+from ..grid import CartGrid
+from ..stencil import Stencil
+from ..mapping.base import Mapper
+from .swap import RefineResult, SwapRefiner
+
+__all__ = ["RefinedMapper"]
+
+
+class RefinedMapper(Mapper):
+    """Wrap ``base`` (a Mapper instance or registered name) with local search.
+
+    Keyword arguments are forwarded to :class:`SwapRefiner` unless an
+    explicit ``refiner`` is given.  Raises whatever the base raises
+    (``MapperInapplicable`` propagates so callers can fall back).
+    """
+
+    requires_homogeneous = False
+
+    def __init__(self, base: Union[Mapper, str] = "hyperplane",
+                 refiner: Optional[SwapRefiner] = None, **refiner_kwargs):
+        if isinstance(base, str):
+            from ..mapping import get_mapper
+            base = get_mapper(base)
+        if refiner is not None and refiner_kwargs:
+            raise ValueError("pass either refiner or refiner kwargs, not both")
+        self.base = base
+        self.refiner = refiner if refiner is not None \
+            else SwapRefiner(**refiner_kwargs)
+        self.name = f"refined:{base.name}"
+        self.last_result: Optional[RefineResult] = None
+
+    def coords(self, grid: CartGrid, stencil: Stencil,
+               node_sizes: Sequence[int]) -> np.ndarray:
+        node_of_pos = self.base.assignment(grid, stencil, node_sizes)
+        result = self.refiner.refine(grid, stencil, node_of_pos,
+                                     num_nodes=len(node_sizes))
+        self.last_result = result
+        refined = result.assignment
+        # blocked rank order is already node-sorted, so a stable node-sort of
+        # positions lines rank r up with the r-th (node, position) pair.
+        owner_of_rank = node_of_rank_blocked(node_sizes)
+        if not np.array_equal(np.bincount(refined, minlength=len(node_sizes)),
+                              np.bincount(owner_of_rank,
+                                          minlength=len(node_sizes))):
+            raise AssertionError("refinement changed per-node cardinalities")
+        pos_by_node = np.argsort(refined, kind="stable")
+        return np.stack(np.unravel_index(pos_by_node, grid.dims), axis=1)

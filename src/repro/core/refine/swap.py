@@ -1,0 +1,181 @@
+"""Pairwise-swap local search over a node-of-position assignment.
+
+Swaps exchange the owning nodes of two grid positions, so the per-node
+cardinalities — the scheduler's allocation — are preserved by construction;
+only improving swaps are accepted, so the objective is monotonically
+non-increasing.  Candidate generation is boundary-driven: only positions
+with a crossing incident edge can gain from a swap with one of their
+stencil neighbours on a different node, which keeps a pass at
+O(|boundary| * k^2) delta evaluations instead of O(p^2).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..cost import MappingCost
+from ..cost_delta import IncrementalCost
+from ..grid import CartGrid
+from ..stencil import Stencil
+
+__all__ = ["SwapRefiner", "RefineResult", "refine_assignment"]
+
+_OBJECTIVES = ("j_sum", "j_max")
+_POLICIES = ("first", "steepest")
+
+
+@dataclass
+class RefineResult:
+    """Outcome of one refinement run."""
+
+    assignment: np.ndarray       # (p,) refined node-of-position
+    initial: MappingCost
+    final: MappingCost
+    swaps: int
+    passes: int
+    wall_time_s: float
+
+    @property
+    def improvement(self) -> float:
+        return self.initial.j_sum - self.final.j_sum
+
+
+class SwapRefiner:
+    """Greedy boundary-vertex swap refinement.
+
+    Args:
+      objective: "j_sum" (total inter-node edges) or "j_max" (bottleneck
+        node's outgoing edges, J_sum as tie-break).
+      policy: "first" accepts the first improving swap while scanning the
+        boundary; "steepest" scans the whole boundary each round and applies
+        the single best swap.
+      max_passes: full boundary sweeps before giving up.
+      max_swaps: hard cap on accepted swaps (None = unlimited).
+      weighted: score with the stencil's per-offset byte weights.
+      tol: minimum improvement for a swap to count (guards float noise on
+        weighted stencils; exact 0.0 works for unit weights).
+      max_partners: cap on non-adjacent swap partners considered per
+        boundary vertex (evenly subsampled, deterministic).  Partners are
+        boundary vertices of the nodes p communicates with (KL/FM-style),
+        which catches improving exchanges between cells that are not
+        stencil neighbours of each other.
+    """
+
+    def __init__(self, objective: str = "j_sum", policy: str = "first",
+                 max_passes: int = 8, max_swaps: Optional[int] = None,
+                 weighted: bool = False, tol: float = 1e-12,
+                 max_partners: int = 32):
+        if objective not in _OBJECTIVES:
+            raise ValueError(f"objective must be one of {_OBJECTIVES}")
+        if policy not in _POLICIES:
+            raise ValueError(f"policy must be one of {_POLICIES}")
+        if max_passes <= 0:
+            raise ValueError("max_passes must be positive")
+        self.objective = objective
+        self.policy = policy
+        self.max_passes = int(max_passes)
+        self.max_swaps = max_swaps
+        self.weighted = weighted
+        self.tol = float(tol)
+        self.max_partners = int(max_partners)
+
+    # -- scoring ------------------------------------------------------------
+    def _gain(self, ic: IncrementalCost, p: int, q: int) -> float:
+        """Positive improvement of the configured objective for swap (p, q)."""
+        delta = ic.delta_swap(p, q)
+        if self.objective == "j_sum":
+            return -delta.d_j_sum
+        # j_max: lexicographic (j_max, j_sum); fold the tie-break in with a
+        # weight small enough not to override a strict j_max improvement.
+        if not delta.d_count_node and delta.d_j_sum == 0.0:
+            return 0.0
+        d_max = ic.j_max - ic.peek_j_max(delta)  # both O(N) via cache
+        if d_max != 0.0:
+            return d_max
+        return -delta.d_j_sum * 1e-9 if delta.d_j_sum < 0 else 0.0
+
+    # -- driver -------------------------------------------------------------
+    def refine(self, grid: CartGrid, stencil: Stencil,
+               node_of_pos: np.ndarray,
+               num_nodes: Optional[int] = None) -> RefineResult:
+        t0 = time.perf_counter()
+        ic = IncrementalCost(grid, stencil, node_of_pos, num_nodes=num_nodes,
+                             weighted=self.weighted)
+        initial = ic.cost()
+        swaps = passes = 0
+        budget = self.max_swaps if self.max_swaps is not None else np.inf
+        while passes < self.max_passes and swaps < budget:
+            passes += 1
+            improved = False
+            if self.policy == "steepest":
+                improved, swaps = self._steepest_pass(ic, swaps, budget)
+            else:
+                improved, swaps = self._first_pass(ic, swaps, budget)
+            if not improved:
+                break
+        return RefineResult(assignment=ic.node_of_pos.copy(), initial=initial,
+                            final=ic.cost(), swaps=swaps, passes=passes,
+                            wall_time_s=time.perf_counter() - t0)
+
+    def _candidates(self, ic: IncrementalCost, p: int,
+                    boundary: np.ndarray) -> np.ndarray:
+        """Stencil-adjacent partners first (cheap locality), then boundary
+        vertices of the nodes p's crossing edges touch."""
+        node = ic.node_of_pos
+        nbrs = ic.neighbors_of(p)
+        adj = nbrs[node[nbrs] != node[p]]
+        touched = np.unique(node[adj])
+        if touched.size == 0:
+            return adj
+        far = boundary[np.isin(node[boundary], touched)]
+        far = far[~np.isin(far, adj)]
+        if far.size > self.max_partners:
+            idx = (np.arange(self.max_partners)
+                   * (far.size / self.max_partners)).astype(np.int64)
+            far = far[idx]
+        return np.concatenate([adj, far])
+
+    def _first_pass(self, ic: IncrementalCost, swaps: int,
+                    budget: float) -> Tuple[bool, int]:
+        improved = False
+        boundary = ic.boundary_positions()
+        for p in boundary:
+            if swaps >= budget:
+                break
+            for q in self._candidates(ic, p, boundary):
+                if self._gain(ic, p, int(q)) > self.tol:
+                    ic.apply_swap(p, int(q))
+                    swaps += 1
+                    improved = True
+                    break   # p's neighbourhood changed; move on
+        return improved, swaps
+
+    def _steepest_pass(self, ic: IncrementalCost, swaps: int,
+                       budget: float) -> Tuple[bool, int]:
+        """One full boundary sweep, then apply the single best swap — so a
+        steepest pass is one sweep and max_passes bounds total work."""
+        if swaps >= budget:
+            return False, swaps
+        best_gain, best = self.tol, None
+        boundary = ic.boundary_positions()
+        for p in boundary:
+            for q in self._candidates(ic, p, boundary):
+                g = self._gain(ic, p, int(q))
+                if g > best_gain:
+                    best_gain, best = g, (int(p), int(q))
+        if best is None:
+            return False, swaps
+        ic.apply_swap(*best)
+        return True, swaps + 1
+
+
+def refine_assignment(grid: CartGrid, stencil: Stencil,
+                      node_of_pos: np.ndarray,
+                      num_nodes: Optional[int] = None,
+                      **refiner_kwargs) -> RefineResult:
+    """One-call convenience: refine an assignment with default settings."""
+    return SwapRefiner(**refiner_kwargs).refine(grid, stencil, node_of_pos,
+                                                num_nodes=num_nodes)

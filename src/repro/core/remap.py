@@ -11,7 +11,7 @@ need: place device r at logical coordinate coord(r).
 from __future__ import annotations
 
 import math
-from typing import Sequence, Tuple
+from typing import Sequence, Tuple, Union
 
 import numpy as np
 
@@ -23,8 +23,8 @@ from .stencil import Stencil
 __all__ = ["device_layout", "layout_cost", "mapped_device_array"]
 
 
-def device_layout(mapper: Mapper, mesh_shape: Sequence[int], stencil: Stencil,
-                  node_sizes: Sequence[int],
+def device_layout(mapper: Union[Mapper, str], mesh_shape: Sequence[int],
+                  stencil: Stencil, node_sizes: Sequence[int],
                   intra_order: str = "mapper") -> np.ndarray:
     """Return L with shape ``mesh_shape``: L[logical coord] = device index.
 
@@ -42,6 +42,8 @@ def device_layout(mapper: Mapper, mesh_shape: Sequence[int], stencil: Stencil,
     Falls back to the blocked layout if the algorithm is inapplicable
     (e.g. Nodecart on a non-factorizable configuration).
     """
+    if isinstance(mapper, str):
+        mapper = get_mapper(mapper)
     grid = CartGrid(tuple(mesh_shape))
     try:
         if intra_order == "rowmajor":
@@ -79,7 +81,7 @@ def layout_cost(layout: np.ndarray, stencil: Stencil,
                     weighted=weighted)
 
 
-def mapped_device_array(devices: Sequence, mapper: Mapper,
+def mapped_device_array(devices: Sequence, mapper: Union[Mapper, str],
                         mesh_shape: Sequence[int], stencil: Stencil,
                         chips_per_pod: int) -> np.ndarray:
     """Arrange ``devices`` (pod-major order) into an ndarray for `Mesh`."""

@@ -1,0 +1,141 @@
+"""Minimal offline stand-in for the slice of the `hypothesis` API this
+suite uses (`given`, `settings`, `assume`, and the `strategies` functions
+`integers`, `booleans`, `sampled_from`, `lists`, `floats`).
+
+Real hypothesis does adaptive search and shrinking; this shim just replays
+each property over ``max_examples`` pseudo-random examples drawn from a
+per-test deterministic RNG (seeded from the test's qualified name), so the
+suite collects and runs green without network access.  If hypothesis is
+installed the test modules import it instead and none of this is used.
+"""
+from __future__ import annotations
+
+import hashlib
+import types
+from typing import Any, Callable, List, Sequence
+
+import numpy as np
+
+__all__ = ["given", "settings", "assume", "strategies", "HealthCheck"]
+
+_DEFAULT_MAX_EXAMPLES = 25
+_SETTINGS_ATTR = "_shim_max_examples"
+_WRAPPED_ATTR = "_shim_wrapped"
+
+
+class UnsatisfiedAssumption(Exception):
+    """Raised by assume(False); the example is silently discarded."""
+
+
+def assume(condition: Any) -> bool:
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+class SearchStrategy:
+    """A draw function wrapped for composition."""
+
+    def __init__(self, draw: Callable[[np.random.Generator], Any]):
+        self._draw = draw
+
+    def example(self, rng: np.random.Generator) -> Any:
+        return self._draw(rng)
+
+    def map(self, fn: Callable[[Any], Any]) -> "SearchStrategy":
+        return SearchStrategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred: Callable[[Any], bool]) -> "SearchStrategy":
+        def draw(rng: np.random.Generator) -> Any:
+            for _ in range(1000):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise UnsatisfiedAssumption()
+        return SearchStrategy(draw)
+
+
+def _integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def _sampled_from(elements: Sequence[Any]) -> SearchStrategy:
+    elems = list(elements)
+    if not elems:
+        raise ValueError("sampled_from requires a non-empty sequence")
+    return SearchStrategy(lambda rng: elems[int(rng.integers(len(elems)))])
+
+
+def _floats(min_value: float = 0.0, max_value: float = 1.0,
+            **_ignored: Any) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def _lists(elements: SearchStrategy, min_size: int = 0,
+           max_size: int = 10, **_ignored: Any) -> SearchStrategy:
+    def draw(rng: np.random.Generator) -> List[Any]:
+        size = int(rng.integers(min_size, max_size + 1))
+        return [elements.example(rng) for _ in range(size)]
+    return SearchStrategy(draw)
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers, booleans=_booleans, sampled_from=_sampled_from,
+    floats=_floats, lists=_lists, SearchStrategy=SearchStrategy)
+
+
+class HealthCheck:
+    """Placeholder so ``suppress_health_check=[...]`` parses."""
+    all = classmethod(lambda cls: [])
+    too_slow = data_too_large = filter_too_much = None
+
+
+def settings(max_examples: int | None = None, deadline: Any = None,
+             **_ignored: Any) -> Callable:
+    """Record max_examples on the test (order-independent wrt @given)."""
+    def decorate(fn: Callable) -> Callable:
+        setattr(fn, _SETTINGS_ATTR, max_examples)
+        inner = getattr(fn, _WRAPPED_ATTR, None)
+        if inner is not None:   # @settings applied outside @given
+            setattr(inner, _SETTINGS_ATTR, max_examples)
+        return fn
+    return decorate
+
+
+def given(*arg_strategies: SearchStrategy,
+          **kw_strategies: SearchStrategy) -> Callable:
+    def decorate(fn: Callable) -> Callable:
+        seed = int.from_bytes(
+            hashlib.sha256(fn.__qualname__.encode()).digest()[:8], "big")
+
+        # NB: zero-arg signature on purpose — pytest must not mistake the
+        # property's parameters for fixtures.
+        def runner():
+            n = (getattr(fn, _SETTINGS_ATTR, None)
+                 or getattr(runner, _SETTINGS_ATTR, None)
+                 or _DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(seed)
+            ran, attempts = 0, 0
+            while ran < n and attempts < n * 50:
+                attempts += 1
+                args = [s.example(rng) for s in arg_strategies]
+                kwargs = {k: s.example(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, **kwargs)
+                except UnsatisfiedAssumption:
+                    continue
+                ran += 1
+
+        runner.__name__ = fn.__name__
+        runner.__qualname__ = fn.__qualname__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        setattr(runner, _WRAPPED_ATTR, fn)
+        return runner
+    return decorate

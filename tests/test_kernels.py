@@ -4,7 +4,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline: deterministic shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import Stencil
 from repro.kernels.attention.ops import flash_attention

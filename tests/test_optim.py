@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline: deterministic shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.optim import (AdamWConfig, adamw_update, dequantize_blockwise,
                          ef_compress, ef_decompress, init_error_state,
