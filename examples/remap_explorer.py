@@ -42,6 +42,9 @@ def main():
                     help="algorithm to draw (or 'all')")
     ap.add_argument("--refine", action="store_true",
                     help="also show each algorithm's swap-refined variant")
+    ap.add_argument("--refine-prefix", default="refined",
+                    choices=["refined", "refined2", "annealed"],
+                    help="which refinement engine --refine compares")
     args = ap.parse_args()
 
     grid = CartGrid(dims_create(args.nodes * args.ppn, args.dims))
@@ -54,14 +57,18 @@ def main():
     algos = ["blocked", "hyperplane", "kdtree", "stencil_strips",
              "nodecart", "graphgreedy", "random"]
     if args.refine:
-        algos += [f"refined:{a}" for a in algos]
+        algos += [f"{args.refine_prefix}:{a}" for a in algos]
 
     def make_mapper(name):
         # same base config in the bare and refined rows (graphgreedy's
         # max_passes would otherwise go to the refiner, not the base)
-        if name.startswith("refined:"):
-            from repro.core import RefinedMapper
-            return RefinedMapper(make_mapper(name.split(":", 1)[1]))
+        if ":" in name:
+            from repro.core import RefinedMapper, ScheduledRefiner
+            prefix, base = name.split(":", 1)
+            refiner = (None if prefix == "refined"
+                       else ScheduledRefiner(anneal=(prefix == "annealed")))
+            return RefinedMapper(make_mapper(base), refiner=refiner,
+                                 prefix=prefix)
         return (get_mapper(name, max_passes=4) if name == "graphgreedy"
                 else get_mapper(name))
 

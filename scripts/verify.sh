@@ -14,5 +14,11 @@ if [[ "${1:-}" == "--slow" ]]; then
     python -m pytest -q -m slow
 fi
 
-PYTHONPATH=src python -m benchmarks.refine_suite --tiny
+# batched-engine parity + scheduled-refiner invariants, run explicitly so a
+# collection failure elsewhere can't mask a refinement regression
+python -m pytest -q tests/test_refine_batch.py
+
+# smoke the whole refinement registry (refined: / refined2: / annealed:)
+PYTHONPATH=src python -m benchmarks.refine_suite --tiny \
+    --variants refined,refined2,annealed
 echo "verify OK"

@@ -1,25 +1,29 @@
 """Core library: the paper's contribution — stencil-aware process-to-node
 mapping for Cartesian grids (Hunold et al., CS.DC 2020)."""
 from .cost import MappingCost, blocked_assignment, evaluate, node_of_rank_blocked
-from .cost_delta import Delta, IncrementalCost, NeighborTable
+from .cost_delta import BatchSwapDelta, Delta, IncrementalCost, NeighborTable
 from .grid import CartGrid, dims_create
-from .mapping import (MAPPERS, REFINED_PREFIX, BlockedMapper,
+from .mapping import (ANNEALED_PREFIX, MAPPERS, REFINE_PREFIXES,
+                      REFINED_PREFIX, SCHEDULED_PREFIX, BlockedMapper,
                       GraphGreedyMapper, HyperplaneMapper, KDTreeMapper,
                       Mapper, MapperInapplicable, NodecartMapper,
                       RandomMapper, StencilStripsMapper, available_mappers,
                       get_mapper)
-from .refine import RefinedMapper, RefineResult, SwapRefiner, refine_assignment
+from .refine import (RefinedMapper, RefineResult, ScheduledRefiner,
+                     SwapRefiner, refine_assignment)
 from .remap import device_layout, layout_cost, mapped_device_array
 from .stencil import Stencil
 
 __all__ = [
     "CartGrid", "dims_create", "Stencil", "MappingCost", "evaluate",
     "blocked_assignment", "node_of_rank_blocked",
-    "Delta", "IncrementalCost", "NeighborTable",
+    "BatchSwapDelta", "Delta", "IncrementalCost", "NeighborTable",
     "Mapper", "MapperInapplicable", "MAPPERS", "REFINED_PREFIX",
+    "SCHEDULED_PREFIX", "ANNEALED_PREFIX", "REFINE_PREFIXES",
     "get_mapper", "available_mappers",
     "BlockedMapper", "RandomMapper", "NodecartMapper", "HyperplaneMapper",
     "KDTreeMapper", "StencilStripsMapper", "GraphGreedyMapper",
-    "SwapRefiner", "RefineResult", "refine_assignment", "RefinedMapper",
+    "SwapRefiner", "ScheduledRefiner", "RefineResult", "refine_assignment",
+    "RefinedMapper",
     "device_layout", "layout_cost", "mapped_device_array",
 ]

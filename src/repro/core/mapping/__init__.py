@@ -1,4 +1,41 @@
-"""Process-to-node mapping algorithms (paper §V + baselines §III)."""
+"""Process-to-node mapping algorithms (paper §V + baselines §III).
+
+Mapper-name resolution contract
+-------------------------------
+
+:func:`get_mapper` turns a string into a ready :class:`Mapper` instance.
+Names resolve in two layers:
+
+1. **Base algorithms** — exact keys of :data:`MAPPERS` (``"blocked"``,
+   ``"random"``, ``"nodecart"``, ``"hyperplane"``, ``"kdtree"``,
+   ``"stencil_strips"``, ``"graphgreedy"``).  ``kwargs`` go to the
+   algorithm's constructor.
+2. **Refinement prefixes** — ``"<prefix>:<base>"`` recursively resolves
+   ``<base>`` (so a base's own name rules apply unchanged) and wraps it in
+   a :class:`~repro.core.refine.RefinedMapper`.  ``kwargs`` then configure
+   the *refiner*, not the base algorithm:
+
+   ========== ===================================================== =========
+   prefix     refiner                                               objective
+   ========== ===================================================== =========
+   refined:   :class:`~repro.core.refine.SwapRefiner`               J_sum
+   refined2:  :class:`~repro.core.refine.ScheduledRefiner`          (J_max, J_sum)
+   annealed:  ScheduledRefiner(anneal=True) — adds the SA ladder    (J_max, J_sum)
+   ========== ===================================================== =========
+
+   Prefixes do not stack (``"refined:refined:blocked"`` is rejected by the
+   recursive base lookup, since prefixed names are never registry keys).
+
+Every spelling accepted here is accepted everywhere a mapper name appears:
+``device_layout`` / ``mapped_device_array`` (:mod:`repro.core.remap`),
+``make_mapped_mesh`` (:mod:`repro.launch.mesh`), and the benchmark drivers.
+
+Usage::
+
+    get_mapper("hyperplane")                       # paper §V.B
+    get_mapper("refined:kdtree", policy="steepest")
+    get_mapper("annealed:nodecart", seed=7).assignment(grid, stencil, sizes)
+"""
 from __future__ import annotations
 
 from typing import Dict, Type
@@ -24,25 +61,46 @@ MAPPERS: Dict[str, Type[Mapper]] = {
 
 #: Prefix turning any registered mapper into its local-search variant.
 REFINED_PREFIX = "refined:"
+#: Prefix for the alternating j_sum/j_max scheduled refiner.
+SCHEDULED_PREFIX = "refined2:"
+#: Prefix for the scheduled refiner with the simulated-annealing ladder.
+ANNEALED_PREFIX = "annealed:"
+
+#: All refinement prefixes, in registry-listing order.
+REFINE_PREFIXES = (REFINED_PREFIX, SCHEDULED_PREFIX, ANNEALED_PREFIX)
 
 
 def get_mapper(name: str, **kwargs) -> Mapper:
-    """Instantiate a mapper by name.
+    """Instantiate a mapper by name (see the module docstring for the full
+    resolution contract).
 
-    ``"refined:<base>"`` wraps ``<base>`` with swap-refinement local search
-    (``kwargs`` then configure the refiner, not the base algorithm); the
-    prefix composes with every key in :data:`MAPPERS`.
+    ``"refined:<base>"`` wraps ``<base>`` with swap-refinement local search,
+    ``"refined2:<base>"`` with the alternating j_sum/j_max schedule, and
+    ``"annealed:<base>"`` adds the simulated-annealing ladder (``kwargs``
+    then configure the refiner, not the base algorithm); every prefix
+    composes with every key in :data:`MAPPERS`.
     """
     if name.startswith(REFINED_PREFIX):
         from ..refine import RefinedMapper
         base = get_mapper(name[len(REFINED_PREFIX):])
         return RefinedMapper(base, **kwargs)
+    if name.startswith(SCHEDULED_PREFIX):
+        from ..refine import RefinedMapper, ScheduledRefiner
+        base = get_mapper(name[len(SCHEDULED_PREFIX):])
+        return RefinedMapper(base, refiner=ScheduledRefiner(**kwargs),
+                             prefix="refined2")
+    if name.startswith(ANNEALED_PREFIX):
+        from ..refine import RefinedMapper, ScheduledRefiner
+        base = get_mapper(name[len(ANNEALED_PREFIX):])
+        return RefinedMapper(base,
+                             refiner=ScheduledRefiner(anneal=True, **kwargs),
+                             prefix="annealed")
     try:
         cls = MAPPERS[name]
     except KeyError:
         raise KeyError(
             f"unknown mapper {name!r}; choose from {sorted(MAPPERS)} "
-            f"or '{REFINED_PREFIX}<base>'")
+            f"or one of {[p + '<base>' for p in REFINE_PREFIXES]}")
     return cls(**kwargs)
 
 
@@ -50,7 +108,8 @@ def available_mappers(include_refined: bool = True) -> list:
     """All resolvable mapper names (base + their refined variants)."""
     names = sorted(MAPPERS)
     if include_refined:
-        names += [REFINED_PREFIX + n for n in sorted(MAPPERS)]
+        for prefix in REFINE_PREFIXES:
+            names += [prefix + n for n in sorted(MAPPERS)]
     return names
 
 
@@ -58,5 +117,6 @@ __all__ = [
     "Mapper", "MapperInapplicable", "aggregate_node_size", "check_bijection",
     "BlockedMapper", "RandomMapper", "NodecartMapper", "HyperplaneMapper",
     "KDTreeMapper", "StencilStripsMapper", "GraphGreedyMapper",
-    "MAPPERS", "REFINED_PREFIX", "get_mapper", "available_mappers",
+    "MAPPERS", "REFINED_PREFIX", "SCHEDULED_PREFIX", "ANNEALED_PREFIX",
+    "REFINE_PREFIXES", "get_mapper", "available_mappers",
 ]

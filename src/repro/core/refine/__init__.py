@@ -2,15 +2,27 @@
 
 The paper's mappers (§V) are one-shot constructions; related work
 (Glantz/Meyerhenke/Noe; Schulz/Träff "Better Process Mapping and Sparse
-Quadratic Assignment") shows that cheap pairwise-swap local search on top of
-a good initial mapping recovers most of the remaining J_sum/J_max gap.  This
-package supplies that pass: :class:`SwapRefiner` walks the partition
-boundary proposing node-exchanging swaps scored by the O(k) incremental
-engine (:class:`~repro.core.cost_delta.IncrementalCost`), and
-:class:`RefinedMapper` packages it as a drop-in :class:`~repro.core.mapping.Mapper`
-so ``get_mapper("refined:<base>")`` upgrades any registered algorithm.
+Quadratic Assignment"; Faraj/van der Grinten/Meyerhenke "High-Quality
+Hierarchical Process Mapping") shows that cheap local search on top of a
+good initial mapping recovers most of the remaining J_sum/J_max gap.  This
+package supplies that pass in three tiers:
+
+* :class:`SwapRefiner` — boundary swap local search scored by the batched
+  numpy engine (:meth:`~repro.core.cost_delta.IncrementalCost.batch_swap_deltas`):
+  the whole candidate frontier is evaluated per sweep in a handful of
+  vectorized passes (``engine="scalar"`` keeps the PR-1 reference loop).
+* :class:`ScheduledRefiner` — alternates j_sum/j_max SwapRefiner phases
+  (optionally with a simulated-annealing temperature ladder) so bottleneck
+  relief doesn't stall at the first J_max plateau.
+* :class:`RefinedMapper` — packages either refiner as a drop-in
+  :class:`~repro.core.mapping.Mapper`, so ``get_mapper("refined:<base>")``,
+  ``"refined2:<base>"`` and ``"annealed:<base>"`` upgrade any registered
+  algorithm (see :mod:`repro.core.mapping` for the name-resolution
+  contract).
 """
 from .swap import RefineResult, SwapRefiner, refine_assignment
+from .schedule import ScheduledRefiner
 from .mapper import RefinedMapper
 
-__all__ = ["SwapRefiner", "RefineResult", "refine_assignment", "RefinedMapper"]
+__all__ = ["SwapRefiner", "ScheduledRefiner", "RefineResult",
+           "refine_assignment", "RefinedMapper"]

@@ -1,11 +1,19 @@
 """`refined:<base>` — any registered mapper plus swap refinement.
 
 The wrapper runs the base algorithm, refines its node-of-position
-assignment with :class:`SwapRefiner`, then rebuilds a rank->coordinate
-bijection that realises the refined assignment while respecting the
-blocked scheduler allocation: node i's ranks take node i's grid positions
-in row-major position order (same convention as
+assignment with :class:`SwapRefiner` (or any object with the same
+``refine(grid, stencil, node_of_pos, num_nodes)`` signature, e.g.
+:class:`~repro.core.refine.schedule.ScheduledRefiner`), then rebuilds a
+rank->coordinate bijection that realises the refined assignment while
+respecting the blocked scheduler allocation: node i's ranks take node i's
+grid positions in row-major position order (same convention as
 ``remap.device_layout(intra_order="rowmajor")``).
+
+Usage::
+
+    RefinedMapper("hyperplane")                           # refined:hyperplane
+    RefinedMapper("kdtree", refiner=ScheduledRefiner(),
+                  prefix="refined2")                      # refined2:kdtree
 """
 from __future__ import annotations
 
@@ -16,7 +24,7 @@ import numpy as np
 from ..cost import node_of_rank_blocked
 from ..grid import CartGrid
 from ..stencil import Stencil
-from ..mapping.base import Mapper
+from ..mapping.base import Mapper, MapperInapplicable
 from .swap import RefineResult, SwapRefiner
 
 __all__ = ["RefinedMapper"]
@@ -26,28 +34,44 @@ class RefinedMapper(Mapper):
     """Wrap ``base`` (a Mapper instance or registered name) with local search.
 
     Keyword arguments are forwarded to :class:`SwapRefiner` unless an
-    explicit ``refiner`` is given.  Raises whatever the base raises
-    (``MapperInapplicable`` propagates so callers can fall back).
+    explicit ``refiner`` is given; ``prefix`` sets the registry spelling the
+    wrapper answers to (``refined`` for the plain swap pass, ``refined2`` /
+    ``annealed`` for the scheduled engines).  Raises whatever the base
+    raises (``MapperInapplicable`` propagates so callers can fall back) —
+    unless a ``fallback`` base is given, in which case the wrapper starts
+    refinement from the fallback's assignment instead (used by the elastic
+    mesh path, where homogeneous-only bases like Nodecart would otherwise
+    leave a ragged pod entirely unrefined).
     """
 
     requires_homogeneous = False
 
     def __init__(self, base: Union[Mapper, str] = "hyperplane",
-                 refiner: Optional[SwapRefiner] = None, **refiner_kwargs):
+                 refiner=None, prefix: str = "refined",
+                 fallback: Union[Mapper, str, None] = None, **refiner_kwargs):
         if isinstance(base, str):
             from ..mapping import get_mapper
             base = get_mapper(base)
+        if isinstance(fallback, str):
+            from ..mapping import get_mapper
+            fallback = get_mapper(fallback)
         if refiner is not None and refiner_kwargs:
             raise ValueError("pass either refiner or refiner kwargs, not both")
         self.base = base
+        self.fallback = fallback
         self.refiner = refiner if refiner is not None \
             else SwapRefiner(**refiner_kwargs)
-        self.name = f"refined:{base.name}"
+        self.name = f"{prefix}:{base.name}"
         self.last_result: Optional[RefineResult] = None
 
     def coords(self, grid: CartGrid, stencil: Stencil,
                node_sizes: Sequence[int]) -> np.ndarray:
-        node_of_pos = self.base.assignment(grid, stencil, node_sizes)
+        try:
+            node_of_pos = self.base.assignment(grid, stencil, node_sizes)
+        except MapperInapplicable:
+            if self.fallback is None:
+                raise
+            node_of_pos = self.fallback.assignment(grid, stencil, node_sizes)
         result = self.refiner.refine(grid, stencil, node_of_pos,
                                      num_nodes=len(node_sizes))
         self.last_result = result

@@ -7,6 +7,24 @@ non-increasing.  Candidate generation is boundary-driven: only positions
 with a crossing incident edge can gain from a swap with one of their
 stencil neighbours on a different node, which keeps a pass at
 O(|boundary| * k^2) delta evaluations instead of O(p^2).
+
+Two engines implement the same search:
+
+* ``engine="batch"`` (default) — builds the whole candidate frontier as
+  ``(P, Q)`` index arrays and scores every pair in one
+  :meth:`~repro.core.cost_delta.IncrementalCost.batch_swap_deltas` call.
+  A steepest pass is then a single ``argmax`` over the gain array; a
+  first-improvement pass applies a maximal set of spatially-disjoint
+  improving swaps per batch (positions whose neighbourhood an accepted
+  swap touched are masked out, so every applied delta is still exact).
+* ``engine="scalar"`` — the PR-1 per-vertex Python loop, kept as the
+  bit-exact reference the batch engine is tested and benchmarked against.
+
+Usage::
+
+    refiner = SwapRefiner(objective="j_max", policy="steepest")
+    res = refiner.refine(grid, stencil, node_of_pos, num_nodes=N)
+    res.assignment, res.final.j_sum, res.final.j_max, res.wall_time_s
 """
 from __future__ import annotations
 
@@ -25,6 +43,15 @@ __all__ = ["SwapRefiner", "RefineResult", "refine_assignment"]
 
 _OBJECTIVES = ("j_sum", "j_max")
 _POLICIES = ("first", "steepest")
+_ENGINES = ("batch", "scalar")
+
+#: j_max batch scoring materializes (chunk, N) load matrices; this bounds
+#: chunk * N so peak extra memory stays ~tens of MB regardless of frontier.
+_LOAD_CHUNK_ELEMS = 1 << 21
+#: soft cap on far (non-adjacent) candidate pairs per sweep: when the
+#: frontier is huge (early refinement of a random-quality mapping) the
+#: per-vertex partner cap is scaled down so one sweep stays bounded.
+_MAX_FAR_PAIRS = 200_000
 
 
 @dataclass
@@ -49,8 +76,9 @@ class SwapRefiner:
     Args:
       objective: "j_sum" (total inter-node edges) or "j_max" (bottleneck
         node's outgoing edges, J_sum as tie-break).
-      policy: "first" accepts the first improving swap while scanning the
-        boundary; "steepest" scans the whole boundary each round and applies
+      policy: "first" accepts improving swaps while scanning the boundary
+        (the batch engine applies a maximal spatially-disjoint set per
+        sweep); "steepest" scores the whole frontier each round and applies
         the single best swap.
       max_passes: full boundary sweeps before giving up.
       max_swaps: hard cap on accepted swaps (None = unlimited).
@@ -58,20 +86,24 @@ class SwapRefiner:
       tol: minimum improvement for a swap to count (guards float noise on
         weighted stencils; exact 0.0 works for unit weights).
       max_partners: cap on non-adjacent swap partners considered per
-        boundary vertex (evenly subsampled, deterministic).  Partners are
-        boundary vertices of the nodes p communicates with (KL/FM-style),
-        which catches improving exchanges between cells that are not
-        stencil neighbours of each other.
+        (boundary vertex, communicating node) pair (evenly subsampled,
+        deterministic).  Partners are boundary vertices of the nodes p
+        communicates with (KL/FM-style), which catches improving exchanges
+        between cells that are not stencil neighbours of each other.
+      engine: "batch" (vectorized frontier scoring) or "scalar" (PR-1
+        reference loop).
     """
 
     def __init__(self, objective: str = "j_sum", policy: str = "first",
                  max_passes: int = 8, max_swaps: Optional[int] = None,
                  weighted: bool = False, tol: float = 1e-12,
-                 max_partners: int = 32):
+                 max_partners: int = 32, engine: str = "batch"):
         if objective not in _OBJECTIVES:
             raise ValueError(f"objective must be one of {_OBJECTIVES}")
         if policy not in _POLICIES:
             raise ValueError(f"policy must be one of {_POLICIES}")
+        if engine not in _ENGINES:
+            raise ValueError(f"engine must be one of {_ENGINES}")
         if max_passes <= 0:
             raise ValueError("max_passes must be positive")
         self.objective = objective
@@ -81,21 +113,7 @@ class SwapRefiner:
         self.weighted = weighted
         self.tol = float(tol)
         self.max_partners = int(max_partners)
-
-    # -- scoring ------------------------------------------------------------
-    def _gain(self, ic: IncrementalCost, p: int, q: int) -> float:
-        """Positive improvement of the configured objective for swap (p, q)."""
-        delta = ic.delta_swap(p, q)
-        if self.objective == "j_sum":
-            return -delta.d_j_sum
-        # j_max: lexicographic (j_max, j_sum); fold the tie-break in with a
-        # weight small enough not to override a strict j_max improvement.
-        if not delta.d_count_node and delta.d_j_sum == 0.0:
-            return 0.0
-        d_max = ic.j_max - ic.peek_j_max(delta)  # both O(N) via cache
-        if d_max != 0.0:
-            return d_max
-        return -delta.d_j_sum * 1e-9 if delta.d_j_sum < 0 else 0.0
+        self.engine = engine
 
     # -- driver -------------------------------------------------------------
     def refine(self, grid: CartGrid, stencil: Stencil,
@@ -109,8 +127,14 @@ class SwapRefiner:
         budget = self.max_swaps if self.max_swaps is not None else np.inf
         while passes < self.max_passes and swaps < budget:
             passes += 1
-            improved = False
-            if self.policy == "steepest":
+            if self.engine == "scalar":
+                if self.policy == "steepest":
+                    improved, swaps = self._steepest_pass_scalar(ic, swaps,
+                                                                 budget)
+                else:
+                    improved, swaps = self._first_pass_scalar(ic, swaps,
+                                                              budget)
+            elif self.policy == "steepest":
                 improved, swaps = self._steepest_pass(ic, swaps, budget)
             else:
                 improved, swaps = self._first_pass(ic, swaps, budget)
@@ -119,6 +143,159 @@ class SwapRefiner:
         return RefineResult(assignment=ic.node_of_pos.copy(), initial=initial,
                             final=ic.cost(), swaps=swaps, passes=passes,
                             wall_time_s=time.perf_counter() - t0)
+
+    # -- batch engine -------------------------------------------------------
+    def _frontier_pairs(self, ic: IncrementalCost) \
+            -> Tuple[np.ndarray, np.ndarray]:
+        """All candidate swap pairs as (P, Q) arrays, deduplicated with
+        P < Q: every crossing stencil edge, plus for each boundary vertex
+        up to ``max_partners`` boundary vertices of each node its crossing
+        edges touch (evenly subsampled in boundary order)."""
+        node, t, size = ic.node_of_pos, ic.table, ic.grid.size
+        n_nodes = ic.n_nodes
+        us, vs = [], []
+        for j in range(ic.stencil.k):
+            u = np.nonzero(t.out_valid[j] & (node != node[t.out_tgt[j]]))[0]
+            us.append(u)
+            vs.append(t.out_tgt[j][u])
+        U = np.concatenate(us) if us else np.empty(0, dtype=np.int64)
+        V = np.concatenate(vs) if vs else np.empty(0, dtype=np.int64)
+        if U.size == 0:
+            return (np.empty(0, dtype=np.int64),) * 2
+        adj_codes = np.minimum(U, V) * size + np.maximum(U, V)
+        # (boundary vertex, communicating node) pairs from both edge ends
+        pt = np.unique(np.concatenate([U * n_nodes + node[V],
+                                       V * n_nodes + node[U]]))
+        p_of, tn_of = pt // n_nodes, pt % n_nodes
+        boundary = np.nonzero(np.bincount(
+            np.concatenate([U, V]), minlength=size))[0]
+        order = np.argsort(node[boundary], kind="stable")
+        members = boundary[order]                       # boundary, node-major
+        cnt_node = np.bincount(node[boundary], minlength=n_nodes)
+        starts = np.concatenate([[0], np.cumsum(cnt_node)[:-1]])
+        cap = self.max_partners
+        if p_of.size * cap > _MAX_FAR_PAIRS:
+            cap = max(1, _MAX_FAR_PAIRS // p_of.size)
+        cnt = cnt_node[tn_of]
+        take = np.minimum(cnt, cap)
+        rows = np.repeat(np.arange(p_of.size), take)
+        seg_start = np.cumsum(take) - take
+        within = np.arange(int(take.sum())) - np.repeat(seg_start, take)
+        stride = cnt / np.maximum(take, 1)
+        idx = starts[tn_of][rows] + (within * stride[rows]).astype(np.int64)
+        Pf, Qf = p_of[rows], members[idx]
+        keep = Pf != Qf
+        far_codes = (np.minimum(Pf, Qf) * size + np.maximum(Pf, Qf))[keep]
+        codes = np.unique(np.concatenate([adj_codes, far_codes]))
+        return codes // size, codes % size
+
+    def _batch_gains(self, ic: IncrementalCost, P: np.ndarray, Q: np.ndarray,
+                     need_affected: bool = False) \
+            -> Tuple[np.ndarray, Optional[np.ndarray], Optional[np.ndarray]]:
+        """Per-pair gain of the configured objective (positive = improving).
+        For j_max also returns the strict-improvement mask (gains driven by
+        a real bottleneck drop rather than the J_sum tie-break) and, when
+        ``need_affected`` (first-improvement's disjointness guard), the
+        (m, N) bool mask of nodes whose load each swap would change."""
+        if self.objective == "j_sum":
+            bd = ic.batch_swap_deltas(P, Q)
+            return -bd.d_j_sum, None, None
+        # j_max scoring needs (m, N) load matrices; chunk so peak memory is
+        # bounded no matter how large the frontier is.
+        per_node, j_max_now, m = ic.per_node, ic.j_max, P.size
+        chunk = max(1, _LOAD_CHUNK_ELEMS // max(1, ic.n_nodes))
+        gains = np.empty(m, dtype=np.float64)
+        strict = np.empty(m, dtype=bool)
+        affected = (np.empty((m, ic.n_nodes), dtype=bool)
+                    if need_affected else None)
+        for s in range(0, m, chunk):
+            e = min(s + chunk, m)
+            bd = ic.batch_swap_deltas(P[s:e], Q[s:e], with_loads=True)
+            primary = j_max_now - bd.new_j_max
+            tie = np.where(bd.d_j_sum < 0, -bd.d_j_sum * 1e-9, 0.0)
+            gains[s:e] = np.where(primary != 0.0, primary, tie)
+            strict[s:e] = primary > 0.0
+            if need_affected:
+                affected[s:e] = bd.new_per_node != per_node[None, :]
+        return gains, strict, affected
+
+    def _steepest_pass(self, ic: IncrementalCost, swaps: int,
+                       budget: float) -> Tuple[bool, int]:
+        """One whole-frontier batch, then apply the single best swap."""
+        if swaps >= budget:
+            return False, swaps
+        P, Q = self._frontier_pairs(ic)
+        if P.size == 0:
+            return False, swaps
+        gains, _, _ = self._batch_gains(ic, P, Q)
+        best = int(np.argmax(gains))
+        if gains[best] <= self.tol:
+            return False, swaps
+        ic.apply_swap(int(P[best]), int(Q[best]))
+        return True, swaps + 1
+
+    def _first_pass(self, ic: IncrementalCost, swaps: int,
+                    budget: float) -> Tuple[bool, int]:
+        """One whole-frontier batch, then greedily apply every improving
+        swap whose endpoints are spatially disjoint from earlier accepted
+        swaps (and their stencil neighbourhoods), so each applied delta is
+        still exact against the committed state.
+
+        Under j_max two extra guards keep the pass lexicographically
+        monotone: only same-kind swaps are combined per sweep (all strict
+        bottleneck drops, or all J_sum tie-breaks — mixing the two can
+        re-raise the bottleneck a strict swap just lowered while a
+        tie-break swap raises J_sum), and accepted swaps must touch
+        disjoint *node* load sets (two distant swaps may each keep the max
+        at M while jointly pushing a shared node past it).
+        """
+        P, Q = self._frontier_pairs(ic)
+        if P.size == 0:
+            return False, swaps
+        gains, strict, affected = self._batch_gains(ic, P, Q,
+                                                    need_affected=True)
+        improving = gains > self.tol
+        if strict is not None and bool(np.any(improving & strict)):
+            improving &= strict
+        cand = np.nonzero(improving)[0]
+        if cand.size == 0:
+            return False, swaps
+        dirty = np.zeros(ic.grid.size, dtype=bool)
+        dirty_nodes = np.zeros(ic.n_nodes, dtype=bool)
+        applied = False
+        for i in cand:
+            if swaps >= budget:
+                break
+            p, q = int(P[i]), int(Q[i])
+            if dirty[p] or dirty[q]:
+                continue
+            if affected is not None and bool(np.any(dirty_nodes
+                                                    & affected[i])):
+                continue
+            ic.apply_swap(p, q)
+            swaps += 1
+            applied = True
+            dirty[p] = dirty[q] = True
+            dirty[ic.neighbors_of(p)] = True
+            dirty[ic.neighbors_of(q)] = True
+            if affected is not None:
+                dirty_nodes |= affected[i]
+        return applied, swaps
+
+    # -- scalar reference engine (PR-1 loop) --------------------------------
+    def _gain(self, ic: IncrementalCost, p: int, q: int) -> float:
+        """Positive improvement of the configured objective for swap (p, q)."""
+        delta = ic.delta_swap(p, q)
+        if self.objective == "j_sum":
+            return -delta.d_j_sum
+        # j_max: lexicographic (j_max, j_sum); fold the tie-break in with a
+        # weight small enough not to override a strict j_max improvement.
+        if not delta.d_count_node and delta.d_j_sum == 0.0:
+            return 0.0
+        d_max = ic.j_max - ic.peek_j_max(delta)  # both O(N) via cache
+        if d_max != 0.0:
+            return d_max
+        return -delta.d_j_sum * 1e-9 if delta.d_j_sum < 0 else 0.0
 
     def _candidates(self, ic: IncrementalCost, p: int,
                     boundary: np.ndarray) -> np.ndarray:
@@ -138,8 +315,8 @@ class SwapRefiner:
             far = far[idx]
         return np.concatenate([adj, far])
 
-    def _first_pass(self, ic: IncrementalCost, swaps: int,
-                    budget: float) -> Tuple[bool, int]:
+    def _first_pass_scalar(self, ic: IncrementalCost, swaps: int,
+                           budget: float) -> Tuple[bool, int]:
         improved = False
         boundary = ic.boundary_positions()
         for p in boundary:
@@ -153,8 +330,8 @@ class SwapRefiner:
                     break   # p's neighbourhood changed; move on
         return improved, swaps
 
-    def _steepest_pass(self, ic: IncrementalCost, swaps: int,
-                       budget: float) -> Tuple[bool, int]:
+    def _steepest_pass_scalar(self, ic: IncrementalCost, swaps: int,
+                              budget: float) -> Tuple[bool, int]:
         """One full boundary sweep, then apply the single best swap — so a
         steepest pass is one sweep and max_passes bounds total work."""
         if swaps >= budget:

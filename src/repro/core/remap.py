@@ -11,16 +11,19 @@ need: place device r at logical coordinate coord(r).
 from __future__ import annotations
 
 import math
-from typing import Sequence, Tuple, Union
+from typing import Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from .cost import MappingCost, evaluate
 from .grid import CartGrid
-from .mapping import Mapper, MapperInapplicable, get_mapper
+from .mapping import (REFINE_PREFIXES, Mapper, MapperInapplicable,
+                      get_mapper)
+from .refine import RefinedMapper, ScheduledRefiner
 from .stencil import Stencil
 
-__all__ = ["device_layout", "layout_cost", "mapped_device_array"]
+__all__ = ["device_layout", "layout_cost", "mapped_device_array",
+           "ensure_refined"]
 
 
 def device_layout(mapper: Union[Mapper, str], mesh_shape: Sequence[int],
@@ -81,18 +84,55 @@ def layout_cost(layout: np.ndarray, stencil: Stencil,
                     weighted=weighted)
 
 
+def ensure_refined(mapper: Union[Mapper, str]) -> Union[Mapper, str]:
+    """Return ``mapper`` upgraded with local-search refinement unless it
+    already is a refining variant.  Plain mappers are wrapped with the
+    J_max-aware :class:`~repro.core.refine.ScheduledRefiner` (the
+    bottleneck is what elastic degradation hurts), with ``blocked`` as the
+    starting point when the base itself is inapplicable to ragged sizes
+    (e.g. Nodecart needs homogeneous nodes — refinement must still run);
+    already-refined names and :class:`RefinedMapper` instances pass
+    through unchanged."""
+    if isinstance(mapper, str):
+        if any(mapper.startswith(p) for p in REFINE_PREFIXES):
+            return mapper
+        mapper = get_mapper(mapper)
+    if isinstance(mapper, RefinedMapper):
+        return mapper
+    return RefinedMapper(mapper, refiner=ScheduledRefiner(), prefix="refined2",
+                         fallback="blocked")
+
+
 def mapped_device_array(devices: Sequence, mapper: Union[Mapper, str],
                         mesh_shape: Sequence[int], stencil: Stencil,
-                        chips_per_pod: int) -> np.ndarray:
-    """Arrange ``devices`` (pod-major order) into an ndarray for `Mesh`."""
+                        chips_per_pod: int,
+                        node_sizes: Optional[Sequence[int]] = None,
+                        auto_refine: bool = True) -> np.ndarray:
+    """Arrange ``devices`` (pod-major order) into an ndarray for `Mesh`.
+
+    ``node_sizes`` overrides the uniform ``chips_per_pod`` split for
+    elastic operation: pass the *surviving* chips per pod after failures.
+    With ``auto_refine`` (default), any ragged layout — heterogeneous
+    ``node_sizes`` or a ragged tail pod — upgrades ``mapper`` to its
+    scheduled-refinement variant at mesh construction time (see
+    :func:`ensure_refined`), so callers no longer opt in by mapper name to
+    recover mapping quality after a pod loses chips.
+    """
     p = int(math.prod(mesh_shape))
     if len(devices) != p:
         raise ValueError(f"{len(devices)} devices != mesh size {p}")
-    if p % chips_per_pod == 0:
+    if node_sizes is not None:
+        node_sizes = [int(n) for n in node_sizes]
+        if sum(node_sizes) != p:
+            raise ValueError(f"sum(node_sizes)={sum(node_sizes)} != mesh "
+                             f"size {p}")
+    elif p % chips_per_pod == 0:
         node_sizes = [chips_per_pod] * (p // chips_per_pod)
     else:  # ragged tail pod (elastic operation after failures)
         full, rem = divmod(p, chips_per_pod)
         node_sizes = [chips_per_pod] * full + [rem]
+    if auto_refine and len(set(node_sizes)) > 1:
+        mapper = ensure_refined(mapper)
     layout = device_layout(mapper, mesh_shape, stencil, node_sizes)
     dev_arr = np.empty(p, dtype=object)
     for i, d in enumerate(devices):

@@ -78,8 +78,17 @@ def make_mapped_mesh(mapper_name: str, *, multi_pod: bool = False,
                      cfg: Optional[ArchConfig] = None,
                      shape: Optional[ShapeSpec] = None,
                      stencil: Optional[Stencil] = None,
-                     devices: Optional[Sequence] = None) -> Mesh:
-    """Production mesh with a paper-algorithm device permutation."""
+                     devices: Optional[Sequence] = None,
+                     node_sizes: Optional[Sequence[int]] = None,
+                     auto_refine: bool = True) -> Mesh:
+    """Production mesh with a paper-algorithm device permutation.
+
+    ``node_sizes`` describes the surviving chips per pod for elastic
+    operation (a pod that lost chips); with ``auto_refine`` (default) any
+    ragged layout gets the mapper's scheduled-refinement upgrade at mesh
+    construction time, so degraded pods keep a good J_max without callers
+    opting in via a ``refined2:``-prefixed name.
+    """
     mesh_shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = mesh_axes(multi_pod)
     machine = machine_for(multi_pod)
@@ -93,5 +102,6 @@ def make_mapped_mesh(mapper_name: str, *, multi_pod: bool = False,
         raise ValueError(f"need {math.prod(mesh_shape)} devices, "
                          f"have {len(devs)} (dry-run sets XLA_FLAGS)")
     arr = mapped_device_array(devs, get_mapper(mapper_name), mesh_shape,
-                              stencil, machine.chips_per_pod)
+                              stencil, machine.chips_per_pod,
+                              node_sizes=node_sizes, auto_refine=auto_refine)
     return Mesh(arr, axes)
