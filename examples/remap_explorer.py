@@ -43,7 +43,7 @@ def main():
     ap.add_argument("--refine", action="store_true",
                     help="also show each algorithm's swap-refined variant")
     ap.add_argument("--refine-prefix", default="refined",
-                    choices=["refined", "refined2", "annealed"],
+                    choices=["refined", "refined2", "annealed", "portfolio"],
                     help="which refinement engine --refine compares")
     args = ap.parse_args()
 
@@ -63,10 +63,15 @@ def main():
         # same base config in the bare and refined rows (graphgreedy's
         # max_passes would otherwise go to the refiner, not the base)
         if ":" in name:
-            from repro.core import RefinedMapper, ScheduledRefiner
+            from repro.core import (PortfolioRefiner, RefinedMapper,
+                                    ScheduledRefiner)
             prefix, base = name.split(":", 1)
-            refiner = (None if prefix == "refined"
-                       else ScheduledRefiner(anneal=(prefix == "annealed")))
+            if prefix == "refined":
+                refiner = None
+            elif prefix == "portfolio":
+                refiner = PortfolioRefiner(k=4)
+            else:
+                refiner = ScheduledRefiner(anneal=(prefix == "annealed"))
             return RefinedMapper(make_mapper(base), refiner=refiner,
                                  prefix=prefix)
         return (get_mapper(name, max_passes=4) if name == "graphgreedy"

@@ -14,11 +14,15 @@ if [[ "${1:-}" == "--slow" ]]; then
     python -m pytest -q -m slow
 fi
 
-# batched-engine parity + scheduled-refiner invariants, run explicitly so a
+# batched-engine parity + scheduled-refiner/portfolio invariants and the
+# elastic re-mesh + linksim replay integration modules, run explicitly so a
 # collection failure elsewhere can't mask a refinement regression
-python -m pytest -q tests/test_refine_batch.py
+python -m pytest -q tests/test_refine_batch.py tests/test_portfolio.py \
+    tests/test_elastic_remesh.py tests/test_linksim_replay.py
 
-# smoke the whole refinement registry (refined: / refined2: / annealed:)
-PYTHONPATH=src python -m benchmarks.refine_suite --tiny \
-    --variants refined,refined2,annealed
+# smoke the whole refinement registry (refined: / refined2: / annealed: /
+# portfolio:) incl. the linksim replay columns; the full K=8 sweep is the
+# `-m slow` acceptance test (test_portfolio_k8_acceptance_on_suite_ragged_rows)
+PYTHONPATH=src python -m benchmarks.refine_suite --tiny --linksim \
+    --variants refined,refined2,annealed,portfolio[k=4]
 echo "verify OK"

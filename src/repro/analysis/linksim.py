@@ -33,7 +33,8 @@ import numpy as np
 from ..topology.machine import MachineSpec
 from .hlo import CollectiveStat
 
-__all__ = ["LinkReport", "simulate"]
+__all__ = ["LinkReport", "simulate", "stencil_collectives",
+           "machine_for_nodes", "replay_assignment"]
 
 
 @dataclass
@@ -139,3 +140,67 @@ def simulate(collectives: Iterable[CollectiveStat], layout_flat: np.ndarray,
             for i in range(g):
                 _route(machine, report, chips[i], chips[(i + 1) % g], per_edge)
     return report
+
+
+# ---------------------------------------------------------------------------
+# Closing the loop: replay a *mapping* through the link simulator.
+#
+# The mapping algorithms optimize the abstract J_sum/J_max edge metrics;
+# these helpers turn a stencil + node-of-position assignment into the
+# equivalent collective-permute traffic and play it on a pods-as-nodes
+# MachineSpec.  For unit weights the simulated ``max_dci_pod`` equals J_max
+# and ``dci_total`` equals J_sum *exactly* (same directed source-counted
+# accounting), which is what lets tests and `refine_suite --linksim` assert
+# that better mapping metrics really mean less simulated bottleneck DCI
+# traffic.
+
+def stencil_collectives(grid, stencil, weighted=True) -> List[CollectiveStat]:
+    """One collective-permute per stencil offset: a (src, dst) pair for
+    every valid shifted rank, payload = the offset's byte weight
+    (``weighted="auto"``/False supported as in the cost functions)."""
+    from ..core.stencil import resolve_weighted
+    use_w = resolve_weighted(weighted, stencil)
+    colls = []
+    for j, off in enumerate(stencil.offsets):
+        valid, tgt = grid.shift_ranks(off)
+        src = np.nonzero(valid)[0]
+        colls.append(CollectiveStat(
+            opcode="collective-permute", name=f"stencil-offset-{j}",
+            computation="stencil-replay",
+            payload_bytes=float(stencil.weights[j]) if use_w else 1.0,
+            result_bytes=0.0, groups=None,
+            pairs=list(zip(src.tolist(), tgt[src].tolist())),
+            multiplier=1.0))
+    return colls
+
+
+def machine_for_nodes(node_sizes: Sequence[int],
+                      name: str = "stencil-replay") -> MachineSpec:
+    """Pods-as-nodes machine for a homogeneous allocation: ``len(sizes)``
+    pods of a 1-d ICI torus each (ragged allocations have no uniform
+    MachineSpec — the replay is a homogeneous-instance tool)."""
+    sizes = [int(s) for s in node_sizes]
+    if len(set(sizes)) != 1:
+        raise ValueError(f"linksim replay needs homogeneous node sizes, "
+                         f"got {sorted(set(sizes))}")
+    return MachineSpec(name=name, num_pods=len(sizes), torus=(sizes[0],))
+
+
+def replay_assignment(grid, stencil, node_of_pos: np.ndarray,
+                      node_sizes: Sequence[int], weighted=True,
+                      machine: Optional[MachineSpec] = None) -> LinkReport:
+    """Simulate a mapping's stencil traffic on physical links.
+
+    Ranks are assigned blocked (rank r on node r // n) with each node's
+    grid positions taken in row-major order — the same convention as
+    ``remap.device_layout(intra_order="rowmajor")`` — so the logical
+    position -> chip layout is fully determined by the assignment.
+    """
+    node_of_pos = np.asarray(node_of_pos, dtype=np.int64)
+    if machine is None:
+        machine = machine_for_nodes(node_sizes)
+    order = np.argsort(node_of_pos, kind="stable")
+    layout_flat = np.empty(grid.size, dtype=np.int64)
+    layout_flat[order] = np.arange(grid.size)
+    return simulate(stencil_collectives(grid, stencil, weighted=weighted),
+                    layout_flat, machine)

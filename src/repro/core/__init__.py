@@ -1,29 +1,34 @@
 """Core library: the paper's contribution — stencil-aware process-to-node
 mapping for Cartesian grids (Hunold et al., CS.DC 2020)."""
 from .cost import MappingCost, blocked_assignment, evaluate, node_of_rank_blocked
-from .cost_delta import BatchSwapDelta, Delta, IncrementalCost, NeighborTable
+from .cost_delta import (BatchSwapDelta, Delta, IncrementalCost,
+                         NeighborTable, PortfolioCost, PortfolioSwapDelta)
 from .grid import CartGrid, dims_create
-from .mapping import (ANNEALED_PREFIX, MAPPERS, REFINE_PREFIXES,
-                      REFINED_PREFIX, SCHEDULED_PREFIX, BlockedMapper,
-                      GraphGreedyMapper, HyperplaneMapper, KDTreeMapper,
-                      Mapper, MapperInapplicable, NodecartMapper,
-                      RandomMapper, StencilStripsMapper, available_mappers,
-                      get_mapper)
-from .refine import (RefinedMapper, RefineResult, ScheduledRefiner,
-                     SwapRefiner, refine_assignment)
-from .remap import device_layout, layout_cost, mapped_device_array
-from .stencil import Stencil
+from .mapping import (ANNEALED_PREFIX, MAPPERS, PORTFOLIO_PREFIX,
+                      REFINE_PREFIXES, REFINED_PREFIX, SCHEDULED_PREFIX,
+                      BlockedMapper, GraphGreedyMapper, HyperplaneMapper,
+                      KDTreeMapper, Mapper, MapperInapplicable,
+                      NodecartMapper, RandomMapper, StencilStripsMapper,
+                      available_mappers, get_mapper, parse_mapper_options,
+                      split_mapper_name)
+from .refine import (PortfolioRefiner, RefinedMapper, RefineResult,
+                     ScheduledRefiner, SwapRefiner, refine_assignment)
+from .remap import (device_layout, ensure_refined, layout_cost,
+                    mapped_device_array)
+from .stencil import Stencil, resolve_weighted
 
 __all__ = [
-    "CartGrid", "dims_create", "Stencil", "MappingCost", "evaluate",
-    "blocked_assignment", "node_of_rank_blocked",
+    "CartGrid", "dims_create", "Stencil", "resolve_weighted", "MappingCost",
+    "evaluate", "blocked_assignment", "node_of_rank_blocked",
     "BatchSwapDelta", "Delta", "IncrementalCost", "NeighborTable",
+    "PortfolioCost", "PortfolioSwapDelta",
     "Mapper", "MapperInapplicable", "MAPPERS", "REFINED_PREFIX",
-    "SCHEDULED_PREFIX", "ANNEALED_PREFIX", "REFINE_PREFIXES",
-    "get_mapper", "available_mappers",
+    "SCHEDULED_PREFIX", "ANNEALED_PREFIX", "PORTFOLIO_PREFIX",
+    "REFINE_PREFIXES", "get_mapper", "available_mappers",
+    "split_mapper_name", "parse_mapper_options",
     "BlockedMapper", "RandomMapper", "NodecartMapper", "HyperplaneMapper",
     "KDTreeMapper", "StencilStripsMapper", "GraphGreedyMapper",
-    "SwapRefiner", "ScheduledRefiner", "RefineResult", "refine_assignment",
-    "RefinedMapper",
-    "device_layout", "layout_cost", "mapped_device_array",
+    "SwapRefiner", "ScheduledRefiner", "PortfolioRefiner", "RefineResult",
+    "refine_assignment", "RefinedMapper",
+    "device_layout", "layout_cost", "mapped_device_array", "ensure_refined",
 ]

@@ -17,7 +17,7 @@ from typing import Optional, Sequence
 import numpy as np
 
 from .grid import CartGrid
-from .stencil import Stencil
+from .stencil import Stencil, resolve_weighted
 
 __all__ = ["MappingCost", "evaluate", "node_of_rank_blocked", "blocked_assignment"]
 
@@ -56,8 +56,10 @@ def evaluate(grid: CartGrid, stencil: Stencil, node_of_pos: np.ndarray,
     Args:
       node_of_pos: (p,) node id owning each *grid position* (row-major).
       weighted: if True, use the stencil's per-offset byte weights instead of
-        unit edge weights.
+        unit edge weights; ``"auto"`` uses them iff the stencil carries
+        non-unit weights (:func:`~repro.core.stencil.resolve_weighted`).
     """
+    weighted = resolve_weighted(weighted, stencil)
     node_of_pos = np.asarray(node_of_pos)
     if node_of_pos.shape != (grid.size,):
         raise ValueError(f"node_of_pos must have shape ({grid.size},)")

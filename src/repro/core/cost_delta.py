@@ -48,9 +48,15 @@ import numpy as np
 
 from .cost import MappingCost
 from .grid import CartGrid
-from .stencil import Stencil
+from .stencil import Stencil, resolve_weighted
 
-__all__ = ["IncrementalCost", "NeighborTable", "Delta", "BatchSwapDelta"]
+__all__ = ["IncrementalCost", "NeighborTable", "Delta", "BatchSwapDelta",
+           "PortfolioCost", "PortfolioSwapDelta", "LOAD_CHUNK_ELEMS"]
+
+#: Load-matrix scoring materializes (chunk, N) float matrices; callers chunk
+#: proposals so chunk * N stays below this, bounding peak extra memory to
+#: ~tens of MB no matter how large the frontier (or portfolio) is.
+LOAD_CHUNK_ELEMS = 1 << 21
 
 
 @dataclass(frozen=True)
@@ -127,12 +133,13 @@ class IncrementalCost:
       node_of_pos: (p,) node id owning each grid position (row-major); a
         private copy is taken.
       weighted: use the stencil's per-offset byte weights (as in
-        ``evaluate(weighted=True)``).
+        ``evaluate(weighted=True)``); ``"auto"`` uses them iff the stencil
+        carries non-unit weights.
     """
 
     def __init__(self, grid: CartGrid, stencil: Stencil,
                  node_of_pos: np.ndarray, num_nodes: Optional[int] = None,
-                 weighted: bool = False):
+                 weighted=False):
         node_of_pos = np.asarray(node_of_pos, dtype=np.int64)
         if node_of_pos.shape != (grid.size,):
             raise ValueError(f"node_of_pos must have shape ({grid.size},)")
@@ -141,7 +148,8 @@ class IncrementalCost:
         self.table = NeighborTable.build(grid, stencil)
         self.n_nodes = int(num_nodes if num_nodes is not None
                            else node_of_pos.max() + 1)
-        self.weights = (stencil.weight_array() if weighted
+        self.weighted = resolve_weighted(weighted, stencil)
+        self.weights = (stencil.weight_array() if self.weighted
                         else np.ones(stencil.k))
         self.node_of_pos = node_of_pos.copy()
         # integer crossing counts: (k,) total and (N, k) per source node
@@ -398,3 +406,285 @@ class IncrementalCost:
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return (f"IncrementalCost(p={self.grid.size}, k={self.stencil.k}, "
                 f"N={self.n_nodes}, j_sum={self.j_sum})")
+
+
+@dataclass(frozen=True)
+class PortfolioSwapDelta:
+    """Vectorized effect of ``m`` swap proposals, each scored against its
+    *own* portfolio state (row ``rows[i]`` of a :class:`PortfolioCost`).
+
+    Integer fields are bit-exact with the scalar path: ``d_count_off[i]``
+    equals ``IncrementalCost(..., assignments[rows[i]]).delta_swap(p[i],
+    q[i]).d_count_off`` and ``new_per_node[i]`` equals the matching
+    ``peek_per_node`` rebuild (same ascending-offset ``w * count``
+    accumulation), so ``d_j_sum`` / ``new_j_max`` match bitwise too."""
+
+    rows: np.ndarray                      # (m,) int64 portfolio state index
+    p: np.ndarray                         # (m,) int64
+    q: np.ndarray                         # (m,) int64
+    d_count_off: np.ndarray               # (m, k) int64
+    d_j_sum: np.ndarray                   # (m,) float64
+    new_per_node: Optional[np.ndarray]    # (m, N) float64 or None
+    new_j_max: Optional[np.ndarray]       # (m,) float64 or None
+    d_count_node: Optional[np.ndarray]    # (m, N, k) int64 or None
+
+    @property
+    def size(self) -> int:
+        return int(self.p.size)
+
+
+class PortfolioCost:
+    """K independent :class:`IncrementalCost` states advanced in lock-step.
+
+    This is the portfolio-mode counterpart of
+    :meth:`IncrementalCost.batch_swap_deltas`: instead of scoring ``m``
+    proposals against one assignment, :meth:`swap_deltas` scores one
+    proposal *per portfolio member* against that member's own assignment —
+    the inner loop of :class:`~repro.core.refine.PortfolioRefiner`, where K
+    simulated-annealing ladders each propose a swap per move and all K
+    frontiers are scored in a handful of numpy passes.
+
+    State layout mirrors the scalar class, stacked along a leading K axis:
+    ``node`` is (K, p), the integer crossing counts are (K, k) and
+    (K, N, k), and the cached per-node loads (K, N) are rebuilt from counts
+    with the same ascending-offset accumulation — so every row of every
+    quantity is bit-exact with a scalar ``IncrementalCost`` tracking the
+    same assignment (for unit/dyadic weights; within an ulp otherwise,
+    same caveat as the scalar class).  The neighbour table is built once
+    and shared by all K states.
+
+    Usage::
+
+        pc = PortfolioCost(grid, stencil, assignments, num_nodes=N)  # (K, p)
+        d = pc.swap_deltas(rows, P, Q)      # one proposal per listed row
+        accept = d.new_j_max < pc.j_max()[rows]
+        pc.apply_swaps(rows[accept], P[accept], Q[accept])
+    """
+
+    def __init__(self, grid: CartGrid, stencil: Stencil,
+                 assignments: np.ndarray, num_nodes: Optional[int] = None,
+                 weighted=False, table: Optional[NeighborTable] = None):
+        assignments = np.asarray(assignments, dtype=np.int64)
+        if assignments.ndim != 2 or assignments.shape[1] != grid.size:
+            raise ValueError(
+                f"assignments must have shape (K, {grid.size})")
+        self.grid = grid
+        self.stencil = stencil
+        self.table = table if table is not None \
+            else NeighborTable.build(grid, stencil)
+        self.n_starts = int(assignments.shape[0])
+        self.n_nodes = int(num_nodes if num_nodes is not None
+                           else assignments.max() + 1)
+        self.weighted = resolve_weighted(weighted, stencil)
+        self.weights = (stencil.weight_array() if self.weighted
+                        else np.ones(stencil.k))
+        self.node = assignments.copy()
+        k = stencil.k
+        self._count_off = np.zeros((self.n_starts, k), dtype=np.int64)
+        self._count_node = np.zeros((self.n_starts, self.n_nodes, k),
+                                    dtype=np.int64)
+        for j in range(k):
+            valid, tgt = self.table.out_valid[j], self.table.out_tgt[j]
+            crossing = valid[None, :] & (self.node != self.node[:, tgt])
+            self._count_off[:, j] = crossing.sum(axis=1)
+            rr, pp = np.nonzero(crossing)
+            np.add.at(self._count_node[:, :, j], (rr, self.node[rr, pp]), 1)
+        self._per_node = np.zeros((self.n_starts, self.n_nodes),
+                                  dtype=np.float64)
+        self._rebuild_rows(np.arange(self.n_starts))
+
+    def _rebuild_rows(self, rows: np.ndarray) -> None:
+        # same ascending-offset `per_node += w * count` accumulation as the
+        # scalar cache rebuild, so each row matches it bit-for-bit
+        out = np.zeros((rows.size, self.n_nodes), dtype=np.float64)
+        for j in range(self.stencil.k):
+            out += self.weights[j] * self._count_node[rows, :, j]
+        self._per_node[rows] = out
+
+    # -- read-only views ----------------------------------------------------
+    def j_sum(self) -> np.ndarray:
+        """(K,) j_sum per state, same accumulation order as the scalar."""
+        total = np.zeros(self.n_starts, dtype=np.float64)
+        for j in range(self.stencil.k):
+            total += float(self.weights[j]) * self._count_off[:, j]
+        return total
+
+    def per_node(self) -> np.ndarray:
+        return self._per_node.copy()
+
+    def j_max(self) -> np.ndarray:
+        """(K,) bottleneck load per state (from the counts-rebuilt cache)."""
+        return self._per_node.max(axis=1, initial=0.0)
+
+    def assignment(self, row: int) -> np.ndarray:
+        return self.node[int(row)].copy()
+
+    def cost(self, row: int) -> MappingCost:
+        per_node = self._per_node[int(row)].copy()
+        bottleneck = int(per_node.argmax()) if self.n_nodes else 0
+        j_sum = 0.0
+        for j in range(self.stencil.k):
+            j_sum += float(self.weights[j]) * float(self._count_off[row, j])
+        return MappingCost(j_sum=j_sum,
+                           j_max=float(per_node.max(initial=0.0)),
+                           per_node=per_node, bottleneck=bottleneck)
+
+    # -- boundary extraction ------------------------------------------------
+    def boundary_masks(self) -> np.ndarray:
+        """(K, p) bool: positions with a crossing incident edge, per state.
+        ``np.nonzero(mask[i])[0]`` reproduces the scalar
+        :meth:`IncrementalCost.boundary_positions` ordering exactly."""
+        on_b = np.zeros((self.n_starts, self.grid.size), dtype=bool)
+        for j in range(self.stencil.k):
+            valid, tgt = self.table.out_valid[j], self.table.out_tgt[j]
+            crossing = valid[None, :] & (self.node != self.node[:, tgt])
+            on_b |= crossing
+            rr, pp = np.nonzero(crossing)
+            on_b[rr, tgt[pp]] = True
+        return on_b
+
+    # -- proposals ----------------------------------------------------------
+    def swap_deltas(self, rows, p_arr, q_arr, with_loads: bool = True,
+                    with_counts: bool = False) -> PortfolioSwapDelta:
+        """Score ``m`` swap proposals, proposal i against state ``rows[i]``.
+
+        Same four directed-edge groups per offset as
+        :meth:`IncrementalCost.batch_swap_deltas`, with every node lookup
+        routed through the proposal's own state row.  ``with_loads``
+        materializes the exact post-swap (m, N) ``new_per_node`` /
+        ``new_j_max`` (chunked over proposals so peak extra memory respects
+        :data:`LOAD_CHUNK_ELEMS`); ``with_counts`` additionally returns the
+        integer (m, N, k) per-node count changes (the commit payload
+        :meth:`apply_swaps` uses).
+        """
+        rows = np.atleast_1d(np.asarray(rows, dtype=np.int64))
+        P = np.atleast_1d(np.asarray(p_arr, dtype=np.int64))
+        Q = np.atleast_1d(np.asarray(q_arr, dtype=np.int64))
+        if not (rows.shape == P.shape == Q.shape) or rows.ndim != 1:
+            raise ValueError("rows, p_arr, q_arr must be 1-d of equal length")
+        if rows.size:
+            if rows.min() < 0 or rows.max() >= self.n_starts:
+                raise ValueError("portfolio rows out of range")
+            if (P.min() < 0 or P.max() >= self.grid.size
+                    or Q.min() < 0 or Q.max() >= self.grid.size):
+                raise ValueError("positions out of range")
+        m, k = P.size, self.stencil.k
+        d_count_off = np.zeros((m, k), dtype=np.int64)
+        new_per_node = (np.empty((m, self.n_nodes), dtype=np.float64)
+                        if with_loads else None)
+        d_count_node = (np.zeros((m, self.n_nodes, k), dtype=np.int64)
+                        if with_counts else None)
+        # the load/count paths materialize a (chunk, N, k) scratch, so the
+        # chunk is sized against N * k to keep peak memory on budget
+        chunk = m if not (with_loads or with_counts) else \
+            max(1, LOAD_CHUNK_ELEMS // max(1, self.n_nodes * k))
+        for s in range(0, m, max(chunk, 1)):
+            e = min(s + chunk, m)
+            self._swap_deltas_chunk(rows[s:e], P[s:e], Q[s:e],
+                                    d_count_off[s:e],
+                                    new_per_node[s:e] if with_loads else None,
+                                    d_count_node[s:e] if with_counts else None)
+        d_j_sum = np.zeros(m, dtype=np.float64)
+        for j in range(k):
+            d_j_sum += float(self.weights[j]) * d_count_off[:, j]
+        new_j_max = (new_per_node.max(axis=1, initial=0.0)
+                     if with_loads else None)
+        return PortfolioSwapDelta(rows, P, Q, d_count_off, d_j_sum,
+                                  new_per_node, new_j_max, d_count_node)
+
+    def _swap_deltas_chunk(self, rows, P, Q, d_count_off, new_per_node,
+                           d_count_node) -> None:
+        """Whole-stencil vectorized scoring: every (offset, edge-group)
+        quantity is computed as a (k, m) array in one pass, so the per-move
+        cost of a portfolio ladder is a fixed handful of numpy ops instead
+        of O(k) interpreted iterations."""
+        node, t, m, k = self.node, self.table, P.size, self.stencil.k
+        A, B = node[rows, P], node[rows, Q]                  # (m,)
+        rows2, A2, B2 = rows[None, :], A[None, :], B[None, :]
+        P2, Q2 = P[None, :], Q[None, :]
+        # out-edges of p (target owner swaps if it is the partner or, on
+        # degenerate periodic axes, p itself — same as the scalar path)
+        T1 = t.out_tgt[:, P]                                 # (k, m)
+        N1 = node[rows2, T1]
+        NV1 = np.where(T1 == Q2, A2, np.where(T1 == P2, B2, N1))
+        old1 = t.out_valid[:, P] & (N1 != A2)
+        new1 = t.out_valid[:, P] & (NV1 != B2)
+        # out-edges of q (mirror)
+        T3 = t.out_tgt[:, Q]
+        N3 = node[rows2, T3]
+        NV3 = np.where(T3 == P2, B2, np.where(T3 == Q2, A2, N3))
+        old3 = t.out_valid[:, Q] & (N3 != B2)
+        new3 = t.out_valid[:, Q] & (NV3 != A2)
+        # in-edges from outside the pair
+        S2 = t.in_src[:, P]
+        V2 = t.in_valid[:, P] & (S2 != Q2) & (S2 != P2)
+        N2 = node[rows2, S2]
+        old2 = V2 & (N2 != A2)
+        new2 = V2 & (N2 != B2)
+        S4 = t.in_src[:, Q]
+        V4 = t.in_valid[:, Q] & (S4 != P2) & (S4 != Q2)
+        N4 = node[rows2, S4]
+        old4 = V4 & (N4 != B2)
+        new4 = V4 & (N4 != A2)
+        d_count_off[:] = (
+            (new1.astype(np.int64) - old1) + (new2.astype(np.int64) - old2)
+            + (new3.astype(np.int64) - old3)
+            + (new4.astype(np.int64) - old4)).T
+        if new_per_node is None and d_count_node is None:
+            return
+        own = d_count_node if d_count_node is not None else \
+            np.zeros((m, self.n_nodes, k), dtype=np.int64)
+
+        def scatter(mask, node_vals, by):
+            jj, mm = np.nonzero(mask)
+            np.add.at(own, (mm, node_vals[jj, mm], jj), by)
+
+        scatter(old1, np.broadcast_to(A2, (k, m)), -1)
+        scatter(new1, np.broadcast_to(B2, (k, m)), +1)
+        scatter(old3, np.broadcast_to(B2, (k, m)), -1)
+        scatter(new3, np.broadcast_to(A2, (k, m)), +1)
+        scatter(new2 & ~old2, N2, +1)
+        scatter(old2 & ~new2, N2, -1)
+        scatter(new4 & ~old4, N4, +1)
+        scatter(old4 & ~new4, N4, -1)
+        if new_per_node is not None:
+            # w_j * (count + d), j ascending — matches peek_per_node
+            new_per_node[:] = 0.0
+            for j in range(k):
+                new_per_node += self.weights[j] * (
+                    self._count_node[rows, :, j] + own[:, :, j])
+
+    # -- commits ------------------------------------------------------------
+    def commit(self, delta: PortfolioSwapDelta, idx=None) -> None:
+        """Apply already-scored proposals (requires ``with_counts``); the
+        optional ``idx`` selects a subset of the delta's proposals (the
+        accepted ones).  Selected rows must be distinct.  The affected
+        rows' per-node caches are rebuilt from counts, exactly as the
+        scalar class does after a commit."""
+        if delta.d_count_node is None:
+            raise ValueError("commit needs a delta scored with_counts=True")
+        sel = np.arange(delta.size) if idx is None \
+            else np.atleast_1d(np.asarray(idx, dtype=np.int64))
+        rows, P, Q = delta.rows[sel], delta.p[sel], delta.q[sel]
+        if np.unique(rows).size != rows.size:
+            raise ValueError("commit: one swap per row at most")
+        if rows.size == 0:
+            return
+        self._count_off[rows] += delta.d_count_off[sel]
+        self._count_node[rows] += delta.d_count_node[sel]
+        pv, qv = self.node[rows, P].copy(), self.node[rows, Q].copy()
+        self.node[rows, P] = qv
+        self.node[rows, Q] = pv
+        self._rebuild_rows(rows)
+
+    def apply_swaps(self, rows, p_arr, q_arr) -> PortfolioSwapDelta:
+        """Score-and-commit one swap per listed row (rows must be
+        distinct)."""
+        d = self.swap_deltas(rows, p_arr, q_arr, with_loads=False,
+                             with_counts=True)
+        self.commit(d)
+        return d
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (f"PortfolioCost(K={self.n_starts}, p={self.grid.size}, "
+                f"k={self.stencil.k}, N={self.n_nodes})")

@@ -10,35 +10,43 @@ Names resolve in two layers:
    ``"random"``, ``"nodecart"``, ``"hyperplane"``, ``"kdtree"``,
    ``"stencil_strips"``, ``"graphgreedy"``).  ``kwargs`` go to the
    algorithm's constructor.
-2. **Refinement prefixes** — ``"<prefix>:<base>"`` recursively resolves
-   ``<base>`` (so a base's own name rules apply unchanged) and wraps it in
-   a :class:`~repro.core.refine.RefinedMapper`.  ``kwargs`` then configure
-   the *refiner*, not the base algorithm:
+2. **Refinement prefixes** — ``"<prefix>[<options>]:<base>"`` recursively
+   resolves ``<base>`` (so a base's own name rules apply unchanged) and
+   wraps it in a :class:`~repro.core.refine.RefinedMapper`.  Refiner
+   configuration comes from the optional *bracket options* — a
+   comma-separated ``key=value`` list, e.g. ``"portfolio[k=8,seed=3]:"``,
+   with values coerced ``int`` → ``float`` → ``bool`` → ``str`` — merged
+   over any ``kwargs`` (bracket options win; the spelled name is the more
+   specific spec).  Either way they configure the *refiner*, never the
+   base algorithm:
 
-   ========== ===================================================== =========
-   prefix     refiner                                               objective
-   ========== ===================================================== =========
-   refined:   :class:`~repro.core.refine.SwapRefiner`               J_sum
-   refined2:  :class:`~repro.core.refine.ScheduledRefiner`          (J_max, J_sum)
-   annealed:  ScheduledRefiner(anneal=True) — adds the SA ladder    (J_max, J_sum)
-   ========== ===================================================== =========
-
-   Prefixes do not stack (``"refined:refined:blocked"`` is rejected by the
-   recursive base lookup, since prefixed names are never registry keys).
+   ============ ===================================================== =========
+   prefix       refiner                                               objective
+   ============ ===================================================== =========
+   refined:     :class:`~repro.core.refine.SwapRefiner`               J_sum
+   refined2:    :class:`~repro.core.refine.ScheduledRefiner`          (J_max, J_sum)
+   annealed:    ScheduledRefiner(anneal=True) — adds the SA ladder    (J_max, J_sum)
+   portfolio:   :class:`~repro.core.refine.PortfolioRefiner` — K      (J_max, J_sum)
+                batched annealing starts, never worse than annealed:
+   ============ ===================================================== =========
 
 Every spelling accepted here is accepted everywhere a mapper name appears:
 ``device_layout`` / ``mapped_device_array`` (:mod:`repro.core.remap`),
 ``make_mapped_mesh`` (:mod:`repro.launch.mesh`), and the benchmark drivers.
+:func:`split_mapper_name` exposes the parse (prefix, options, base) for
+callers that need to inspect a spelling without instantiating it.
 
 Usage::
 
     get_mapper("hyperplane")                       # paper §V.B
     get_mapper("refined:kdtree", policy="steepest")
     get_mapper("annealed:nodecart", seed=7).assignment(grid, stencil, sizes)
+    get_mapper("portfolio[k=4,kill_factor=1.25]:hyperplane")
 """
 from __future__ import annotations
 
-from typing import Dict, Type
+import re
+from typing import Dict, Optional, Tuple, Type
 
 from .base import Mapper, MapperInapplicable, aggregate_node_size, check_bijection
 from .blocked import BlockedMapper
@@ -65,9 +73,76 @@ REFINED_PREFIX = "refined:"
 SCHEDULED_PREFIX = "refined2:"
 #: Prefix for the scheduled refiner with the simulated-annealing ladder.
 ANNEALED_PREFIX = "annealed:"
+#: Prefix for the K-start batched annealing portfolio.
+PORTFOLIO_PREFIX = "portfolio:"
 
 #: All refinement prefixes, in registry-listing order.
-REFINE_PREFIXES = (REFINED_PREFIX, SCHEDULED_PREFIX, ANNEALED_PREFIX)
+REFINE_PREFIXES = (REFINED_PREFIX, SCHEDULED_PREFIX, ANNEALED_PREFIX,
+                   PORTFOLIO_PREFIX)
+
+#: ``<prefix>[k=8,...]:<base>`` — the option-bearing prefixed spelling.
+_PREFIXED_NAME_RE = re.compile(
+    r"^(?P<prefix>[a-z][a-z0-9_]*)(?:\[(?P<opts>[^\]]*)\])?:(?P<base>.+)$")
+
+
+def _coerce_option(value: str):
+    """Bracket-option values: int, then float, then bool, else string."""
+    for cast in (int, float):
+        try:
+            return cast(value)
+        except ValueError:
+            pass
+    if value in ("true", "True"):
+        return True
+    if value in ("false", "False"):
+        return False
+    if value in ("none", "None"):
+        return None
+    return value
+
+
+def parse_mapper_options(opts: str) -> Dict[str, object]:
+    """Parse a bracket-option body (``"k=8,seed=3"``) into kwargs."""
+    out: Dict[str, object] = {}
+    for item in opts.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        key, sep, value = item.partition("=")
+        key = key.strip()
+        if not sep or not key:
+            raise ValueError(
+                f"bad mapper option {item!r}: expected key=value")
+        if key in out:
+            raise ValueError(f"duplicate mapper option {key!r}")
+        out[key] = _coerce_option(value.strip())
+    return out
+
+
+def split_mapper_name(name: str) \
+        -> Optional[Tuple[str, Dict[str, object], str]]:
+    """Split a refinement-prefixed spelling into ``(prefix, options,
+    base_name)``; None if ``name`` is not a refinement spelling.  The
+    prefix is returned without the colon (``"portfolio"``), options as a
+    kwargs dict (empty when no bracket is present)."""
+    m = _PREFIXED_NAME_RE.match(name)
+    if m is None or m.group("prefix") + ":" not in REFINE_PREFIXES:
+        return None
+    return (m.group("prefix"), parse_mapper_options(m.group("opts") or ""),
+            m.group("base"))
+
+
+def _make_refiner(prefix: str, kwargs: Dict[str, object]):
+    from ..refine import PortfolioRefiner, ScheduledRefiner
+    if prefix == "refined":
+        return None                       # RefinedMapper's default SwapRefiner
+    if prefix == "refined2":
+        return ScheduledRefiner(**kwargs)
+    if prefix == "annealed":
+        return ScheduledRefiner(anneal=True, **kwargs)
+    if prefix == "portfolio":
+        return PortfolioRefiner(**kwargs)
+    raise KeyError(prefix)  # pragma: no cover - guarded by split_mapper_name
 
 
 def get_mapper(name: str, **kwargs) -> Mapper:
@@ -75,26 +150,23 @@ def get_mapper(name: str, **kwargs) -> Mapper:
     resolution contract).
 
     ``"refined:<base>"`` wraps ``<base>`` with swap-refinement local search,
-    ``"refined2:<base>"`` with the alternating j_sum/j_max schedule, and
-    ``"annealed:<base>"`` adds the simulated-annealing ladder (``kwargs``
-    then configure the refiner, not the base algorithm); every prefix
-    composes with every key in :data:`MAPPERS`.
+    ``"refined2:<base>"`` with the alternating j_sum/j_max schedule,
+    ``"annealed:<base>"`` adds the simulated-annealing ladder, and
+    ``"portfolio:<base>"`` runs K batched annealing starts.  ``kwargs`` and
+    bracket options (``"portfolio[k=8]:<base>"``; bracket wins on conflict)
+    configure the refiner, not the base algorithm; every prefix composes
+    with every key in :data:`MAPPERS`.
     """
-    if name.startswith(REFINED_PREFIX):
+    parsed = split_mapper_name(name)
+    if parsed is not None:
         from ..refine import RefinedMapper
-        base = get_mapper(name[len(REFINED_PREFIX):])
-        return RefinedMapper(base, **kwargs)
-    if name.startswith(SCHEDULED_PREFIX):
-        from ..refine import RefinedMapper, ScheduledRefiner
-        base = get_mapper(name[len(SCHEDULED_PREFIX):])
-        return RefinedMapper(base, refiner=ScheduledRefiner(**kwargs),
-                             prefix="refined2")
-    if name.startswith(ANNEALED_PREFIX):
-        from ..refine import RefinedMapper, ScheduledRefiner
-        base = get_mapper(name[len(ANNEALED_PREFIX):])
-        return RefinedMapper(base,
-                             refiner=ScheduledRefiner(anneal=True, **kwargs),
-                             prefix="annealed")
+        prefix, opts, base_name = parsed
+        base = get_mapper(base_name)
+        merged = {**kwargs, **opts}
+        if prefix == "refined":
+            return RefinedMapper(base, **merged)
+        return RefinedMapper(base, refiner=_make_refiner(prefix, merged),
+                             prefix=prefix)
     try:
         cls = MAPPERS[name]
     except KeyError:
@@ -118,5 +190,6 @@ __all__ = [
     "BlockedMapper", "RandomMapper", "NodecartMapper", "HyperplaneMapper",
     "KDTreeMapper", "StencilStripsMapper", "GraphGreedyMapper",
     "MAPPERS", "REFINED_PREFIX", "SCHEDULED_PREFIX", "ANNEALED_PREFIX",
-    "REFINE_PREFIXES", "get_mapper", "available_mappers",
+    "PORTFOLIO_PREFIX", "REFINE_PREFIXES", "get_mapper", "available_mappers",
+    "split_mapper_name", "parse_mapper_options",
 ]

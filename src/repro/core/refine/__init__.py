@@ -14,15 +14,21 @@ package supplies that pass in three tiers:
 * :class:`ScheduledRefiner` — alternates j_sum/j_max SwapRefiner phases
   (optionally with a simulated-annealing temperature ladder) so bottleneck
   relief doesn't stall at the first J_max plateau.
-* :class:`RefinedMapper` — packages either refiner as a drop-in
+* :class:`PortfolioRefiner` — K independent annealing starts advanced as
+  one batched computation (:class:`~repro.core.cost_delta.PortfolioCost`),
+  with early-kill of dominated ladders; never worse than a single
+  ``annealed`` ladder on the same seed.
+* :class:`RefinedMapper` — packages any refiner as a drop-in
   :class:`~repro.core.mapping.Mapper`, so ``get_mapper("refined:<base>")``,
-  ``"refined2:<base>"`` and ``"annealed:<base>"`` upgrade any registered
-  algorithm (see :mod:`repro.core.mapping` for the name-resolution
-  contract).
+  ``"refined2:<base>"``, ``"annealed:<base>"`` and ``"portfolio:<base>"``
+  (with bracket options, e.g. ``"portfolio[k=8]:<base>"``) upgrade any
+  registered algorithm (see :mod:`repro.core.mapping` for the
+  name-resolution contract).
 """
 from .swap import RefineResult, SwapRefiner, refine_assignment
 from .schedule import ScheduledRefiner
+from .portfolio import PortfolioRefiner
 from .mapper import RefinedMapper
 
-__all__ = ["SwapRefiner", "ScheduledRefiner", "RefineResult",
-           "refine_assignment", "RefinedMapper"]
+__all__ = ["SwapRefiner", "ScheduledRefiner", "PortfolioRefiner",
+           "RefineResult", "refine_assignment", "RefinedMapper"]

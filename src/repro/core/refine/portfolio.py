@@ -1,0 +1,269 @@
+"""Multi-start annealing portfolio (seed-parallel plateau escape).
+
+A single :class:`~repro.core.refine.ScheduledRefiner` ladder stalls on
+J_max plateaus its one random walk cannot hop; general mapping tools
+(Schulz & Träff 2017, "Better Process Mapping and Sparse Quadratic
+Assignment"; Faraj et al. 2020, "High-Quality Hierarchical Process
+Mapping") escape those with a *portfolio* of independent starts.
+:class:`PortfolioRefiner` runs K such ladders as **one batched
+computation**:
+
+* the deterministic alternating j_sum/j_max rounds are seed-independent,
+  so they run **once** and every ladder starts from their output;
+* the K simulated-annealing ladders advance in lock-step — each ladder
+  draws its proposal from its own :class:`numpy.random.Generator`, and all
+  K (state, swap) deltas are scored by a single
+  :meth:`~repro.core.cost_delta.PortfolioCost.swap_deltas` call per move
+  (stacked ``(K, p)`` assignments, shared neighbour table, chunked load
+  matrices) instead of K interpreted ladder loops;
+* ladders whose best-seen bottleneck drifts beyond ``kill_factor`` times
+  the portfolio leader's are killed at temperature boundaries
+  (early-kill of dominated starts) — ladder 0 is never killed;
+* surviving ladder states are deduplicated and polished with the
+  schedule's phase objectives, and the lexicographically best
+  ``(J_max, J_sum)`` over *everything seen* (input included) is returned.
+
+Because ladder 0 uses ``default_rng(seeds[0])`` and the batched engine
+reproduces the scalar ladder's draw order and float arithmetic (exactly,
+for unit/dyadic weights), the portfolio's candidate set is a superset of
+``ScheduledRefiner(anneal=True, seed=seeds[0])``'s — so ``portfolio:`` is
+lexicographically never worse than ``annealed:`` on the same seed
+(pinned by ``tests/test_portfolio.py``).
+
+Usage::
+
+    from repro.core import PortfolioRefiner, get_mapper
+    res = PortfolioRefiner(k=8).refine(grid, stencil, a, num_nodes=N)
+    m = get_mapper("portfolio:hyperplane")        # default K=8
+    m = get_mapper("portfolio[k=4,seed=7]:kdtree")  # bracket options
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..cost_delta import IncrementalCost, PortfolioCost
+from ..grid import CartGrid
+from ..stencil import Stencil
+from .schedule import ScheduledRefiner
+from .swap import RefineResult
+
+__all__ = ["PortfolioRefiner"]
+
+
+class PortfolioRefiner:
+    """K-start batched annealing on top of the deterministic schedule.
+
+    Args:
+      k: number of independent annealing starts (ignored when ``seeds`` is
+        given explicitly).
+      seed: base rng seed; start i uses ``default_rng(seed + i)``, so
+        ``seed`` alone pins the whole portfolio and start 0 matches
+        ``ScheduledRefiner(anneal=True, seed=seed)``.
+      seeds: explicit per-start seeds (overrides ``k``/``seed``).
+      kill_factor: a start (other than start 0) is killed at a temperature
+        boundary when its best-seen J_max exceeds ``kill_factor`` times the
+        portfolio-wide best-seen J_max; ``None`` disables early-kill.
+      polish_top: how many surviving ladders get the full post-ladder
+        polish phases (start 0 always does; the rest are ranked by their
+        exact ladder-end ``(J_max, J_sum)``).  Unpolished survivors still
+        contribute their raw states as candidates.  ``None`` polishes every
+        survivor — thorough but the polish stage then scales with K, which
+        is what the default bounds.
+      Remaining keyword arguments configure the underlying schedule —
+      identical names and defaults as :class:`ScheduledRefiner`
+      (``objectives``, ``rounds``, ``policy``, ``max_passes``, ``weighted``
+      — ``"auto"`` keys byte-weighted scoring off the stencil — ``tol``,
+      ``max_partners``, ``engine``, ``temperatures``, ``sa_moves``).
+    """
+
+    def __init__(self, k: int = 8, seed: int = 0,
+                 seeds: Optional[Sequence[int]] = None,
+                 kill_factor: Optional[float] = 1.5,
+                 polish_top: Optional[int] = 3,
+                 objectives: Sequence[str] = ("j_sum", "j_max"),
+                 rounds: int = 4, policy: str = "first", max_passes: int = 8,
+                 weighted="auto", tol: float = 1e-12,
+                 max_partners: int = 32, engine: str = "batch",
+                 temperatures: Sequence[float] = (2.0, 1.0, 0.5, 0.25),
+                 sa_moves: int = 200):
+        if seeds is not None:
+            seeds = tuple(int(s) for s in seeds)
+        else:
+            seeds = tuple(int(seed) + i for i in range(int(k)))
+        if not seeds:
+            raise ValueError("portfolio needs at least one start")
+        if len(set(seeds)) != len(seeds):
+            raise ValueError(f"duplicate portfolio seeds: {seeds}")
+        if kill_factor is not None and kill_factor < 1.0:
+            raise ValueError("kill_factor must be >= 1.0 (or None)")
+        if polish_top is not None and polish_top < 1:
+            raise ValueError("polish_top must be >= 1 (or None)")
+        self.seeds = seeds
+        self.k = len(seeds)
+        self.kill_factor = None if kill_factor is None else float(kill_factor)
+        self.polish_top = None if polish_top is None else int(polish_top)
+        # the shared schedule: its deterministic rounds are the common
+        # prefix, its polish phases close each ladder, and its SA
+        # parameters define the ladders themselves.
+        self.schedule = ScheduledRefiner(
+            objectives=objectives, rounds=rounds, policy=policy,
+            max_passes=max_passes, weighted=weighted, tol=tol,
+            max_partners=max_partners, engine=engine, anneal=True,
+            temperatures=temperatures, sa_moves=sa_moves, seed=seeds[0])
+
+    # -- batched SA ladders -------------------------------------------------
+    def _batched_ladders(self, grid: CartGrid, stencil: Stencil,
+                         start: np.ndarray, num_nodes: Optional[int]) \
+            -> Tuple[PortfolioCost, np.ndarray, int, int]:
+        """Advance K ladders from ``start`` in lock-step.  Returns the
+        portfolio state, the per-ladder alive mask (False = early-killed),
+        total accepted swaps, and the count of killed ladders.
+
+        Per-ladder control flow replicates
+        :meth:`ScheduledRefiner._sa_ladder` move for move (same rng draw
+        order: position, partner, then acceptance only for uphill moves;
+        same per-temperature boundary snapshot; same early-out rules), so
+        ladder i's trajectory equals a scalar ladder seeded ``seeds[i]``.
+        Only the delta/energy arithmetic is batched across ladders.
+        """
+        sched = self.schedule
+        K = self.k
+        pc = PortfolioCost(grid, stencil,
+                           np.broadcast_to(start, (K, grid.size)),
+                           num_nodes=num_nodes, weighted=sched.weighted)
+        rngs = [np.random.default_rng(s) for s in self.seeds]
+        t_scale = float(np.mean(pc.weights))
+        j_sum0 = pc.j_sum()
+        eps = 1.0 / (1.0 + np.abs(j_sum0))          # (K,) per-ladder
+        alive = np.ones(K, dtype=bool)              # not early-killed
+        done = np.zeros(K, dtype=bool)              # ended (boundary < 2)
+        best_seen = np.stack([pc.j_max(), j_sum0], axis=1)   # (K, 2)
+        accepted = 0
+        killed = 0
+        for T0 in sched.temperatures:
+            T = max(T0 * t_scale, 1e-12)
+            masks = pc.boundary_masks()
+            boundaries = {i: np.nonzero(masks[i])[0]
+                          for i in range(K) if alive[i] and not done[i]}
+            stopped = set()     # no cross-node partner this temperature
+            for _ in range(sched.sa_moves):
+                rows, Ps, Qs = [], [], []
+                for i, b in boundaries.items():
+                    if done[i] or i in stopped:
+                        continue
+                    if b.size < 2:
+                        done[i] = True
+                        continue
+                    p = int(b[rngs[i].integers(b.size)])
+                    partners = b[pc.node[i, b] != pc.node[i, p]]
+                    if partners.size == 0:
+                        stopped.add(i)
+                        continue
+                    q = int(partners[rngs[i].integers(partners.size)])
+                    rows.append(i)
+                    Ps.append(p)
+                    Qs.append(q)
+                if not rows:
+                    break       # every ladder done/stopped this temperature
+                rows_a = np.asarray(rows, dtype=np.int64)
+                d = pc.swap_deltas(rows_a, Ps, Qs, with_loads=True,
+                                   with_counts=True)
+                d_e = (d.new_j_max - pc.j_max()[rows_a]
+                       + d.d_j_sum * eps[rows_a])
+                acc = [idx for idx, i in enumerate(rows)
+                       if (d_e[idx] <= 0.0
+                           or rngs[i].random() < math.exp(-float(d_e[idx]) / T))]
+                if acc:
+                    pc.commit(d, acc)
+                    accepted += len(acc)
+            # temperature boundary: exact keys, early-kill of dominated runs
+            keys = np.stack([pc.j_max(), pc.j_sum()], axis=1)
+            for i in range(K):
+                if tuple(keys[i]) < tuple(best_seen[i]):
+                    best_seen[i] = keys[i]
+            if self.kill_factor is not None:
+                lead = best_seen[alive, 0].min()
+                for i in range(1, K):
+                    if alive[i] and best_seen[i, 0] > self.kill_factor * lead:
+                        alive[i] = False
+                        killed += 1
+        return pc, alive, accepted, killed
+
+    # -- driver -------------------------------------------------------------
+    def refine(self, grid: CartGrid, stencil: Stencil,
+               node_of_pos: np.ndarray,
+               num_nodes: Optional[int] = None) -> RefineResult:
+        t0 = time.perf_counter()
+        sched = self.schedule
+        cur = np.asarray(node_of_pos, dtype=np.int64).copy()
+        initial = IncrementalCost(grid, stencil, cur, num_nodes=num_nodes,
+                                  weighted=sched.weighted).cost()
+        best, best_key = cur.copy(), (initial.j_max, initial.j_sum)
+
+        def consider(candidate: np.ndarray, key: Tuple[float, float]):
+            nonlocal best, best_key
+            if key < best_key:
+                best, best_key = candidate.copy(), key
+
+        # 1. shared deterministic prefix (seed-independent, run once)
+        cur, swaps, passes = sched.run_rounds(grid, stencil, cur, num_nodes,
+                                              consider)
+        t_rounds = time.perf_counter() - t0
+
+        # 2. K annealing ladders, batched
+        pc, alive, sa_accepted, killed = self._batched_ladders(
+            grid, stencil, cur, num_nodes)
+        swaps += sa_accepted
+        t_ladders = time.perf_counter() - t0 - t_rounds
+
+        # 3. every surviving raw ladder state is a candidate for free (its
+        # exact key is already on hand) ...
+        lad_j_max, lad_j_sum = pc.j_max(), pc.j_sum()
+        for i in range(self.k):
+            if alive[i]:
+                consider(pc.assignment(i),
+                         (float(lad_j_max[i]), float(lad_j_sum[i])))
+        # ... but the full polish phases scale with the grid, so only the
+        # most promising ladders get them: start 0 always (the dominance
+        # guarantee vs the single annealed run), then the best survivors by
+        # ladder-end key, deduplicating identical end states.
+        ranked = sorted((i for i in range(self.k) if alive[i]),
+                        key=lambda i: (lad_j_max[i], lad_j_sum[i], i))
+        budget = len(ranked) if self.polish_top is None else self.polish_top
+        seen = set()
+        polish_order = []
+        for i in [0] + ranked:
+            if not alive[i] or len(polish_order) >= budget:
+                continue
+            key = pc.node[i].tobytes()
+            if key not in seen:
+                seen.add(key)
+                polish_order.append(i)
+        for i in polish_order:
+            _, s, p = sched.polish(grid, stencil, pc.assignment(i), num_nodes,
+                                   consider)
+            swaps += s
+            passes += p
+
+        final = IncrementalCost(grid, stencil, best, num_nodes=num_nodes,
+                                weighted=sched.weighted).cost()
+        wall = time.perf_counter() - t0
+        stats = {
+            "k": self.k,
+            "seeds": self.seeds,
+            "sa_accepted": sa_accepted,
+            "killed": killed,
+            "polished": len(polish_order),
+            "ladder_keys": [(float(j), float(s)) for j, s in
+                            zip(pc.j_max(), pc.j_sum())],
+            "t_rounds_s": t_rounds,
+            "t_ladders_s": t_ladders,
+            "t_polish_s": wall - t_rounds - t_ladders,
+        }
+        return RefineResult(assignment=best, initial=initial, final=final,
+                            swaps=swaps, passes=passes, wall_time_s=wall,
+                            stats=stats)

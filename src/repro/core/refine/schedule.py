@@ -61,7 +61,7 @@ class ScheduledRefiner:
 
     def __init__(self, objectives: Sequence[str] = ("j_sum", "j_max"),
                  rounds: int = 4, policy: str = "first", max_passes: int = 8,
-                 weighted: bool = False, tol: float = 1e-12,
+                 weighted="auto", tol: float = 1e-12,
                  max_partners: int = 32, engine: str = "batch",
                  anneal: bool = False,
                  temperatures: Sequence[float] = (2.0, 1.0, 0.5, 0.25),
@@ -129,22 +129,15 @@ class ScheduledRefiner:
                     accepted += 1
         return ic.node_of_pos.copy(), accepted
 
-    # -- driver -------------------------------------------------------------
-    def refine(self, grid: CartGrid, stencil: Stencil,
-               node_of_pos: np.ndarray,
-               num_nodes: Optional[int] = None) -> RefineResult:
-        t0 = time.perf_counter()
-        cur = np.asarray(node_of_pos, dtype=np.int64).copy()
-        initial = IncrementalCost(grid, stencil, cur, num_nodes=num_nodes,
-                                  weighted=self.weighted).cost()
-        best, best_key = cur.copy(), (initial.j_max, initial.j_sum)
+    # -- schedule building blocks (shared with PortfolioRefiner) ------------
+    def run_rounds(self, grid: CartGrid, stencil: Stencil, cur: np.ndarray,
+                   num_nodes: Optional[int],
+                   consider) -> Tuple[np.ndarray, int, int]:
+        """The deterministic alternating-objective rounds: returns the final
+        phase-chain state (the SA ladder's start point — *not* the
+        lexicographic best) plus accepted-swap/pass counts.  ``consider`` is
+        called with every phase result's ``(assignment, (j_max, j_sum))``."""
         swaps = passes = 0
-
-        def consider(candidate: np.ndarray, key: Tuple[float, float]):
-            nonlocal best, best_key
-            if key < best_key:
-                best, best_key = candidate.copy(), key
-
         for _ in range(self.rounds):
             round_swaps = 0
             for obj in self.objectives:
@@ -157,20 +150,50 @@ class ScheduledRefiner:
                 consider(cur, (res.final.j_max, res.final.j_sum))
             if round_swaps == 0:
                 break
+        return cur, swaps, passes
+
+    def polish(self, grid: CartGrid, stencil: Stencil, cur: np.ndarray,
+               num_nodes: Optional[int],
+               consider) -> Tuple[np.ndarray, int, int]:
+        """One pass of the phase objectives over a (perturbed) state — what
+        the annealed schedule runs after its SA ladder."""
+        swaps = passes = 0
+        for obj in self.objectives:
+            res = self._phase(obj).refine(grid, stencil, cur,
+                                          num_nodes=num_nodes)
+            cur = res.assignment
+            swaps += res.swaps
+            passes += res.passes
+            consider(cur, (res.final.j_max, res.final.j_sum))
+        return cur, swaps, passes
+
+    # -- driver -------------------------------------------------------------
+    def refine(self, grid: CartGrid, stencil: Stencil,
+               node_of_pos: np.ndarray,
+               num_nodes: Optional[int] = None) -> RefineResult:
+        t0 = time.perf_counter()
+        cur = np.asarray(node_of_pos, dtype=np.int64).copy()
+        initial = IncrementalCost(grid, stencil, cur, num_nodes=num_nodes,
+                                  weighted=self.weighted).cost()
+        best, best_key = cur.copy(), (initial.j_max, initial.j_sum)
+
+        def consider(candidate: np.ndarray, key: Tuple[float, float]):
+            nonlocal best, best_key
+            if key < best_key:
+                best, best_key = candidate.copy(), key
+
+        cur, swaps, passes = self.run_rounds(grid, stencil, cur, num_nodes,
+                                             consider)
 
         if self.anneal:
             rng = np.random.default_rng(self.seed)
             perturbed, accepted = self._sa_ladder(grid, stencil, cur,
                                                   num_nodes, rng)
             swaps += accepted
-            cur = perturbed
-            for obj in self.objectives:   # polish the perturbed state
-                res = self._phase(obj).refine(grid, stencil, cur,
-                                              num_nodes=num_nodes)
-                cur = res.assignment
-                swaps += res.swaps
-                passes += res.passes
-                consider(cur, (res.final.j_max, res.final.j_sum))
+            cur, s, p = self.polish(grid, stencil, perturbed, num_nodes,
+                                    consider)
+            swaps += s
+            passes += p
 
         final = IncrementalCost(grid, stencil, best, num_nodes=num_nodes,
                                 weighted=self.weighted).cost()

@@ -35,7 +35,7 @@ from typing import Optional, Sequence, Tuple
 import numpy as np
 
 from ..cost import MappingCost
-from ..cost_delta import IncrementalCost
+from ..cost_delta import LOAD_CHUNK_ELEMS, IncrementalCost
 from ..grid import CartGrid
 from ..stencil import Stencil
 
@@ -47,7 +47,7 @@ _ENGINES = ("batch", "scalar")
 
 #: j_max batch scoring materializes (chunk, N) load matrices; this bounds
 #: chunk * N so peak extra memory stays ~tens of MB regardless of frontier.
-_LOAD_CHUNK_ELEMS = 1 << 21
+_LOAD_CHUNK_ELEMS = LOAD_CHUNK_ELEMS
 #: soft cap on far (non-adjacent) candidate pairs per sweep: when the
 #: frontier is huge (early refinement of a random-quality mapping) the
 #: per-vertex partner cap is scaled down so one sweep stays bounded.
@@ -56,7 +56,9 @@ _MAX_FAR_PAIRS = 200_000
 
 @dataclass
 class RefineResult:
-    """Outcome of one refinement run."""
+    """Outcome of one refinement run.  ``stats`` carries engine-specific
+    extras (the portfolio engine reports per-ladder keys, kills, and stage
+    wall-times there)."""
 
     assignment: np.ndarray       # (p,) refined node-of-position
     initial: MappingCost
@@ -64,6 +66,7 @@ class RefineResult:
     swaps: int
     passes: int
     wall_time_s: float
+    stats: Optional[dict] = None
 
     @property
     def improvement(self) -> float:
@@ -82,9 +85,14 @@ class SwapRefiner:
         the single best swap.
       max_passes: full boundary sweeps before giving up.
       max_swaps: hard cap on accepted swaps (None = unlimited).
-      weighted: score with the stencil's per-offset byte weights.
-      tol: minimum improvement for a swap to count (guards float noise on
-        weighted stencils; exact 0.0 works for unit weights).
+      weighted: score with the stencil's per-offset byte weights; the
+        default ``"auto"`` uses them iff the stencil carries non-unit
+        weights, so byte-weighted and unit-weight objectives share this one
+        code path.
+      tol: minimum improvement for a swap to count, in units of the mean
+        offset weight (scaled at refine time, so the default guards float
+        noise on byte-weighted stencils and stays exact-zero-equivalent for
+        unit weights).
       max_partners: cap on non-adjacent swap partners considered per
         (boundary vertex, communicating node) pair (evenly subsampled,
         deterministic).  Partners are boundary vertices of the nodes p
@@ -96,7 +104,7 @@ class SwapRefiner:
 
     def __init__(self, objective: str = "j_sum", policy: str = "first",
                  max_passes: int = 8, max_swaps: Optional[int] = None,
-                 weighted: bool = False, tol: float = 1e-12,
+                 weighted="auto", tol: float = 1e-12,
                  max_partners: int = 32, engine: str = "batch"):
         if objective not in _OBJECTIVES:
             raise ValueError(f"objective must be one of {_OBJECTIVES}")
@@ -114,6 +122,12 @@ class SwapRefiner:
         self.tol = float(tol)
         self.max_partners = int(max_partners)
         self.engine = engine
+
+    def _tol(self, ic: IncrementalCost) -> float:
+        """Acceptance threshold in the objective's own units: byte-weighted
+        deltas are ~mean-weight sized, so the raw tol would drown in float
+        noise there; unit weights leave it bitwise unchanged."""
+        return self.tol * float(np.mean(ic.weights))
 
     # -- driver -------------------------------------------------------------
     def refine(self, grid: CartGrid, stencil: Stencil,
@@ -229,7 +243,7 @@ class SwapRefiner:
             return False, swaps
         gains, _, _ = self._batch_gains(ic, P, Q)
         best = int(np.argmax(gains))
-        if gains[best] <= self.tol:
+        if gains[best] <= self._tol(ic):
             return False, swaps
         ic.apply_swap(int(P[best]), int(Q[best]))
         return True, swaps + 1
@@ -254,7 +268,7 @@ class SwapRefiner:
             return False, swaps
         gains, strict, affected = self._batch_gains(ic, P, Q,
                                                     need_affected=True)
-        improving = gains > self.tol
+        improving = gains > self._tol(ic)
         if strict is not None and bool(np.any(improving & strict)):
             improving &= strict
         cand = np.nonzero(improving)[0]
@@ -319,11 +333,12 @@ class SwapRefiner:
                            budget: float) -> Tuple[bool, int]:
         improved = False
         boundary = ic.boundary_positions()
+        tol = self._tol(ic)
         for p in boundary:
             if swaps >= budget:
                 break
             for q in self._candidates(ic, p, boundary):
-                if self._gain(ic, p, int(q)) > self.tol:
+                if self._gain(ic, p, int(q)) > tol:
                     ic.apply_swap(p, int(q))
                     swaps += 1
                     improved = True
@@ -336,7 +351,7 @@ class SwapRefiner:
         steepest pass is one sweep and max_passes bounds total work."""
         if swaps >= budget:
             return False, swaps
-        best_gain, best = self.tol, None
+        best_gain, best = self._tol(ic), None
         boundary = ic.boundary_positions()
         for p in boundary:
             for q in self._candidates(ic, p, boundary):

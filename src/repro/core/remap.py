@@ -17,13 +17,13 @@ import numpy as np
 
 from .cost import MappingCost, evaluate
 from .grid import CartGrid
-from .mapping import (REFINE_PREFIXES, Mapper, MapperInapplicable,
-                      get_mapper)
-from .refine import RefinedMapper, ScheduledRefiner
+from .mapping import (Mapper, MapperInapplicable, get_mapper,
+                      split_mapper_name)
+from .refine import PortfolioRefiner, RefinedMapper
 from .stencil import Stencil
 
 __all__ = ["device_layout", "layout_cost", "mapped_device_array",
-           "ensure_refined"]
+           "ensure_refined", "ELASTIC_PORTFOLIO_KWARGS"]
 
 
 def device_layout(mapper: Union[Mapper, str], mesh_shape: Sequence[int],
@@ -84,23 +84,34 @@ def layout_cost(layout: np.ndarray, stencil: Stencil,
                     weighted=weighted)
 
 
+#: The elastic upgrade's portfolio shape: a handful of starts with a short
+#: ladder — mesh construction is a one-off, but it should stay sub-second
+#: at pod scale while still hopping the J_max plateaus a single
+#: deterministic schedule stalls on.
+ELASTIC_PORTFOLIO_KWARGS = dict(k=4, sa_moves=100,
+                                temperatures=(1.0, 0.5, 0.25))
+
+
 def ensure_refined(mapper: Union[Mapper, str]) -> Union[Mapper, str]:
     """Return ``mapper`` upgraded with local-search refinement unless it
     already is a refining variant.  Plain mappers are wrapped with the
-    J_max-aware :class:`~repro.core.refine.ScheduledRefiner` (the
-    bottleneck is what elastic degradation hurts), with ``blocked`` as the
-    starting point when the base itself is inapplicable to ragged sizes
-    (e.g. Nodecart needs homogeneous nodes — refinement must still run);
-    already-refined names and :class:`RefinedMapper` instances pass
-    through unchanged."""
+    multi-start :class:`~repro.core.refine.PortfolioRefiner` (the
+    bottleneck is what elastic degradation hurts, and a seed portfolio is
+    what escapes its plateaus — :data:`ELASTIC_PORTFOLIO_KWARGS` keeps the
+    search mesh-construction sized), with ``blocked`` as the starting point
+    when the base itself is inapplicable to ragged sizes (e.g. Nodecart
+    needs homogeneous nodes — refinement must still run); already-refined
+    names (any ``<prefix>[opts]:`` spelling) and :class:`RefinedMapper`
+    instances pass through unchanged."""
     if isinstance(mapper, str):
-        if any(mapper.startswith(p) for p in REFINE_PREFIXES):
+        if split_mapper_name(mapper) is not None:
             return mapper
         mapper = get_mapper(mapper)
     if isinstance(mapper, RefinedMapper):
         return mapper
-    return RefinedMapper(mapper, refiner=ScheduledRefiner(), prefix="refined2",
-                         fallback="blocked")
+    return RefinedMapper(mapper,
+                         refiner=PortfolioRefiner(**ELASTIC_PORTFOLIO_KWARGS),
+                         prefix="portfolio", fallback="blocked")
 
 
 def mapped_device_array(devices: Sequence, mapper: Union[Mapper, str],
@@ -114,7 +125,7 @@ def mapped_device_array(devices: Sequence, mapper: Union[Mapper, str],
     elastic operation: pass the *surviving* chips per pod after failures.
     With ``auto_refine`` (default), any ragged layout — heterogeneous
     ``node_sizes`` or a ragged tail pod — upgrades ``mapper`` to its
-    scheduled-refinement variant at mesh construction time (see
+    multi-start annealing-portfolio variant at mesh construction time (see
     :func:`ensure_refined`), so callers no longer opt in by mapper name to
     recover mapping quality after a pod loses chips.
     """

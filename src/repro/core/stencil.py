@@ -13,7 +13,7 @@ from typing import Iterable, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["Stencil"]
+__all__ = ["Stencil", "resolve_weighted"]
 
 
 def _unit(d: int, i: int, a: int = 1) -> Tuple[int, ...]:
@@ -90,6 +90,14 @@ class Stencil:
         return len(self.offsets)
 
     @property
+    def is_weighted(self) -> bool:
+        """True if any offset carries a non-unit byte weight.  The refine
+        stack's ``weighted="auto"`` mode keys off this, so byte-weighted
+        stencils (``launch.mesh.stencil_for_plan``) are optimized in bytes
+        and unit stencils in edge counts through one code path."""
+        return any(w != 1.0 for w in self.weights)
+
+    @property
     def ndim(self) -> int:
         return len(self.offsets[0])
 
@@ -149,3 +157,15 @@ class Stencil:
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return f"Stencil({self.name}, k={self.k}, d={self.ndim})"
+
+
+def resolve_weighted(weighted, stencil: Stencil) -> bool:
+    """Resolve a ``weighted`` argument (True / False / ``"auto"``) against a
+    stencil.  ``"auto"`` means: use the stencil's per-offset byte weights
+    exactly when it carries non-unit ones — the mode the refine stack
+    defaults to, so mapping quality follows bytes whenever the caller's
+    stencil encodes them (``stencil_for_plan``) and reproduces the paper's
+    unit-edge objective otherwise."""
+    if weighted == "auto":
+        return stencil.is_weighted
+    return bool(weighted)

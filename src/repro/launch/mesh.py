@@ -80,18 +80,46 @@ def make_mapped_mesh(mapper_name: str, *, multi_pod: bool = False,
                      stencil: Optional[Stencil] = None,
                      devices: Optional[Sequence] = None,
                      node_sizes: Optional[Sequence[int]] = None,
-                     auto_refine: bool = True) -> Mesh:
+                     auto_refine: bool = True,
+                     mesh_shape: Optional[Sequence[int]] = None,
+                     axes: Optional[Sequence[str]] = None,
+                     chips_per_pod: Optional[int] = None) -> Mesh:
     """Production mesh with a paper-algorithm device permutation.
 
     ``node_sizes`` describes the surviving chips per pod for elastic
     operation (a pod that lost chips); with ``auto_refine`` (default) any
-    ragged layout gets the mapper's scheduled-refinement upgrade at mesh
-    construction time, so degraded pods keep a good J_max without callers
-    opting in via a ``refined2:``-prefixed name.
+    ragged layout gets the mapper's multi-start annealing-portfolio upgrade
+    (``portfolio:``) at mesh construction time, so degraded pods keep a
+    good J_max without callers opting in via a prefixed name.
+
+    ``mesh_shape`` / ``axes`` / ``chips_per_pod`` override the production
+    defaults — the elastic path uses this to re-mesh onto an arbitrary
+    survivor count (and tests to dry-run the whole flow on a handful of
+    fake host devices).  ``mapper_name`` accepts every registry spelling,
+    including bracket options (``"portfolio[k=8]:hyperplane"``).
     """
-    mesh_shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = mesh_axes(multi_pod)
+    if mesh_shape is None:
+        mesh_shape = (2, 16, 16) if multi_pod else (16, 16)
+        if axes is None:
+            axes = mesh_axes(multi_pod)
+    else:
+        mesh_shape = tuple(int(x) for x in mesh_shape)
+        if axes is None:
+            if len(mesh_shape) not in (2, 3):
+                raise ValueError("custom mesh_shape of rank "
+                                 f"{len(mesh_shape)} needs explicit axes")
+            axes = mesh_axes(multi_pod=len(mesh_shape) == 3)
+        if node_sizes is None and chips_per_pod is None:
+            # the production chips_per_pod (256) is meaningless for an
+            # arbitrary shape and would silently collapse everything onto
+            # one "node" — force the caller to say how pods are sized.
+            raise ValueError("custom mesh_shape needs node_sizes or "
+                             "chips_per_pod")
+    if len(axes) != len(mesh_shape):
+        raise ValueError(f"{len(axes)} axes for rank-{len(mesh_shape)} mesh")
     machine = machine_for(multi_pod)
+    if chips_per_pod is None:
+        chips_per_pod = machine.chips_per_pod
     if stencil is None:
         if cfg is None or shape is None:
             stencil = Stencil.nearest_neighbor(len(mesh_shape))
@@ -102,6 +130,6 @@ def make_mapped_mesh(mapper_name: str, *, multi_pod: bool = False,
         raise ValueError(f"need {math.prod(mesh_shape)} devices, "
                          f"have {len(devs)} (dry-run sets XLA_FLAGS)")
     arr = mapped_device_array(devs, get_mapper(mapper_name), mesh_shape,
-                              stencil, machine.chips_per_pod,
+                              stencil, chips_per_pod,
                               node_sizes=node_sizes, auto_refine=auto_refine)
-    return Mesh(arr, axes)
+    return Mesh(arr, tuple(axes))

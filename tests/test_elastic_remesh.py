@@ -1,0 +1,154 @@
+"""Elastic re-mesh integration: a runtime.fault node_loss drives
+make_mapped_mesh(node_sizes=survivors) end-to-end in a dry-run (subprocess
+with fake XLA host devices, the launch.dryrun idiom), and the surviving
+layout must be a device bijection whose (J_max, J_sum) is no worse than
+the blocked fallback.  A second, in-process test covers the same elastic
+path through mapped_device_array without jax mesh construction.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import Stencil, layout_cost, mapped_device_array
+from repro.runtime.fault import FaultInjector, SimulatedFault
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+def run_py(code: str, devices: int) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def drive_node_loss(schedule, node_sizes, chips_lost=2):
+    """Step a FaultInjector until its node_loss fires; return survivors."""
+    inj = FaultInjector(schedule=schedule)
+    sizes = list(node_sizes)
+    fired = None
+    for step in range(10):
+        try:
+            inj.check(step)
+        except SimulatedFault as f:
+            assert f.kind == "node_loss"
+            fired = f
+            sizes[f.node] -= chips_lost
+    assert fired is not None, "fault never fired"
+    assert all(s > 0 for s in sizes)
+    return sizes, fired
+
+
+def test_node_loss_remesh_dry_run():
+    """End-to-end dry-run: 4 pods x 4 chips, pod 1 loses 2 chips at step 3;
+    the re-mesh onto 14 survivors must build a real jax Mesh that is a
+    bijection over the surviving devices with (J_max, J_sum) no worse than
+    the blocked fallback (and no worse than the unrefined mapper layout —
+    the ragged auto-upgrade engaged)."""
+    out = run_py("""
+        import json
+        import numpy as np
+        from repro.core import Stencil, layout_cost, mapped_device_array
+        from repro.launch.mesh import make_mapped_mesh
+        from repro.runtime.fault import FaultInjector, SimulatedFault
+        import jax
+
+        stencil = Stencil.nearest_neighbor(2)
+        node_sizes = [4, 4, 4, 4]
+        inj = FaultInjector(schedule={3: "node_loss:1"})
+        for step in range(6):
+            try:
+                inj.check(step)
+            except SimulatedFault as f:
+                node_sizes[f.node] -= 2          # pod 1 keeps 2 of 4 chips
+
+        survivors = sum(node_sizes)
+        devices = jax.devices()[:survivors]
+        mesh = make_mapped_mesh("hyperplane", mesh_shape=(7, 2),
+                                axes=("data", "model"), stencil=stencil,
+                                devices=devices, node_sizes=node_sizes)
+        ids = np.vectorize(lambda d: d.id)(mesh.devices)
+
+        def cost_of(arr):
+            c = layout_cost(np.vectorize(lambda d: d.id)(arr), stencil,
+                            node_sizes)
+            return [c.j_max, c.j_sum]
+
+        blocked = mapped_device_array(devices, "blocked", (7, 2), stencil, 4,
+                                      node_sizes=node_sizes,
+                                      auto_refine=False)
+        unrefined = mapped_device_array(devices, "hyperplane", (7, 2),
+                                        stencil, 4, node_sizes=node_sizes,
+                                        auto_refine=False)
+        refined = layout_cost(ids, stencil, node_sizes)
+        print(json.dumps({
+            "node_sizes": node_sizes,
+            "mesh_shape": list(mesh.devices.shape),
+            "axes": list(mesh.axis_names),
+            "ids": sorted(int(i) for i in ids.reshape(-1)),
+            "refined": [refined.j_max, refined.j_sum],
+            "blocked": cost_of(blocked),
+            "unrefined": cost_of(unrefined),
+        }))
+    """, devices=14)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["node_sizes"] == [4, 2, 4, 4]            # the fault fired
+    assert res["mesh_shape"] == [7, 2]
+    assert res["axes"] == ["data", "model"]
+    assert res["ids"] == list(range(14))                # bijection over survivors
+    assert tuple(res["refined"]) <= tuple(res["blocked"])
+    assert tuple(res["refined"]) <= tuple(res["unrefined"])
+
+
+def test_node_loss_elastic_layout_in_process():
+    """Same elastic flow without jax: fault -> survivors -> ragged
+    mapped_device_array; the portfolio auto-upgrade must beat (or tie) the
+    blocked fallback lexicographically and keep the device set intact."""
+    stencil = Stencil.nearest_neighbor(2)
+    survivors, fault = drive_node_loss({2: "node_loss:2"}, [16, 16, 16, 16],
+                                       chips_lost=6)
+    assert fault.step == 2 and fault.node == 2
+    assert survivors == [16, 16, 10, 16]
+    devices = list(range(sum(survivors)))               # 58 fake chips
+    arr = mapped_device_array(devices, "hyperplane", (2, 29), stencil, 16,
+                              node_sizes=survivors)
+    blocked = mapped_device_array(devices, "blocked", (2, 29), stencil, 16,
+                                  node_sizes=survivors, auto_refine=False)
+    ref = layout_cost(np.vectorize(int)(arr), stencil, survivors)
+    base = layout_cost(np.vectorize(int)(blocked), stencil, survivors)
+    assert sorted(arr.reshape(-1)) == devices
+    assert (ref.j_max, ref.j_sum) <= (base.j_max, base.j_sum)
+
+
+def test_node_loss_whole_pod_remesh_in_process():
+    """Losing an entire pod leaves a homogeneous survivor set: the re-mesh
+    still produces a bijection and auto_refine stays out of the way (no
+    ragged upgrade needed)."""
+    stencil = Stencil.nearest_neighbor(2)
+    inj = FaultInjector(schedule={1: "node_loss:3"})
+    sizes = [8, 8, 8, 8]
+    for step in range(3):
+        try:
+            inj.check(step)
+        except SimulatedFault as f:
+            sizes.pop(f.node)
+    assert sizes == [8, 8, 8]
+    devices = list(range(24))
+    arr = mapped_device_array(devices, "hyperplane", (6, 4), stencil, 8,
+                              node_sizes=sizes)
+    assert sorted(arr.reshape(-1)) == devices
+    cost = layout_cost(np.vectorize(int)(arr), stencil, sizes)
+    base = layout_cost(
+        np.vectorize(int)(mapped_device_array(devices, "blocked", (6, 4),
+                                              stencil, 8, node_sizes=sizes,
+                                              auto_refine=False)),
+        stencil, sizes)
+    assert cost.j_sum <= base.j_sum

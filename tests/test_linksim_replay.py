@@ -1,0 +1,141 @@
+"""Closing the loop between the mapping metrics and simulated link
+traffic: replaying a mapping's stencil communication through
+analysis.linksim must reproduce J_sum / J_max exactly on the DCI counters
+(dci_total == J_sum, max_dci_pod == J_max for unit weights — same
+directed, source-counted accounting), and therefore rank base vs refined
+vs annealed vs portfolio layouts monotonically with their J_max.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline: deterministic shim
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.analysis.linksim import (machine_for_nodes, replay_assignment,
+                                    simulate, stencil_collectives)
+from repro.core import CartGrid, Stencil, evaluate, get_mapper
+
+STENCILS = {
+    "nn": Stencil.nearest_neighbor,
+    "comp": Stencil.component,
+    "hops": Stencil.nn_with_hops,
+}
+
+# the EXPERIMENTS.md homogeneous grids (tiny + one full-suite instance)
+GRIDS = [
+    ((8, 8), [16] * 4),
+    ((4, 4, 4), [16] * 4),
+    ((8, 8, 8), [64] * 8),
+]
+
+VARIANTS = ("base", "refined", "annealed", "portfolio[k=3]")
+
+
+def _mapper_name(variant, base):
+    return base if variant == "base" else f"{variant}:{base}"
+
+
+# ---------------------------------------------------------------------------
+# exactness: the simulator's DCI counters ARE the paper metrics
+@given(st.integers(0, 10_000), st.sampled_from(sorted(STENCILS)))
+@settings(max_examples=25, deadline=None)
+def test_replay_dci_equals_cost_metrics(seed, sname):
+    """Random homogeneous instances: replaying an arbitrary assignment
+    gives dci_total == J_sum and max_dci_pod == J_max exactly."""
+    rng = np.random.default_rng(seed)
+    n_nodes = int(rng.integers(2, 6))
+    per = int(rng.integers(2, 7))
+    dims = (n_nodes, per) if rng.integers(2) else (per, n_nodes)
+    grid = CartGrid(dims, periodic=(bool(rng.integers(2)),) * 2)
+    stencil = STENCILS[sname](2)
+    sizes = [grid.size // n_nodes] * n_nodes
+    a = rng.permutation(np.repeat(np.arange(n_nodes), sizes[0]))
+    cost = evaluate(grid, stencil, a, num_nodes=n_nodes)
+    rep = replay_assignment(grid, stencil, a, sizes)
+    assert rep.dci_total == cost.j_sum
+    assert rep.max_dci_pod() == cost.j_max
+    np.testing.assert_array_equal(rep.dci_pod_egress, cost.per_node)
+
+
+def test_replay_weighted_stencil_counts_bytes():
+    grid = CartGrid((6, 6))
+    heavy = Stencil(Stencil.nearest_neighbor(2).offsets,
+                    (8.0, 8.0, 1.0, 1.0))
+    a = np.repeat(np.arange(3), 12)
+    cost_w = evaluate(grid, heavy, a, num_nodes=3, weighted=True)
+    rep = replay_assignment(grid, heavy, a, [12] * 3)       # weighted=True
+    assert rep.dci_total == cost_w.j_sum
+    assert rep.max_dci_pod() == cost_w.j_max
+    rep_unit = replay_assignment(grid, heavy, a, [12] * 3, weighted=False)
+    cost_u = evaluate(grid, heavy, a, num_nodes=3, weighted=False)
+    assert rep_unit.dci_total == cost_u.j_sum
+
+
+def test_stencil_collectives_shape():
+    grid = CartGrid((4, 4), periodic=(True, False))
+    stencil = Stencil.nearest_neighbor(2)
+    colls = stencil_collectives(grid, stencil)
+    assert len(colls) == stencil.k
+    for c, off in zip(colls, stencil.offsets):
+        assert c.opcode == "collective-permute"
+        valid, tgt = grid.shift_ranks(off)
+        assert len(c.pairs) == int(valid.sum())
+        for s, t in c.pairs:
+            assert tgt[s] == t
+    # replay respects the machine's pod structure: one pod => no DCI
+    rep = simulate(colls, np.arange(16), machine_for_nodes([16]))
+    assert rep.dci_total == 0.0 and rep.ici_total > 0.0
+
+
+def test_machine_for_nodes_rejects_ragged():
+    with pytest.raises(ValueError):
+        machine_for_nodes([16, 12])
+    m = machine_for_nodes([8] * 6)
+    assert m.num_pods == 6 and m.chips_per_pod == 8
+
+
+# ---------------------------------------------------------------------------
+# the loop-closer: simulated DCI bottleneck is monotone in J_max across
+# base -> refined -> annealed -> portfolio on the EXPERIMENTS grids
+@pytest.mark.parametrize("dims,sizes", GRIDS[:2])
+@pytest.mark.parametrize("sname", sorted(STENCILS))
+def test_replay_monotone_with_jmax_rank(dims, sizes, sname):
+    grid = CartGrid(dims)
+    stencil = STENCILS[sname](grid.ndim)
+    rows = []
+    for base in ("random", "hyperplane"):
+        per_variant = {}
+        for variant in VARIANTS:
+            a = get_mapper(_mapper_name(variant, base)).assignment(
+                grid, stencil, sizes)
+            cost = evaluate(grid, stencil, a, num_nodes=len(sizes))
+            rep = replay_assignment(grid, stencil, a, sizes)
+            assert rep.max_dci_pod() == cost.j_max     # exact, per variant
+            per_variant[variant] = (cost.j_max, rep.max_dci_pod())
+        rows.append((base, per_variant))
+    for base, per_variant in rows:
+        ranked = sorted(per_variant.values())
+        dci = [d for _, d in ranked]
+        assert dci == sorted(dci), (base, per_variant)  # monotone with rank
+        # and the refinement chain never increases the simulated bottleneck
+        assert per_variant["portfolio[k=3]"][1] <= per_variant["base"][1]
+        assert per_variant["annealed"][1] <= per_variant["base"][1]
+
+
+@pytest.mark.slow
+def test_replay_monotone_full_grid():
+    """The full-suite 8x8x8 instance (slower: portfolio on 512 cells)."""
+    dims, sizes = GRIDS[2]
+    grid = CartGrid(dims)
+    stencil = Stencil.nearest_neighbor(3)
+    dci = {}
+    for variant in VARIANTS:
+        a = get_mapper(_mapper_name(variant, "random")).assignment(
+            grid, stencil, sizes)
+        cost = evaluate(grid, stencil, a, num_nodes=len(sizes))
+        rep = replay_assignment(grid, stencil, a, sizes)
+        assert rep.max_dci_pod() == cost.j_max
+        dci[variant] = (cost.j_max, rep.max_dci_pod())
+    assert dci["portfolio[k=3]"][1] <= dci["annealed"][1] <= dci["base"][1]

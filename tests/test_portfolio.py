@@ -1,0 +1,340 @@
+"""Multi-start annealing portfolio engine: bit-exact parity of the batched
+K-state deltas with K scalar IncrementalCost tracks, the portfolio-vs-
+annealed dominance guarantee (ladder 0 reproduces the scalar annealed
+trajectory), early-kill behaviour, the `portfolio[k=8]:` option-parsing
+grammar, and weighted="auto" resolution through the refine stack.
+
+Parity assertions use == / array_equal, not isclose: the portfolio path
+keeps the same integer crossing counts and the same ascending-offset float
+accumulation as the scalar path, so any drift is a bug.
+"""
+import time
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline: deterministic shim
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import (CartGrid, IncrementalCost, PortfolioCost,
+                        PortfolioRefiner, RefinedMapper, ScheduledRefiner,
+                        Stencil, SwapRefiner, available_mappers, evaluate,
+                        get_mapper, parse_mapper_options, split_mapper_name)
+
+STENCILS = {
+    "nn": Stencil.nearest_neighbor,
+    "comp": Stencil.component,
+    "hops": Stencil.nn_with_hops,
+}
+
+
+def random_instance(rng, d=None, max_nodes=6):
+    d = d or int(rng.integers(1, 4))
+    dims = tuple(int(rng.integers(2, 6)) for _ in range(d))
+    periodic = tuple(bool(rng.integers(2)) for _ in range(d))
+    grid = CartGrid(dims, periodic=periodic)
+    n_nodes = int(rng.integers(2, max_nodes + 1))
+    node_of_pos = rng.integers(0, n_nodes, size=grid.size)
+    return grid, n_nodes, node_of_pos
+
+
+# ---------------------------------------------------------------------------
+# PortfolioCost: batched K-state deltas bit-exact vs K scalar tracks
+@given(st.integers(0, 10_000), st.sampled_from(sorted(STENCILS)),
+       st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_portfolio_deltas_bit_exact_vs_scalar(seed, sname, weighted):
+    """Each row of swap_deltas equals the scalar delta_swap/peek_per_node
+    of an IncrementalCost tracking the same assignment, bit for bit; after
+    commits the full state (counts, j_sum, per_node, boundary) stays in
+    lock-step with the K scalar tracks."""
+    rng = np.random.default_rng(seed)
+    grid, n_nodes, _ = random_instance(rng)
+    stencil = STENCILS[sname](grid.ndim)
+    K = int(rng.integers(1, 5))
+    assigns = rng.integers(0, n_nodes, size=(K, grid.size))
+    pc = PortfolioCost(grid, stencil, assigns, num_nodes=n_nodes,
+                       weighted=weighted)
+    ics = [IncrementalCost(grid, stencil, a, num_nodes=n_nodes,
+                           weighted=weighted) for a in assigns]
+    for _ in range(3):
+        rows = np.unique(rng.integers(0, K, size=K))
+        P = rng.integers(0, grid.size, size=rows.size)
+        Q = rng.integers(0, grid.size, size=rows.size)
+        d = pc.swap_deltas(rows, P, Q, with_loads=True, with_counts=True)
+        assert d.size == rows.size
+        for i, r in enumerate(rows):
+            sd = ics[r].delta_swap(int(P[i]), int(Q[i]))
+            assert np.array_equal(d.d_count_off[i], sd.d_count_off)
+            assert d.d_j_sum[i] == sd.d_j_sum
+            peek = ics[r].peek_per_node(sd)
+            assert np.array_equal(d.new_per_node[i], peek)
+            assert d.new_j_max[i] == peek.max(initial=0.0)
+        keep = np.nonzero(rng.random(rows.size) < 0.5)[0]
+        pc.commit(d, keep)
+        for i in keep:
+            ics[rows[i]].apply_swap(int(P[i]), int(Q[i]))
+        masks = pc.boundary_masks()
+        for r in range(K):
+            assert np.array_equal(pc.node[r], ics[r].node_of_pos)
+            assert pc.j_sum()[r] == ics[r].j_sum
+            assert pc.j_max()[r] == ics[r].j_max
+            assert np.array_equal(pc.per_node()[r], ics[r].per_node)
+            assert np.array_equal(np.nonzero(masks[r])[0],
+                                  ics[r].boundary_positions())
+            check = ics[r].cost()
+            assert pc.cost(r).j_sum == check.j_sum
+            assert pc.cost(r).j_max == check.j_max
+
+
+def test_portfolio_cost_validates_input():
+    grid = CartGrid((4, 4))
+    st2 = Stencil.nearest_neighbor(2)
+    with pytest.raises(ValueError):
+        PortfolioCost(grid, st2, np.zeros(16, dtype=np.int64), num_nodes=2)
+    pc = PortfolioCost(grid, st2, np.zeros((3, 16), dtype=np.int64),
+                       num_nodes=2)
+    with pytest.raises(ValueError):
+        pc.swap_deltas([0, 1], [2, 3], [4])          # length mismatch
+    with pytest.raises(ValueError):
+        pc.swap_deltas([5], [0], [1])                # row out of range
+    with pytest.raises(ValueError):
+        pc.swap_deltas([0], [0], [99])               # position out of range
+    with pytest.raises(ValueError):
+        pc.apply_swaps([1, 1], [0, 2], [3, 4])       # duplicate row
+    d = pc.swap_deltas([0], [0], [1], with_loads=True, with_counts=False)
+    with pytest.raises(ValueError):
+        pc.commit(d)                                 # needs with_counts
+    empty = pc.swap_deltas(np.empty(0, np.int64), np.empty(0, np.int64),
+                           np.empty(0, np.int64), with_loads=True,
+                           with_counts=True)
+    assert empty.size == 0
+    pc.commit(empty)                                 # no-op commit is fine
+
+
+# ---------------------------------------------------------------------------
+# PortfolioRefiner: dominance, determinism, invariants
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_portfolio_never_worse_than_annealed_same_seed(seed):
+    """portfolio: ladder 0 replays the annealed ladder of the same seed
+    (same rng draw order, bit-equal energies on unit weights), so the
+    portfolio's lexicographic best can never lose to annealed."""
+    rng = np.random.default_rng(seed)
+    grid, n_nodes, node_of_pos = random_instance(rng, max_nodes=4)
+    stencil = Stencil.nearest_neighbor(grid.ndim)
+    kwargs = dict(rounds=2, max_passes=3, sa_moves=40)
+    ann = ScheduledRefiner(anneal=True, seed=seed, **kwargs).refine(
+        grid, stencil, node_of_pos, num_nodes=n_nodes)
+    port = PortfolioRefiner(k=3, seed=seed, **kwargs).refine(
+        grid, stencil, node_of_pos, num_nodes=n_nodes)
+    assert (port.final.j_max, port.final.j_sum) \
+        <= (ann.final.j_max, ann.final.j_sum)
+    # portfolio is itself a refiner: never worse than its input, preserves
+    # the scheduler allocation, and reports exact costs
+    assert (port.final.j_max, port.final.j_sum) \
+        <= (port.initial.j_max, port.initial.j_sum)
+    np.testing.assert_array_equal(
+        np.bincount(port.assignment, minlength=n_nodes),
+        np.bincount(node_of_pos, minlength=n_nodes))
+    check = evaluate(grid, stencil, port.assignment, num_nodes=n_nodes)
+    assert check.j_sum == port.final.j_sum
+    assert check.j_max == port.final.j_max
+
+
+def test_portfolio_k1_is_exactly_annealed():
+    """With one start the portfolio IS the annealed schedule: same
+    assignment, same final cost, bit for bit."""
+    rng = np.random.default_rng(7)
+    grid = CartGrid((8, 8))
+    stencil = Stencil.nn_with_hops(2)
+    a = rng.permutation(np.repeat(np.arange(4), 16))
+    ann = ScheduledRefiner(anneal=True, seed=3).refine(grid, stencil, a,
+                                                       num_nodes=4)
+    port = PortfolioRefiner(k=1, seed=3).refine(grid, stencil, a,
+                                                num_nodes=4)
+    np.testing.assert_array_equal(ann.assignment, port.assignment)
+    assert (ann.final.j_sum, ann.final.j_max) \
+        == (port.final.j_sum, port.final.j_max)
+
+
+def test_portfolio_deterministic():
+    rng = np.random.default_rng(5)
+    grid = CartGrid((8, 8))
+    stencil = Stencil.nearest_neighbor(2)
+    a = rng.permutation(np.repeat(np.arange(4), 16))
+    r1 = PortfolioRefiner(k=4, seed=11).refine(grid, stencil, a, num_nodes=4)
+    r2 = PortfolioRefiner(k=4, seed=11).refine(grid, stencil, a, num_nodes=4)
+    np.testing.assert_array_equal(r1.assignment, r2.assignment)
+    assert r1.stats["ladder_keys"] == r2.stats["ladder_keys"]
+
+
+def test_portfolio_early_kill_never_kills_ladder_zero():
+    """kill_factor=1.0 is maximally aggressive (any start whose best-seen
+    J_max trails the leader dies at the next temperature boundary) — the
+    dominance guarantee must survive because ladder 0 is exempt."""
+    rng = np.random.default_rng(19)
+    grid = CartGrid((8, 8))
+    stencil = Stencil.nearest_neighbor(2)
+    a = rng.permutation(np.repeat(np.arange(8), 8))
+    kwargs = dict(rounds=2, max_passes=3, sa_moves=60)
+    ann = ScheduledRefiner(anneal=True, seed=2, **kwargs).refine(
+        grid, stencil, a, num_nodes=8)
+    port = PortfolioRefiner(k=6, seed=2, kill_factor=1.0, **kwargs).refine(
+        grid, stencil, a, num_nodes=8)
+    assert (port.final.j_max, port.final.j_sum) \
+        <= (ann.final.j_max, ann.final.j_sum)
+    none = PortfolioRefiner(k=6, seed=2, kill_factor=None, **kwargs).refine(
+        grid, stencil, a, num_nodes=8)
+    assert none.stats["killed"] == 0
+    assert (none.final.j_max, none.final.j_sum) \
+        <= (port.final.j_max, port.final.j_sum)  # killing only loses cands
+    assert port.stats["polished"] >= 1
+    assert port.stats["k"] == 6 and len(port.stats["ladder_keys"]) == 6
+
+
+def test_portfolio_validates_config():
+    with pytest.raises(ValueError):
+        PortfolioRefiner(k=0)
+    with pytest.raises(ValueError):
+        PortfolioRefiner(seeds=[3, 3])
+    with pytest.raises(ValueError):
+        PortfolioRefiner(kill_factor=0.5)
+    assert PortfolioRefiner(seeds=[9, 4]).k == 2
+    assert PortfolioRefiner(kill_factor=None).kill_factor is None
+
+
+# ---------------------------------------------------------------------------
+# registry: portfolio: prefix + bracket-option grammar
+def test_portfolio_prefix_resolves_for_every_mapper():
+    from repro.core.mapping import MAPPERS
+    for name in sorted(MAPPERS):
+        m = get_mapper(f"portfolio:{name}")
+        assert isinstance(m, RefinedMapper)
+        assert isinstance(m.refiner, PortfolioRefiner)
+        assert m.name == f"portfolio:{name}"
+    assert "portfolio:blocked" in available_mappers()
+    with pytest.raises(KeyError):
+        get_mapper("portfolio:doesnotexist")
+
+
+def test_bracket_options_configure_the_refiner():
+    m = get_mapper("portfolio[k=3,seed=5]:kdtree")
+    assert m.refiner.seeds == (5, 6, 7)
+    m = get_mapper("portfolio[k=2,kill_factor=1.25]:blocked")
+    assert m.refiner.k == 2 and m.refiner.kill_factor == 1.25
+    m = get_mapper("portfolio[kill_factor=none]:blocked")
+    assert m.refiner.kill_factor is None
+    # bracket options win over call kwargs (the name is the spec)
+    m = get_mapper("portfolio[k=3]:blocked", k=6, sa_moves=10)
+    assert m.refiner.k == 3 and m.refiner.schedule.sa_moves == 10
+    # the grammar covers every refine prefix
+    m = get_mapper("annealed[seed=9]:hyperplane")
+    assert isinstance(m.refiner, ScheduledRefiner) and m.refiner.seed == 9
+    m = get_mapper("refined[policy=steepest]:blocked")
+    assert m.refiner.policy == "steepest"
+    m = get_mapper("refined2[rounds=2]:blocked")
+    assert m.refiner.rounds == 2
+
+
+def test_mapper_name_parsing_contract():
+    assert split_mapper_name("hyperplane") is None
+    assert split_mapper_name("portfolio:kdtree") == ("portfolio", {}, "kdtree")
+    prefix, opts, base = split_mapper_name("portfolio[k=8,seed=3]:kdtree")
+    assert (prefix, base) == ("portfolio", "kdtree")
+    assert opts == {"k": 8, "seed": 3}
+    assert parse_mapper_options("a=1,b=2.5,c=true,d=x") == {
+        "a": 1, "b": 2.5, "c": True, "d": "x"}
+    with pytest.raises(ValueError):
+        parse_mapper_options("k")            # no '='
+    with pytest.raises(ValueError):
+        parse_mapper_options("k=1,k=2")      # duplicate key
+    with pytest.raises(ValueError):
+        get_mapper("portfolio[k]:blocked")
+
+
+def test_portfolio_mapper_not_worse_than_annealed_on_ragged():
+    """The registry-level guarantee on the suite's tiny ragged instance."""
+    grid = CartGrid((6, 8))
+    stencil = Stencil.nearest_neighbor(2)
+    sizes = [16, 16, 10, 6]
+    for base in ("random", "kdtree"):
+        ann = get_mapper(f"annealed:{base}").cost(grid, stencil, sizes)
+        port = get_mapper(f"portfolio[k=3]:{base}").cost(grid, stencil, sizes)
+        assert (port.j_max, port.j_sum) <= (ann.j_max, ann.j_sum), base
+
+
+# ---------------------------------------------------------------------------
+# weighted="auto": byte-weighted and unit-weight objectives, one code path
+def test_weighted_auto_resolution():
+    unit = Stencil.nearest_neighbor(2)
+    heavy = Stencil(unit.offsets, (4.0, 4.0, 1.0, 1.0))   # dyadic => exact
+    assert not unit.is_weighted and heavy.is_weighted
+    grid = CartGrid((6, 6))
+    a = np.repeat(np.arange(3), 12)
+    assert not IncrementalCost(grid, unit, a, num_nodes=3,
+                               weighted="auto").weighted
+    assert IncrementalCost(grid, heavy, a, num_nodes=3,
+                           weighted="auto").weighted
+    assert not IncrementalCost(grid, heavy, a, num_nodes=3,
+                               weighted=False).weighted
+    w = evaluate(grid, heavy, a, num_nodes=3, weighted="auto")
+    assert w.j_sum == evaluate(grid, heavy, a, num_nodes=3,
+                               weighted=True).j_sum
+    assert w.j_sum != evaluate(grid, heavy, a, num_nodes=3,
+                               weighted=False).j_sum
+
+
+def test_refiners_score_weighted_stencils_in_bytes():
+    """With default weighted="auto" every refiner optimizes the byte
+    objective on a weighted stencil; the weighted result is never worse in
+    bytes than the input and matches a weighted re-evaluation exactly
+    (dyadic weights)."""
+    rng = np.random.default_rng(3)
+    grid = CartGrid((8, 8))
+    heavy = Stencil(Stencil.nearest_neighbor(2).offsets,
+                    (8.0, 8.0, 1.0, 1.0))
+    a = rng.permutation(np.repeat(np.arange(4), 16))
+    base = evaluate(grid, heavy, a, num_nodes=4, weighted=True)
+    for refiner in (SwapRefiner(max_passes=4),
+                    ScheduledRefiner(rounds=2, max_passes=3),
+                    PortfolioRefiner(k=2, rounds=2, max_passes=3,
+                                     sa_moves=30)):
+        res = refiner.refine(grid, heavy, a, num_nodes=4)
+        check = evaluate(grid, heavy, res.assignment, num_nodes=4,
+                         weighted=True)
+        assert res.final.j_sum == check.j_sum
+        assert res.final.j_sum < base.j_sum     # bytes actually optimized
+        np.testing.assert_array_equal(
+            np.bincount(res.assignment, minlength=4),
+            np.bincount(a, minlength=4))
+
+
+# ---------------------------------------------------------------------------
+# acceptance: K=8 on the full suite's ragged instances (slow)
+@pytest.mark.slow
+def test_portfolio_k8_acceptance_on_suite_ragged_rows():
+    """portfolio[k=8] is lexicographically <= annealed on every full-suite
+    ragged (instance, stencil, mapper) row, at < 8x the annealed wall-time
+    wherever the annealed run takes long enough to time (>= 0.2s)."""
+    cases = [((16, 28), [256, 192]), ((12, 8, 8), [128] * 5 + [96, 32])]
+    for dims, sizes in cases:
+        grid = CartGrid(dims)
+        for sfn in (Stencil.nearest_neighbor, Stencil.nn_with_hops):
+            stencil = sfn(grid.ndim)
+            for base in ("random", "kdtree", "hyperplane"):
+                a = get_mapper(base).assignment(grid, stencil, sizes)
+                t0 = time.perf_counter()
+                ann = ScheduledRefiner(anneal=True).refine(
+                    grid, stencil, a, num_nodes=len(sizes))
+                t_ann = time.perf_counter() - t0
+                t0 = time.perf_counter()
+                port = PortfolioRefiner(k=8).refine(
+                    grid, stencil, a, num_nodes=len(sizes))
+                t_port = time.perf_counter() - t0
+                assert (port.final.j_max, port.final.j_sum) \
+                    <= (ann.final.j_max, ann.final.j_sum), (dims, base)
+                if t_ann >= 0.2:
+                    assert t_port < 8 * t_ann, (dims, base, t_port, t_ann)

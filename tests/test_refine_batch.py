@@ -260,15 +260,17 @@ def test_mapped_device_array_validates_node_sizes():
 
 
 def test_ensure_refined_idempotent():
+    from repro.core import PortfolioRefiner
     assert ensure_refined("refined:kdtree") == "refined:kdtree"
     assert ensure_refined("annealed:kdtree") == "annealed:kdtree"
+    assert ensure_refined("portfolio[k=2]:kdtree") == "portfolio[k=2]:kdtree"
     m = get_mapper("refined:blocked")
     assert ensure_refined(m) is m
     for wrapped in (ensure_refined("kdtree"),
                     ensure_refined(get_mapper("kdtree"))):
         assert isinstance(wrapped, RefinedMapper)
-        assert isinstance(wrapped.refiner, ScheduledRefiner)
-        assert wrapped.name == "refined2:kdtree"
+        assert isinstance(wrapped.refiner, PortfolioRefiner)
+        assert wrapped.name == "portfolio:kdtree"
         assert wrapped.fallback is not None  # ragged-inapplicable bases too
 
 
