@@ -79,7 +79,8 @@ VARIANTS = ("refined", "refined2", "annealed")
 
 def split_variants(spec):
     """Split a --variants CLI value on commas outside bracket options."""
-    return tuple(v for v in re.split(r",(?![^\[]*\])", spec) if v)
+    from repro.core.mapping import split_mapper_list
+    return tuple(split_mapper_list(spec))
 
 
 def variant_prefix(variant):
@@ -108,8 +109,10 @@ def run(tiny: bool = False, mappers=None, variants=VARIANTS,
     """Returns one row per (instance, stencil, mapper); each row carries
     ``j_sum_<variant>`` / ``j_max_<variant>`` / ``t_<variant>_s`` columns
     (byte-weighted for the ``plan`` stencil rows, with ``weighted=True``
-    in the row), plus ``dci_max_*`` replay columns for homogeneous rows
-    when ``linksim`` is set."""
+    in the row), plus ``dci_max_*`` replay columns for every row when
+    ``linksim`` is set — ragged rows replay on per-pod torus sizes
+    (:func:`repro.analysis.linksim.machine_for_nodes`), closing the
+    dci==J loop on the elastic path too."""
     instance_rows = TINY_INSTANCES if tiny else INSTANCES
     if instances:
         instance_rows = [r for r in instance_rows if instances in r[0]]
@@ -138,7 +141,7 @@ def run(tiny: bool = False, mappers=None, variants=VARIANTS,
                     "j_sum_base": base.j_sum, "j_max_base": base.j_max,
                     "t_base_s": t_base,
                 }
-                if linksim and not ragged:
+                if linksim:
                     _linksim_cols(grid, stencil, base_assign, sizes, "base",
                                   row)
                 for variant in variants:
@@ -157,7 +160,7 @@ def run(tiny: bool = False, mappers=None, variants=VARIANTS,
                         f"t_{variant}_s": rr.wall_time_s,
                         f"t_total_{variant}_s": t_total,
                     })
-                    if linksim and not ragged:
+                    if linksim:
                         _linksim_cols(grid, stencil, v_assign, sizes,
                                       variant, row)
                 rows.append(row)
@@ -292,9 +295,11 @@ def validate_claims(rows, objective="j_sum", variants=VARIANTS):
                                     r[f"j_max_{suffix}"],
                                     rel_tol=1e-9, abs_tol=1e-9):
                     bad.append((r["instance"], r["mapper"], suffix))
+        n_ragged = sum(1 for r in sim_rows if r["ragged"])
         claims.append(("PASS" if not bad else "FAIL")
                       + f": linksim max_dci_pod == J_max on all "
-                      f"{len(sim_rows)} homogeneous rows"
+                      f"{len(sim_rows)} rows ({n_ragged} ragged, replayed "
+                      f"on per-pod torus sizes)"
                       + (f" (violations: {bad})" if bad else ""))
     return claims
 
@@ -345,8 +350,9 @@ def main():
                     help="substring filter on instance labels "
                          "(e.g. 'ragged')")
     ap.add_argument("--linksim", action="store_true",
-                    help="replay homogeneous rows through analysis.linksim "
-                         "and add dci_max columns + the J_max==dci claim")
+                    help="replay every row through analysis.linksim (ragged "
+                         "rows on per-pod torus sizes) and add dci_max "
+                         "columns + the J_max==dci claim")
     ap.add_argument("--policy", default="first",
                     choices=["first", "steepest"])
     ap.add_argument("--objective", default="j_sum",

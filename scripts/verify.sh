@@ -14,15 +14,35 @@ if [[ "${1:-}" == "--slow" ]]; then
     python -m pytest -q -m slow
 fi
 
-# batched-engine parity + scheduled-refiner/portfolio invariants and the
-# elastic re-mesh + linksim replay integration modules, run explicitly so a
-# collection failure elsewhere can't mask a refinement regression
+# batched-engine parity + scheduled-refiner/portfolio invariants, the
+# elastic re-mesh + linksim replay integration modules, and the plan-layer
+# contract (grammar<->plan parity, PlanCache, cart_create), run explicitly
+# so a collection failure elsewhere can't mask a refinement regression
 python -m pytest -q tests/test_refine_batch.py tests/test_portfolio.py \
-    tests/test_elastic_remesh.py tests/test_linksim_replay.py
+    tests/test_elastic_remesh.py tests/test_linksim_replay.py \
+    tests/test_plan.py
 
 # smoke the whole refinement registry (refined: / refined2: / annealed: /
-# portfolio:) incl. the linksim replay columns; the full K=8 sweep is the
-# `-m slow` acceptance test (test_portfolio_k8_acceptance_on_suite_ragged_rows)
+# portfolio:) incl. the linksim replay columns (ragged rows replay on
+# per-pod torus sizes); the full K=8 sweep is the `-m slow` acceptance
+# test (test_portfolio_k8_acceptance_on_suite_ragged_rows)
 PYTHONPATH=src python -m benchmarks.refine_suite --tiny --linksim \
     --variants refined,refined2,annealed,portfolio[k=4]
+
+# cart_create smoke: cold solve -> warm cache hit, asserted via counters
+PYTHONPATH=src python - <<'EOF'
+import numpy as np
+from repro.core import PlanCache, cart_create
+
+cache = PlanCache()
+cold = cart_create((8, 8), chips_per_pod=16, cache=cache)
+assert (cache.hits, cache.misses) == (0, 1) and not cold.from_cache
+warm = cart_create((8, 8), chips_per_pod=16, cache=cache)
+assert (cache.hits, cache.misses) == (1, 1) and warm.from_cache
+np.testing.assert_array_equal(cold.layout, warm.layout)
+assert (warm.j_max, warm.j_sum) == (cold.j_max, cold.j_sum)
+print(f"cart_create smoke OK: plan={cold.plan_key} "
+      f"J=(max {cold.j_max:.0f}, sum {cold.j_sum:.0f}) "
+      f"cache={cache.stats()}")
+EOF
 echo "verify OK"

@@ -30,7 +30,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..topology.machine import MachineSpec
+from ..topology.machine import MachineSpec, RaggedMachineSpec
 from .hlo import CollectiveStat
 
 __all__ = ["LinkReport", "simulate", "stencil_collectives",
@@ -176,14 +176,18 @@ def stencil_collectives(grid, stencil, weighted=True) -> List[CollectiveStat]:
 
 def machine_for_nodes(node_sizes: Sequence[int],
                       name: str = "stencil-replay") -> MachineSpec:
-    """Pods-as-nodes machine for a homogeneous allocation: ``len(sizes)``
-    pods of a 1-d ICI torus each (ragged allocations have no uniform
-    MachineSpec — the replay is a homogeneous-instance tool)."""
+    """Pods-as-nodes machine: ``len(sizes)`` pods of a 1-d ICI ring each.
+    Homogeneous allocations get a uniform :class:`MachineSpec`; ragged
+    ones (per-pod torus sizes — elastic pods after chip loss) get a
+    :class:`~repro.topology.machine.RaggedMachineSpec`, so the elastic
+    path closes the same ``dci_total == J_sum`` / ``max_dci_pod == J_max``
+    loop the homogeneous one does."""
     sizes = [int(s) for s in node_sizes]
-    if len(set(sizes)) != 1:
-        raise ValueError(f"linksim replay needs homogeneous node sizes, "
-                         f"got {sorted(set(sizes))}")
-    return MachineSpec(name=name, num_pods=len(sizes), torus=(sizes[0],))
+    if any(s < 1 for s in sizes):
+        raise ValueError(f"node sizes must be positive, got {sizes}")
+    if len(set(sizes)) == 1:
+        return MachineSpec(name=name, num_pods=len(sizes), torus=(sizes[0],))
+    return RaggedMachineSpec(name=name, pod_sizes=tuple(sizes))
 
 
 def replay_assignment(grid, stencil, node_of_pos: np.ndarray,
@@ -196,11 +200,9 @@ def replay_assignment(grid, stencil, node_of_pos: np.ndarray,
     ``remap.device_layout(intra_order="rowmajor")`` — so the logical
     position -> chip layout is fully determined by the assignment.
     """
+    from ..core.cost import rowmajor_rank_layout
     node_of_pos = np.asarray(node_of_pos, dtype=np.int64)
     if machine is None:
         machine = machine_for_nodes(node_sizes)
-    order = np.argsort(node_of_pos, kind="stable")
-    layout_flat = np.empty(grid.size, dtype=np.int64)
-    layout_flat[order] = np.arange(grid.size)
     return simulate(stencil_collectives(grid, stencil, weighted=weighted),
-                    layout_flat, machine)
+                    rowmajor_rank_layout(node_of_pos), machine)

@@ -11,8 +11,11 @@ from .mapping import (ANNEALED_PREFIX, MAPPERS, PORTFOLIO_PREFIX,
                       NodecartMapper, RandomMapper, StencilStripsMapper,
                       available_mappers, get_mapper, parse_mapper_options,
                       split_mapper_name)
-from .refine import (PortfolioRefiner, RefinedMapper, RefineResult,
-                     ScheduledRefiner, SwapRefiner, refine_assignment)
+from .refine import (BaseStage, PortfolioRefiner, RefinedMapper,
+                     RefineResult, RefineStage, ScheduledRefiner, Stage,
+                     StageResult, SwapRefiner, refine_assignment)
+from .plan import (CartResult, MappingPlan, MappingProblem, MappingSolution,
+                   PlanCache, cart_create, default_plan_cache, parse_plan)
 from .remap import (device_layout, ensure_refined, layout_cost,
                     mapped_device_array)
 from .stencil import Stencil, resolve_weighted
@@ -30,5 +33,8 @@ __all__ = [
     "KDTreeMapper", "StencilStripsMapper", "GraphGreedyMapper",
     "SwapRefiner", "ScheduledRefiner", "PortfolioRefiner", "RefineResult",
     "refine_assignment", "RefinedMapper",
+    "Stage", "StageResult", "BaseStage", "RefineStage",
+    "MappingProblem", "MappingPlan", "MappingSolution", "parse_plan",
+    "PlanCache", "default_plan_cache", "cart_create", "CartResult",
     "device_layout", "layout_cost", "mapped_device_array", "ensure_refined",
 ]

@@ -19,7 +19,24 @@ import numpy as np
 from .grid import CartGrid
 from .stencil import Stencil, resolve_weighted
 
-__all__ = ["MappingCost", "evaluate", "node_of_rank_blocked", "blocked_assignment"]
+__all__ = ["MappingCost", "evaluate", "node_of_rank_blocked",
+           "blocked_assignment", "rowmajor_rank_layout"]
+
+
+def rowmajor_rank_layout(node_of_pos: np.ndarray) -> np.ndarray:
+    """``L[pos] = rank`` realizing a node-of-position assignment under the
+    blocked allocation with each node's grid positions taken in row-major
+    position order: blocked rank order is node-sorted, so a stable
+    node-sort of positions lines rank r up with the r-th (node, position)
+    pair.  The ONE implementation of this convention —
+    ``remap.device_layout(intra_order="rowmajor")``,
+    ``analysis.linksim.replay_assignment``, and
+    ``plan.MappingSolution.layout`` all use it."""
+    node_of_pos = np.asarray(node_of_pos)
+    order = np.argsort(node_of_pos, kind="stable")
+    layout = np.empty(node_of_pos.size, dtype=np.int64)
+    layout[order] = np.arange(node_of_pos.size)
+    return layout
 
 
 @dataclass(frozen=True)

@@ -32,9 +32,21 @@ Names resolve in two layers:
 
 Every spelling accepted here is accepted everywhere a mapper name appears:
 ``device_layout`` / ``mapped_device_array`` (:mod:`repro.core.remap`),
-``make_mapped_mesh`` (:mod:`repro.launch.mesh`), and the benchmark drivers.
-:func:`split_mapper_name` exposes the parse (prefix, options, base) for
-callers that need to inspect a spelling without instantiating it.
+``make_mapped_mesh`` (:mod:`repro.launch.mesh`), the benchmark drivers,
+and :func:`~repro.core.plan.cart_create`.  Prefixes chain —
+``"portfolio[k=8]:refined:hyperplane"`` applies swap refinement, then the
+portfolio, inner-first — because ``<base>`` is itself resolved by this
+grammar.
+
+The grammar's one implementation is :func:`~repro.core.plan.parse_plan`,
+which turns a spelling into a typed, composable
+:class:`~repro.core.plan.MappingPlan` (stage chain); :func:`get_mapper` is
+its Mapper-shaped front-end, re-packaging the parsed stages as nested
+:class:`~repro.core.refine.RefinedMapper` wrappers.  Programs wanting
+stage chains, per-stage budgets, or cached solves should use ``parse_plan``
+/ :class:`~repro.core.plan.PlanCache` directly.  :func:`split_mapper_name`
+exposes the raw parse (prefix, options, base) for callers that need to
+inspect a spelling without instantiating it.
 
 Usage::
 
@@ -42,6 +54,7 @@ Usage::
     get_mapper("refined:kdtree", policy="steepest")
     get_mapper("annealed:nodecart", seed=7).assignment(grid, stencil, sizes)
     get_mapper("portfolio[k=4,kill_factor=1.25]:hyperplane")
+    get_mapper("annealed[tol=1e-9,seed=-3]:kdtree")  # scientific/negative ok
 """
 from __future__ import annotations
 
@@ -86,7 +99,10 @@ _PREFIXED_NAME_RE = re.compile(
 
 
 def _coerce_option(value: str):
-    """Bracket-option values: int, then float, then bool, else string."""
+    """Bracket-option values: int, then float, then bool / None, else
+    string.  Everything Python's numeric constructors accept works —
+    negative numbers, scientific notation (``t0=1e-2`` / ``seed=-3``,
+    pinned by tests), ``inf``, underscore groupings."""
     for cast in (int, float):
         try:
             return cast(value)
@@ -101,8 +117,17 @@ def _coerce_option(value: str):
     return value
 
 
-def parse_mapper_options(opts: str) -> Dict[str, object]:
-    """Parse a bracket-option body (``"k=8,seed=3"``) into kwargs."""
+def _spelling(name: Optional[str]) -> str:
+    """Error-message suffix naming the full spelling being parsed."""
+    return f" in mapper name {name!r}" if name else ""
+
+
+def parse_mapper_options(opts: str,
+                         name: Optional[str] = None) -> Dict[str, object]:
+    """Parse a bracket-option body (``"k=8,seed=-3,tol=1e-9"``) into kwargs.
+    ``name`` (the full spelling the body came from) is quoted in every
+    error message so a failure deep in a chained prefix stays
+    attributable."""
     out: Dict[str, object] = {}
     for item in opts.split(","):
         item = item.strip()
@@ -112,23 +137,41 @@ def parse_mapper_options(opts: str) -> Dict[str, object]:
         key = key.strip()
         if not sep or not key:
             raise ValueError(
-                f"bad mapper option {item!r}: expected key=value")
+                f"bad mapper option {item!r}{_spelling(name)}: "
+                f"expected key=value")
         if key in out:
-            raise ValueError(f"duplicate mapper option {key!r}")
+            raise ValueError(
+                f"duplicate mapper option {key!r}{_spelling(name)}")
         out[key] = _coerce_option(value.strip())
     return out
 
 
-def split_mapper_name(name: str) \
+#: comma outside a bracket-option body — the list separator for
+#: "--mappers"/"--variants"-style CLI values.
+_LIST_SEP_RE = re.compile(r",(?![^\[]*\])")
+
+
+def split_mapper_list(spec: str) -> list:
+    """Split a comma-separated list of mapper spellings on commas *outside*
+    bracket options: ``"blocked,portfolio[k=8,seed=3]:kdtree"`` -> two
+    entries.  The one splitter the CLI drivers share."""
+    return [v for v in _LIST_SEP_RE.split(spec) if v]
+
+
+def split_mapper_name(name: str, full_name: Optional[str] = None) \
         -> Optional[Tuple[str, Dict[str, object], str]]:
     """Split a refinement-prefixed spelling into ``(prefix, options,
     base_name)``; None if ``name`` is not a refinement spelling.  The
     prefix is returned without the colon (``"portfolio"``), options as a
-    kwargs dict (empty when no bracket is present)."""
+    kwargs dict (empty when no bracket is present).  ``full_name`` names
+    the enclosing spelling in option-parse errors (chained prefixes hand
+    the original spelling down)."""
     m = _PREFIXED_NAME_RE.match(name)
     if m is None or m.group("prefix") + ":" not in REFINE_PREFIXES:
         return None
-    return (m.group("prefix"), parse_mapper_options(m.group("opts") or ""),
+    return (m.group("prefix"),
+            parse_mapper_options(m.group("opts") or "",
+                                 name=full_name or name),
             m.group("base"))
 
 
@@ -147,33 +190,22 @@ def _make_refiner(prefix: str, kwargs: Dict[str, object]):
 
 def get_mapper(name: str, **kwargs) -> Mapper:
     """Instantiate a mapper by name (see the module docstring for the full
-    resolution contract).
+    resolution contract; :func:`~repro.core.plan.parse_plan` is the
+    grammar's implementation — this is its Mapper-shaped front-end).
 
     ``"refined:<base>"`` wraps ``<base>`` with swap-refinement local search,
     ``"refined2:<base>"`` with the alternating j_sum/j_max schedule,
     ``"annealed:<base>"`` adds the simulated-annealing ladder, and
-    ``"portfolio:<base>"`` runs K batched annealing starts.  ``kwargs`` and
-    bracket options (``"portfolio[k=8]:<base>"``; bracket wins on conflict)
-    configure the refiner, not the base algorithm; every prefix composes
-    with every key in :data:`MAPPERS`.
+    ``"portfolio:<base>"`` runs K batched annealing starts; prefixes chain
+    (``"portfolio:refined:<base>"``).  ``kwargs`` and bracket options
+    (``"portfolio[k=8]:<base>"``; bracket wins on conflict) configure the
+    outermost refiner, not the base algorithm; every prefix composes with
+    every key in :data:`MAPPERS`.  The returned mapper carries the
+    canonical ``plan_key`` spelling, so :class:`~repro.core.plan.PlanCache`
+    can key solved assignments off it.
     """
-    parsed = split_mapper_name(name)
-    if parsed is not None:
-        from ..refine import RefinedMapper
-        prefix, opts, base_name = parsed
-        base = get_mapper(base_name)
-        merged = {**kwargs, **opts}
-        if prefix == "refined":
-            return RefinedMapper(base, **merged)
-        return RefinedMapper(base, refiner=_make_refiner(prefix, merged),
-                             prefix=prefix)
-    try:
-        cls = MAPPERS[name]
-    except KeyError:
-        raise KeyError(
-            f"unknown mapper {name!r}; choose from {sorted(MAPPERS)} "
-            f"or one of {[p + '<base>' for p in REFINE_PREFIXES]}")
-    return cls(**kwargs)
+    from ..plan import parse_plan
+    return parse_plan(name, **kwargs).to_mapper()
 
 
 def available_mappers(include_refined: bool = True) -> list:
@@ -191,5 +223,5 @@ __all__ = [
     "KDTreeMapper", "StencilStripsMapper", "GraphGreedyMapper",
     "MAPPERS", "REFINED_PREFIX", "SCHEDULED_PREFIX", "ANNEALED_PREFIX",
     "PORTFOLIO_PREFIX", "REFINE_PREFIXES", "get_mapper", "available_mappers",
-    "split_mapper_name", "parse_mapper_options",
+    "split_mapper_name", "split_mapper_list", "parse_mapper_options",
 ]

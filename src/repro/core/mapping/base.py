@@ -59,6 +59,13 @@ class Mapper(abc.ABC):
     name: str = "base"
     #: True if the algorithm needs a single homogeneous node size.
     requires_homogeneous: bool = False
+    #: Canonical plan spelling (set when built via ``parse_plan`` /
+    #: ``get_mapper``) — the stable :class:`~repro.core.plan.PlanCache`
+    #: identity; None means "no stable key, don't cache".  The key is a
+    #: construction-time snapshot: if you mutate a mapper's configuration
+    #: afterwards (e.g. ``m.refiner.seed = 5``), set ``m.plan_key = None``
+    #: or the cache will serve results solved under the old configuration.
+    plan_key: Optional[str] = None
 
     @abc.abstractmethod
     def coords(self, grid: CartGrid, stencil: Stencil,

@@ -1,0 +1,618 @@
+"""First-class mapping plans: typed problems, composable stages, a serving
+cache, and the `cart_create` facade.
+
+The paper's punchline is that stencil-aware mapping is cheap enough to sit
+behind ``MPI_Cart_create`` — a *library entry point*.  This module is that
+entry point for the repo:
+
+* :class:`MappingProblem` — the full problem signature (mesh shape,
+  stencil incl. per-offset byte weights, node sizes, objective) with a
+  stable content hash;
+* :class:`MappingPlan` — an ordered chain of
+  :class:`~repro.core.refine.stage.Stage` objects
+  (:class:`~repro.core.refine.stage.BaseStage` +
+  :class:`~repro.core.refine.stage.RefineStage`), built directly or parsed
+  from the registry string grammar by :func:`parse_plan`;
+  ``plan.solve(problem)`` returns a :class:`MappingSolution` (assignment,
+  J_sum/J_max, per-stage stats);
+* :class:`PlanCache` — an in-memory LRU keyed by
+  ``(problem.content_hash(), plan.key)`` with optional JSON disk spill
+  under ``~/.cache/repro-maps/`` and hit/miss counters, so elastic
+  re-meshes and repeated serving-time mesh builds reuse solved
+  assignments instead of re-annealing
+  (wired through :func:`~repro.core.remap.device_layout` /
+  :func:`~repro.core.remap.mapped_device_array` /
+  :func:`~repro.launch.mesh.make_mapped_mesh`);
+* :func:`cart_create` — the MPI-style one-call facade: problem in, cached
+  solution + device layout out.
+
+``get_mapper`` is a thin compatibility front-end: it parses the same
+grammar with :func:`parse_plan` and re-packages the stages as nested
+:class:`~repro.core.refine.RefinedMapper` wrappers, so string spellings
+and plan objects execute identical stage chains (bit-exact parity is
+pinned by ``tests/test_plan.py``).  Chained prefixes
+(``"portfolio[k=8]:refined:hyperplane"``) compose for free: each prefix
+becomes one refine stage, applied inner-first.
+
+Usage::
+
+    from repro.core import MappingProblem, PlanCache, cart_create, parse_plan
+
+    problem = MappingProblem((16, 28), Stencil.nearest_neighbor(2),
+                             node_sizes=(256, 192))
+    plan = parse_plan("portfolio[k=4]:hyperplane")
+    sol = plan.solve(problem)                    # cold solve
+    sol = default_plan_cache().solve(problem, plan)   # cached
+
+    cart = cart_create((16, 16), chips_per_pod=16)    # one-call facade
+    cart.layout, cart.solution.j_max, cart.from_cache
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import math
+import os
+import threading
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .cost import evaluate, rowmajor_rank_layout
+from .grid import CartGrid
+from .stencil import Stencil
+from .refine.stage import BaseStage, RefineStage, Stage
+
+__all__ = ["MappingProblem", "MappingPlan", "MappingSolution", "parse_plan",
+           "PlanCache", "default_plan_cache", "resolve_cache",
+           "blocked_node_sizes", "cart_create", "CartResult",
+           "DEFAULT_CART_PLAN", "DEFAULT_CACHE_DIR"]
+
+
+def blocked_node_sizes(p: int, chips_per_pod: int) -> Tuple[int, ...]:
+    """The scheduler's blocked split of ``p`` chips into pods of
+    ``chips_per_pod``, with a ragged tail pod when it doesn't divide
+    evenly (elastic operation after failures).  The one place this
+    convention lives — ``mapped_device_array`` and :func:`cart_create`
+    both use it."""
+    full, rem = divmod(int(p), int(chips_per_pod))
+    return (int(chips_per_pod),) * full + ((rem,) if rem else ())
+
+#: objectives a problem may declare (informational for solvers — the refine
+#: stack always tracks the lexicographic pair — but part of the cache key).
+_OBJECTIVES = ("lex", "j_sum", "j_max")
+
+#: default disk-spill location (override with $REPRO_MAPS_CACHE_DIR).
+DEFAULT_CACHE_DIR = Path(os.environ.get("REPRO_MAPS_CACHE_DIR",
+                                        "~/.cache/repro-maps")).expanduser()
+
+#: the facade's default plan: the annealed schedule is the best
+#: single-ladder quality/latency point for a one-call entry (swap
+#: ``plan="portfolio:hyperplane"`` in for more quality per cold solve).
+DEFAULT_CART_PLAN = "annealed:hyperplane"
+
+
+# ---------------------------------------------------------------------------
+# problem + solution
+
+
+@dataclass(frozen=True)
+class MappingProblem:
+    """The full mapping-problem signature, hashable by content.
+
+    Two problems with equal content hashes are the *same* problem for the
+    cache: the hash covers mesh shape, periodicity, the stencil's offsets
+    AND per-offset byte weights (weight changes must miss), node sizes,
+    and the declared objective.  The stencil's cosmetic ``name`` is
+    excluded.
+    """
+
+    mesh_shape: Tuple[int, ...]
+    stencil: Stencil
+    node_sizes: Tuple[int, ...]
+    objective: str = "lex"
+    periodic: Optional[Tuple[bool, ...]] = None
+
+    def __post_init__(self):
+        shape = tuple(int(d) for d in self.mesh_shape)
+        sizes = tuple(int(s) for s in self.node_sizes)
+        object.__setattr__(self, "mesh_shape", shape)
+        object.__setattr__(self, "node_sizes", sizes)
+        if self.periodic is not None:
+            object.__setattr__(self, "periodic",
+                               tuple(bool(b) for b in self.periodic))
+        if self.objective not in _OBJECTIVES:
+            raise ValueError(f"objective must be one of {_OBJECTIVES}")
+        if sum(sizes) != math.prod(shape):
+            raise ValueError(f"sum(node_sizes)={sum(sizes)} != mesh size "
+                             f"{math.prod(shape)}")
+        self.grid()   # validates shape/periodic eagerly
+
+    def grid(self) -> CartGrid:
+        return CartGrid(self.mesh_shape, periodic=self.periodic)
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self.node_sizes)
+
+    @property
+    def is_ragged(self) -> bool:
+        return len(set(self.node_sizes)) > 1
+
+    def content_hash(self) -> str:
+        payload = {
+            "mesh_shape": list(self.mesh_shape),
+            "periodic": list(self.grid().periodic),
+            "offsets": [list(o) for o in self.stencil.offsets],
+            "weights": list(self.stencil.weights),
+            "node_sizes": list(self.node_sizes),
+            "objective": self.objective,
+        }
+        blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+        return hashlib.sha256(blob.encode()).hexdigest()[:32]
+
+
+@dataclass
+class MappingSolution:
+    """A solved plan: the assignment plus everything a caller needs to
+    trust and reuse it (costs, provenance, per-stage stats)."""
+
+    assignment: np.ndarray          # (p,) node-of-position
+    j_sum: float
+    j_max: float
+    problem: MappingProblem
+    plan_key: str
+    stage_stats: List[dict] = field(default_factory=list)
+    wall_time_s: float = 0.0
+    from_cache: bool = False
+
+    def key(self) -> Tuple[float, float]:
+        """The refine stack's lexicographic objective pair."""
+        return (self.j_max, self.j_sum)
+
+    def layout(self) -> np.ndarray:
+        """``L[logical coord] = device index`` realising this assignment
+        with row-major intra-node rank order (the
+        ``device_layout(intra_order="rowmajor")`` convention —
+        :func:`~repro.core.cost.rowmajor_rank_layout`)."""
+        return rowmajor_rank_layout(self.assignment).reshape(
+            self.problem.mesh_shape)
+
+
+# ---------------------------------------------------------------------------
+# plans
+
+
+class MappingPlan:
+    """An ordered stage chain: one :class:`BaseStage` followed by zero or
+    more :class:`RefineStage` s.  ``key`` is the canonical spelling —
+    stable across equal configurations — used for cache identity."""
+
+    def __init__(self, stages: Sequence[Stage], name: Optional[str] = None):
+        stages = tuple(stages)
+        if not stages:
+            raise ValueError("a plan needs at least one stage")
+        if not isinstance(stages[0], BaseStage):
+            raise ValueError("a plan's first stage must be a BaseStage")
+        if any(isinstance(s, BaseStage) for s in stages[1:]):
+            raise ValueError("only the first stage may be a BaseStage")
+        self.stages = stages
+        self.name = name
+
+    @property
+    def key(self) -> str:
+        """Canonical spelling, refine stages outer-first (grammar order):
+        ``portfolio[k=8]:refined:hyperplane``."""
+        parts = [s.spec() for s in reversed(self.stages[1:])]
+        parts.append(self.stages[0].spec())
+        return ":".join(parts)
+
+    @property
+    def cacheable(self) -> bool:
+        """False when any stage's configuration has no stable spelling
+        (hand-built components holding nested objects) — such plans are
+        always solved fresh, never keyed into a :class:`PlanCache`."""
+        return all(getattr(s, "cacheable", True) for s in self.stages)
+
+    def solve(self, problem: MappingProblem,
+              cache: Optional["PlanCache"] = None) -> MappingSolution:
+        """Run the stage chain; with ``cache``, memoize by
+        ``(problem.content_hash(), self.key)``."""
+        if cache is not None:
+            return cache.solve(problem, self)
+        t0 = time.perf_counter()
+        grid = problem.grid()
+        assignment: Optional[np.ndarray] = None
+        stats: List[dict] = []
+        for stage in self.stages:
+            sr = stage.run(grid, problem.stencil, problem.node_sizes,
+                           assignment)
+            assignment = sr.assignment
+            stats.append(sr.stats)
+        cost = evaluate(grid, problem.stencil, assignment,
+                        num_nodes=problem.num_nodes, weighted="auto")
+        # stats are JSON-normalized here so cold solves and cache hits
+        # (which round-trip through JSON) have identical shapes
+        return MappingSolution(assignment=assignment, j_sum=cost.j_sum,
+                               j_max=cost.j_max, problem=problem,
+                               plan_key=self.key,
+                               stage_stats=_jsonable_stats(stats),
+                               wall_time_s=time.perf_counter() - t0)
+
+    def to_mapper(self):
+        """Re-package the stages as the equivalent (nested)
+        :class:`~repro.core.refine.RefinedMapper` chain — what
+        ``get_mapper`` returns, with ``plan_key`` set at every level so
+        the cache can key off mapper instances too."""
+        from .refine import RefinedMapper
+        mapper = self.stages[0].mapper
+        key = self.stages[0].spec()
+        cache_ok = self.stages[0].cacheable
+        mapper.plan_key = key if cache_ok else None
+        for i, stage in enumerate(self.stages[1:]):
+            # the base's inapplicability fallback rides on the innermost
+            # wrapper (where BaseStage.run would apply it)
+            fb = self.stages[0].fallback if i == 0 else None
+            mapper = RefinedMapper(mapper, refiner=stage.refiner,
+                                   prefix=stage.prefix,
+                                   budget=stage.budget, fallback=fb)
+            key = f"{stage.spec()}:{key}"
+            cache_ok = cache_ok and stage.cacheable
+            mapper.plan_key = key if cache_ok else None
+        return mapper
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"MappingPlan({self.key!r})"
+
+
+def parse_plan(name: str, **kwargs) -> MappingPlan:
+    """Parse a registry spelling into a :class:`MappingPlan`.
+
+    This is the one implementation of the mapper-name grammar
+    (``"<prefix>[<options>]:" * N + "<base>"`` — see
+    :mod:`repro.core.mapping` for the contract): every prefix becomes one
+    :class:`RefineStage` (applied inner-first), the base name one
+    :class:`BaseStage`.  ``kwargs`` configure the *outermost* refiner —
+    or the base algorithm when no prefix is present — exactly as
+    ``get_mapper`` does; bracket options win over kwargs.  Chained
+    prefixes (``"portfolio[k=8]:refined:hyperplane"``) need no special
+    casing: the grammar is recursive in ``<base>``.
+    """
+    from .mapping import MAPPERS, REFINE_PREFIXES, _make_refiner, \
+        split_mapper_name
+    from .refine import SwapRefiner
+    chain = []                      # (prefix, options), outer-first
+    rest = name
+    while True:
+        parsed = split_mapper_name(rest, full_name=name)
+        if parsed is None:
+            break
+        prefix, opts, rest = parsed
+        chain.append((prefix, opts))
+    if rest not in MAPPERS:
+        raise KeyError(
+            f"unknown mapper {rest!r}"
+            + (f" (base of {name!r})" if rest != name else "")
+            + f"; choose from {sorted(MAPPERS)} "
+            f"or one of {[p + '<base>' for p in REFINE_PREFIXES]}")
+    base_kwargs = kwargs if not chain else {}
+    fallback = None
+    refine_stages: List[Stage] = []
+    for i, (prefix, opts) in enumerate(reversed(chain)):
+        outermost = i == len(chain) - 1
+        merged = {**kwargs, **opts} if outermost else dict(opts)
+        # wrapper-level knobs (not refiner constructor args): `budget` caps
+        # this stage's accepted swaps, `fallback` names the base algorithm
+        # to start from when the primary is inapplicable — where chain
+        # inapplicability originates, so it attaches to the BaseStage.
+        budget = merged.pop("budget", None)
+        fb = merged.pop("fallback", None)
+        if fb is not None:
+            fallback = fb
+        if prefix == "refined":
+            refiner = SwapRefiner(**merged)
+        else:
+            refiner = _make_refiner(prefix, merged)
+        refine_stages.append(RefineStage(refiner, budget=budget,
+                                         prefix=prefix, options=merged))
+    stages: List[Stage] = [BaseStage(MAPPERS[rest], fallback=fallback,
+                                     **base_kwargs)]
+    stages += refine_stages
+    return MappingPlan(stages, name=name)
+
+
+# ---------------------------------------------------------------------------
+# the serving cache
+
+
+class PlanCache:
+    """LRU cache of solved plans (and derived device layouts).
+
+    Keys are ``(problem.content_hash(), plan key[, intra order])`` — pure
+    content, so two meshes built from equal problem signatures share an
+    entry no matter which objects spelled them.  ``disk_dir`` enables the
+    JSON spill: entries evicted from (or missing in) memory are read back
+    from ``<disk_dir>/<sha>.json`` and count as ``disk_hits``.  All
+    counters are plain attributes (``hits`` / ``misses`` / ``disk_hits``
+    / ``puts`` / ``evictions``); access is thread-safe.
+    """
+
+    def __init__(self, maxsize: int = 256,
+                 disk_dir: Union[None, bool, str, Path] = None):
+        if maxsize < 1:
+            raise ValueError("maxsize must be >= 1")
+        self.maxsize = int(maxsize)
+        if disk_dir is True:
+            disk_dir = DEFAULT_CACHE_DIR
+        self.disk_dir = None if not disk_dir else Path(disk_dir).expanduser()
+        self._mem: "OrderedDict[str, dict]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.disk_hits = 0
+        self.puts = 0
+        self.evictions = 0
+
+    # -- raw key/value store ------------------------------------------------
+    def _disk_path(self, key: str) -> Path:
+        return self.disk_dir / (hashlib.sha256(key.encode()).hexdigest()[:40]
+                                + ".json")
+
+    def get(self, key: str) -> Optional[dict]:
+        with self._lock:
+            if key in self._mem:
+                self._mem.move_to_end(key)
+                self.hits += 1
+                return dict(self._mem[key])
+        value = self._disk_get(key)
+        if value is not None:
+            with self._lock:
+                self.hits += 1
+                self.disk_hits += 1
+            self._mem_put(key, value)
+            return dict(value)
+        with self._lock:
+            self.misses += 1
+        return None
+
+    def _disk_get(self, key: str) -> Optional[dict]:
+        if self.disk_dir is None:
+            return None
+        path = self._disk_path(key)
+        try:
+            blob = json.loads(path.read_text())
+        except (OSError, ValueError):
+            return None
+        if blob.get("key") != key:   # hash-prefix collision / stale file
+            return None
+        return blob["value"]
+
+    def _mem_put(self, key: str, value: dict) -> None:
+        with self._lock:
+            self._mem[key] = dict(value)
+            self._mem.move_to_end(key)
+            while len(self._mem) > self.maxsize:
+                self._mem.popitem(last=False)
+                self.evictions += 1
+
+    def put(self, key: str, value: dict) -> None:
+        """Store a JSON-able value dict under ``key`` (memory + disk)."""
+        self._mem_put(key, value)
+        with self._lock:
+            self.puts += 1
+        if self.disk_dir is not None:
+            try:
+                self.disk_dir.mkdir(parents=True, exist_ok=True)
+                path = self._disk_path(key)
+                tmp = path.with_suffix(".tmp")
+                tmp.write_text(json.dumps({"key": key, "value": value},
+                                          default=_jsonable))
+                os.replace(tmp, path)
+            except OSError:
+                pass                 # disk spill is best-effort
+
+    def clear(self) -> None:
+        """Drop the in-memory entries and reset counters (disk files stay)."""
+        with self._lock:
+            self._mem.clear()
+            self.hits = self.misses = self.disk_hits = 0
+            self.puts = self.evictions = 0
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"size": len(self._mem), "hits": self.hits,
+                    "misses": self.misses, "disk_hits": self.disk_hits,
+                    "puts": self.puts, "evictions": self.evictions}
+
+    # -- typed entry points ---------------------------------------------------
+    # Hit paths hand back fresh copies (np.array copies; stats go through a
+    # json round-trip), so callers can never mutate a live cache entry.
+
+    def solve(self, problem: MappingProblem,
+              plan: MappingPlan) -> MappingSolution:
+        """``plan.solve(problem)``, memoized by content.  Plans without a
+        stable content key (``plan.cacheable`` False) are solved fresh —
+        an unsound key must never serve a wrong solution."""
+        if not plan.cacheable:
+            return plan.solve(problem, cache=None)
+        key = f"sol:{problem.content_hash()}:{plan.key}"
+        hit = self.get(key)
+        if hit is not None:
+            return MappingSolution(
+                assignment=np.array(hit["assignment"], dtype=np.int64),
+                j_sum=float(hit["j_sum"]), j_max=float(hit["j_max"]),
+                problem=problem, plan_key=plan.key,
+                stage_stats=_jsonable_stats(hit["stage_stats"]),
+                wall_time_s=float(hit["wall_time_s"]), from_cache=True)
+        sol = plan.solve(problem, cache=None)
+        self.put(key, {
+            "assignment": np.array(sol.assignment, dtype=np.int64),
+            "j_sum": sol.j_sum, "j_max": sol.j_max,
+            "stage_stats": _jsonable_stats(sol.stage_stats),
+            "wall_time_s": sol.wall_time_s,
+        })
+        return sol
+
+    def layout(self, problem: MappingProblem, plan_key: str,
+               intra_order: str, compute) -> np.ndarray:
+        """Memoize a device layout (``remap.device_layout`` output, which
+        additionally depends on the intra-node rank order)."""
+        key = f"lay:{problem.content_hash()}:{plan_key}:{intra_order}"
+        hit = self.get(key)
+        if hit is not None:
+            return np.array(hit["layout"],
+                            dtype=np.int64).reshape(problem.mesh_shape)
+        L = np.asarray(compute(), dtype=np.int64)
+        self.put(key, {"layout": L.reshape(-1).copy()})
+        return L
+
+
+def _jsonable(v):
+    """json.dumps ``default=``: numpy scalars/arrays -> plain Python."""
+    if isinstance(v, np.ndarray):
+        return v.tolist()
+    if isinstance(v, (np.integer, np.floating, np.bool_)):
+        return v.item()
+    return str(v)
+
+
+def _jsonable_stats(stats: List[dict]) -> List[dict]:
+    return json.loads(json.dumps(stats, default=_jsonable))
+
+
+_default_cache: Optional[PlanCache] = None
+_default_lock = threading.Lock()
+
+
+def default_plan_cache() -> PlanCache:
+    """The process-wide cache `device_layout`/`mapped_device_array`/
+    `make_mapped_mesh`/`cart_create` use unless told otherwise (memory
+    only; build your own ``PlanCache(disk_dir=True)`` to spill)."""
+    global _default_cache
+    with _default_lock:
+        if _default_cache is None:
+            _default_cache = PlanCache()
+        return _default_cache
+
+
+def resolve_cache(cache: Union[None, bool, PlanCache]) -> Optional[PlanCache]:
+    """``None`` -> the process default, ``False`` -> caching off, a
+    :class:`PlanCache` -> itself."""
+    if cache is None:
+        return default_plan_cache()
+    if cache is False:
+        return None
+    if cache is True:
+        return default_plan_cache()
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# the MPI-style facade
+
+
+@dataclass
+class CartResult:
+    """What :func:`cart_create` hands back: the solved problem, the device
+    layout realising it, and the solution provenance."""
+
+    problem: MappingProblem
+    plan_key: str
+    solution: MappingSolution
+    layout: np.ndarray              # mesh_shape -> device index
+
+    @property
+    def from_cache(self) -> bool:
+        return self.solution.from_cache
+
+    @property
+    def j_sum(self) -> float:
+        return self.solution.j_sum
+
+    @property
+    def j_max(self) -> float:
+        return self.solution.j_max
+
+    def mesh(self, devices: Optional[Sequence] = None,
+             axes: Optional[Sequence[str]] = None):
+        """Materialize a ``jax.sharding.Mesh`` over ``devices`` (default:
+        ``jax.devices()``, pod-major runtime order) permuted by this
+        layout (same convention as ``mapped_device_array``)."""
+        import jax
+        from jax.sharding import Mesh
+        from .remap import apply_layout
+        devs = list(devices) if devices is not None else list(jax.devices())
+        if axes is None:
+            if len(self.layout.shape) == 2:
+                axes = ("data", "model")
+            elif len(self.layout.shape) == 3:
+                axes = ("pod", "data", "model")
+            else:
+                raise ValueError("pass axes for a rank-"
+                                 f"{len(self.layout.shape)} mesh")
+        return Mesh(apply_layout(devs, self.layout), tuple(axes))
+
+
+def cart_create(mesh_shape: Sequence[int],
+                stencil: Optional[Stencil] = None, *,
+                node_sizes: Optional[Sequence[int]] = None,
+                chips_per_pod: Optional[int] = None,
+                periodic: Optional[Sequence[bool]] = None,
+                objective: str = "lex",
+                plan: Union[str, MappingPlan] = DEFAULT_CART_PLAN,
+                cache: Union[None, bool, PlanCache] = None,
+                reorder: bool = True) -> CartResult:
+    """``MPI_Cart_create(reorder=1)``, library-shaped: one call from a mesh
+    shape + stencil to a topology-aware device layout, served from the
+    plan cache when the same problem signature was solved before.
+
+    Args:
+      mesh_shape: the virtual Cartesian grid (one entry per mesh axis).
+      stencil: communication pattern (default: nearest-neighbor of the
+        grid's rank; pass ``launch.mesh.stencil_for_plan``'s byte-weighted
+        stencil for real workloads).
+      node_sizes: chips per node/pod (ragged allowed — elastic pods).
+        Exactly one of ``node_sizes`` / ``chips_per_pod`` is required;
+        ``chips_per_pod`` splits the mesh blocked with a ragged tail pod
+        when it doesn't divide evenly.
+      periodic: per-axis wraparound (``MPI_Cart_create``'s ``periods``).
+      objective: declared optimization target (part of the cache key).
+      plan: a registry spelling (any ``parse_plan`` grammar, chained
+        prefixes included) or a :class:`MappingPlan`.
+      cache: ``None`` -> process-default :class:`PlanCache`, ``False`` ->
+        no caching, or an explicit cache instance.
+      reorder: ``False`` returns the identity (blocked) layout, like
+        ``MPI_Cart_create(reorder=0)``.
+
+    Returns a :class:`CartResult`; ``result.layout[logical coord] =
+    device index`` (row-major intra-node order), ``result.mesh()``
+    materializes the ``jax.sharding.Mesh``.
+    """
+    mesh_shape = tuple(int(d) for d in mesh_shape)
+    p = math.prod(mesh_shape)
+    if stencil is None:
+        stencil = Stencil.nearest_neighbor(len(mesh_shape))
+    if node_sizes is not None and chips_per_pod is not None:
+        raise ValueError("pass node_sizes or chips_per_pod, not both")
+    if node_sizes is not None:
+        node_sizes = tuple(int(n) for n in node_sizes)
+    elif chips_per_pod is not None:
+        node_sizes = blocked_node_sizes(p, chips_per_pod)
+    else:
+        raise ValueError("cart_create needs node_sizes or chips_per_pod")
+    problem = MappingProblem(mesh_shape, stencil, node_sizes,
+                             objective=objective,
+                             periodic=None if periodic is None
+                             else tuple(periodic))
+    if not reorder:
+        plan = "blocked"
+    if isinstance(plan, str):
+        plan = parse_plan(plan)
+    c = resolve_cache(cache)
+    solution = plan.solve(problem, cache=c)
+    return CartResult(problem=problem, plan_key=plan.key, solution=solution,
+                      layout=solution.layout())

@@ -24,11 +24,18 @@ package supplies that pass in three tiers:
   (with bracket options, e.g. ``"portfolio[k=8]:<base>"``) upgrade any
   registered algorithm (see :mod:`repro.core.mapping` for the
   name-resolution contract).
+
+Every refiner also exposes ``as_stage(budget=...)`` — the uniform
+:class:`~repro.core.refine.stage.RefineStage` adapter the plan API
+(:mod:`repro.core.plan`) composes into :class:`MappingPlan` chains, with
+an optional per-stage accepted-swap budget.
 """
 from .swap import RefineResult, SwapRefiner, refine_assignment
 from .schedule import ScheduledRefiner
 from .portfolio import PortfolioRefiner
+from .stage import BaseStage, RefineStage, Stage, StageResult
 from .mapper import RefinedMapper
 
 __all__ = ["SwapRefiner", "ScheduledRefiner", "PortfolioRefiner",
-           "RefineResult", "refine_assignment", "RefinedMapper"]
+           "RefineResult", "refine_assignment", "RefinedMapper",
+           "Stage", "StageResult", "BaseStage", "RefineStage"]

@@ -1,13 +1,20 @@
 """`refined:<base>` — any registered mapper plus swap refinement.
 
-The wrapper runs the base algorithm, refines its node-of-position
+The wrapper is a two-stage mapping plan in :class:`Mapper` clothing: a
+:class:`~repro.core.refine.stage.BaseStage` runs the base algorithm (with
+the optional inapplicability fallback), a
+:class:`~repro.core.refine.stage.RefineStage` improves the node-of-position
 assignment with :class:`SwapRefiner` (or any object with the same
 ``refine(grid, stencil, node_of_pos, num_nodes)`` signature, e.g.
-:class:`~repro.core.refine.schedule.ScheduledRefiner`), then rebuilds a
-rank->coordinate bijection that realises the refined assignment while
-respecting the blocked scheduler allocation: node i's ranks take node i's
-grid positions in row-major position order (same convention as
+:class:`~repro.core.refine.schedule.ScheduledRefiner`), and the wrapper
+rebuilds a rank->coordinate bijection that realises the refined assignment
+while respecting the blocked scheduler allocation: node i's ranks take node
+i's grid positions in row-major position order (same convention as
 ``remap.device_layout(intra_order="rowmajor")``).
+
+:func:`~repro.core.plan.parse_plan` builds the same stages without the
+Mapper wrapper; ``get_mapper`` composes nested RefinedMappers from a parsed
+plan, so both spellings execute identical stage chains.
 
 Usage::
 
@@ -21,10 +28,10 @@ from typing import Optional, Sequence, Union
 
 import numpy as np
 
-from ..cost import node_of_rank_blocked
 from ..grid import CartGrid
 from ..stencil import Stencil
-from ..mapping.base import Mapper, MapperInapplicable
+from ..mapping.base import Mapper
+from .stage import BaseStage, RefineStage
 from .swap import RefineResult, SwapRefiner
 
 __all__ = ["RefinedMapper"]
@@ -36,19 +43,22 @@ class RefinedMapper(Mapper):
     Keyword arguments are forwarded to :class:`SwapRefiner` unless an
     explicit ``refiner`` is given; ``prefix`` sets the registry spelling the
     wrapper answers to (``refined`` for the plain swap pass, ``refined2`` /
-    ``annealed`` for the scheduled engines).  Raises whatever the base
-    raises (``MapperInapplicable`` propagates so callers can fall back) —
-    unless a ``fallback`` base is given, in which case the wrapper starts
-    refinement from the fallback's assignment instead (used by the elastic
-    mesh path, where homogeneous-only bases like Nodecart would otherwise
-    leave a ragged pod entirely unrefined).
+    ``annealed`` for the scheduled engines, ``portfolio`` for the K-start
+    batched annealing portfolio).  Raises whatever the base raises
+    (``MapperInapplicable`` propagates so callers can fall back) — unless a
+    ``fallback`` base is given, in which case the wrapper starts refinement
+    from the fallback's assignment instead (used by the elastic mesh path,
+    where homogeneous-only bases like Nodecart would otherwise leave a
+    ragged pod entirely unrefined).  ``budget`` caps the refinement stage's
+    accepted swaps (a per-stage plan budget).
     """
 
     requires_homogeneous = False
 
     def __init__(self, base: Union[Mapper, str] = "hyperplane",
                  refiner=None, prefix: str = "refined",
-                 fallback: Union[Mapper, str, None] = None, **refiner_kwargs):
+                 fallback: Union[Mapper, str, None] = None,
+                 budget: Optional[int] = None, **refiner_kwargs):
         if isinstance(base, str):
             from ..mapping import get_mapper
             base = get_mapper(base)
@@ -61,27 +71,25 @@ class RefinedMapper(Mapper):
         self.fallback = fallback
         self.refiner = refiner if refiner is not None \
             else SwapRefiner(**refiner_kwargs)
+        self.base_stage = BaseStage(base, fallback=fallback)
+        self.refine_stage = RefineStage(self.refiner, budget=budget,
+                                        prefix=prefix)
         self.name = f"{prefix}:{base.name}"
         self.last_result: Optional[RefineResult] = None
 
+    @property
+    def stages(self):
+        """The plan this mapper executes, as stage objects."""
+        return (self.base_stage, self.refine_stage)
+
     def coords(self, grid: CartGrid, stencil: Stencil,
                node_sizes: Sequence[int]) -> np.ndarray:
-        try:
-            node_of_pos = self.base.assignment(grid, stencil, node_sizes)
-        except MapperInapplicable:
-            if self.fallback is None:
-                raise
-            node_of_pos = self.fallback.assignment(grid, stencil, node_sizes)
-        result = self.refiner.refine(grid, stencil, node_of_pos,
-                                     num_nodes=len(node_sizes))
-        self.last_result = result
-        refined = result.assignment
+        sr = self.base_stage.run(grid, stencil, node_sizes)
+        sr = self.refine_stage.run(grid, stencil, node_sizes, sr.assignment)
+        self.last_result = sr.result
+        refined = sr.assignment
         # blocked rank order is already node-sorted, so a stable node-sort of
         # positions lines rank r up with the r-th (node, position) pair.
-        owner_of_rank = node_of_rank_blocked(node_sizes)
-        if not np.array_equal(np.bincount(refined, minlength=len(node_sizes)),
-                              np.bincount(owner_of_rank,
-                                          minlength=len(node_sizes))):
-            raise AssertionError("refinement changed per-node cardinalities")
+        # (per-node cardinality preservation is asserted by RefineStage.)
         pos_by_node = np.argsort(refined, kind="stable")
         return np.stack(np.unravel_index(pos_by_node, grid.dims), axis=1)

@@ -73,6 +73,12 @@ class PortfolioRefiner:
         contribute their raw states as candidates.  ``None`` polishes every
         survivor — thorough but the polish stage then scales with K, which
         is what the default bounds.
+      max_swaps: total accepted-swap budget across the shared prefix, all
+        ladders, and the polish phases (None = unlimited, the default and
+        bit-identical path; the ``portfolio <= annealed`` dominance
+        guarantee is only stated for the unbudgeted engine).  Per-stage
+        plan budgets (:class:`~repro.core.refine.stage.RefineStage`)
+        thread into this.
       Remaining keyword arguments configure the underlying schedule —
       identical names and defaults as :class:`ScheduledRefiner`
       (``objectives``, ``rounds``, ``policy``, ``max_passes``, ``weighted``
@@ -89,7 +95,7 @@ class PortfolioRefiner:
                  weighted="auto", tol: float = 1e-12,
                  max_partners: int = 32, engine: str = "batch",
                  temperatures: Sequence[float] = (2.0, 1.0, 0.5, 0.25),
-                 sa_moves: int = 200):
+                 sa_moves: int = 200, max_swaps: Optional[int] = None):
         if seeds is not None:
             seeds = tuple(int(s) for s in seeds)
         else:
@@ -106,6 +112,9 @@ class PortfolioRefiner:
         self.k = len(seeds)
         self.kill_factor = None if kill_factor is None else float(kill_factor)
         self.polish_top = None if polish_top is None else int(polish_top)
+        if max_swaps is not None and int(max_swaps) < 0:
+            raise ValueError("max_swaps must be >= 0 (or None)")
+        self.max_swaps = None if max_swaps is None else int(max_swaps)
         # the shared schedule: its deterministic rounds are the common
         # prefix, its polish phases close each ladder, and its SA
         # parameters define the ladders themselves.
@@ -115,9 +124,28 @@ class PortfolioRefiner:
             max_partners=max_partners, engine=engine, anneal=True,
             temperatures=temperatures, sa_moves=sa_moves, seed=seeds[0])
 
+    def as_stage(self, budget: Optional[int] = None):
+        """Uniform :class:`~repro.core.refine.stage.RefineStage` adapter
+        (``budget`` caps this stage's accepted swaps)."""
+        from .stage import RefineStage
+        return RefineStage(self, budget=budget, prefix="portfolio")
+
+    def config(self) -> dict:
+        """Full constructor configuration — the stage layer's canonical
+        cache identity for hand-built refiners.  ``seeds`` subsumes
+        ``k``/``seed``; the shared schedule's ``anneal``/``seed`` are
+        implied."""
+        cfg = {k: v for k, v in self.schedule.config().items()
+               if k not in ("anneal", "seed", "max_swaps")}
+        cfg.update({"seeds": self.seeds, "kill_factor": self.kill_factor,
+                    "polish_top": self.polish_top,
+                    "max_swaps": self.max_swaps})
+        return cfg
+
     # -- batched SA ladders -------------------------------------------------
     def _batched_ladders(self, grid: CartGrid, stencil: Stencil,
-                         start: np.ndarray, num_nodes: Optional[int]) \
+                         start: np.ndarray, num_nodes: Optional[int],
+                         budget: Optional[int] = None) \
             -> Tuple[PortfolioCost, np.ndarray, int, int]:
         """Advance K ladders from ``start`` in lock-step.  Returns the
         portfolio state, the per-ladder alive mask (False = early-killed),
@@ -145,12 +173,16 @@ class PortfolioRefiner:
         accepted = 0
         killed = 0
         for T0 in sched.temperatures:
+            if budget is not None and accepted >= budget:
+                break               # skip leftover temperatures' setup too
             T = max(T0 * t_scale, 1e-12)
             masks = pc.boundary_masks()
             boundaries = {i: np.nonzero(masks[i])[0]
                           for i in range(K) if alive[i] and not done[i]}
             stopped = set()     # no cross-node partner this temperature
             for _ in range(sched.sa_moves):
+                if budget is not None and accepted >= budget:
+                    break
                 rows, Ps, Qs = [], [], []
                 for i, b in boundaries.items():
                     if done[i] or i in stopped:
@@ -211,12 +243,15 @@ class PortfolioRefiner:
 
         # 1. shared deterministic prefix (seed-independent, run once)
         cur, swaps, passes = sched.run_rounds(grid, stencil, cur, num_nodes,
-                                              consider)
+                                              consider,
+                                              max_swaps=self.max_swaps)
         t_rounds = time.perf_counter() - t0
 
-        # 2. K annealing ladders, batched
+        # 2. K annealing ladders, batched (budget caps accepted moves at
+        # move granularity — up to K acceptances land per batched move)
+        budget = None if self.max_swaps is None else self.max_swaps - swaps
         pc, alive, sa_accepted, killed = self._batched_ladders(
-            grid, stencil, cur, num_nodes)
+            grid, stencil, cur, num_nodes, budget=budget)
         swaps += sa_accepted
         t_ladders = time.perf_counter() - t0 - t_rounds
 
@@ -244,8 +279,10 @@ class PortfolioRefiner:
                 seen.add(key)
                 polish_order.append(i)
         for i in polish_order:
+            cap = None if self.max_swaps is None \
+                else max(0, self.max_swaps - swaps)
             _, s, p = sched.polish(grid, stencil, pc.assignment(i), num_nodes,
-                                   consider)
+                                   consider, max_swaps=cap)
             swaps += s
             passes += p
 

@@ -57,6 +57,10 @@ class ScheduledRefiner:
         J_max step; scaled by the stencil's mean weight when ``weighted``.
       sa_moves: proposed swaps per temperature.
       seed: SA rng seed (the whole refiner stays deterministic).
+      max_swaps: total accepted-swap budget across every phase and the SA
+        ladder (None = unlimited — the default, bit-identical to the
+        budget-free engine).  This is what per-stage plan budgets
+        (:class:`~repro.core.refine.stage.RefineStage`) thread into.
     """
 
     def __init__(self, objectives: Sequence[str] = ("j_sum", "j_max"),
@@ -65,7 +69,8 @@ class ScheduledRefiner:
                  max_partners: int = 32, engine: str = "batch",
                  anneal: bool = False,
                  temperatures: Sequence[float] = (2.0, 1.0, 0.5, 0.25),
-                 sa_moves: int = 200, seed: int = 0):
+                 sa_moves: int = 200, seed: int = 0,
+                 max_swaps: Optional[int] = None):
         if not objectives:
             raise ValueError("objectives must be non-empty")
         if rounds <= 0:
@@ -86,17 +91,40 @@ class ScheduledRefiner:
         self.temperatures = tuple(float(t) for t in temperatures)
         self.sa_moves = int(sa_moves)
         self.seed = int(seed)
+        if max_swaps is not None and int(max_swaps) < 0:
+            raise ValueError("max_swaps must be >= 0 (or None)")
+        self.max_swaps = None if max_swaps is None else int(max_swaps)
+
+    def as_stage(self, budget: Optional[int] = None):
+        """Uniform :class:`~repro.core.refine.stage.RefineStage` adapter
+        (``budget`` caps this stage's accepted swaps)."""
+        from .stage import RefineStage
+        return RefineStage(self, budget=budget,
+                           prefix="annealed" if self.anneal else "refined2")
+
+    def config(self) -> dict:
+        """Full constructor configuration — the stage layer's canonical
+        cache identity for hand-built refiners."""
+        return {"objectives": self.objectives, "rounds": self.rounds,
+                "policy": self.policy, "max_passes": self.max_passes,
+                "weighted": self.weighted, "tol": self.tol,
+                "max_partners": self.max_partners, "engine": self.engine,
+                "anneal": self.anneal, "temperatures": self.temperatures,
+                "sa_moves": self.sa_moves, "seed": self.seed,
+                "max_swaps": self.max_swaps}
 
     # -- phases -------------------------------------------------------------
-    def _phase(self, objective: str) -> SwapRefiner:
+    def _phase(self, objective: str,
+               max_swaps: Optional[int] = None) -> SwapRefiner:
         return SwapRefiner(objective=objective, policy=self.policy,
                            max_passes=self.max_passes, weighted=self.weighted,
                            tol=self.tol, max_partners=self.max_partners,
-                           engine=self.engine)
+                           engine=self.engine, max_swaps=max_swaps)
 
     def _sa_ladder(self, grid: CartGrid, stencil: Stencil,
                    assignment: np.ndarray, num_nodes: Optional[int],
-                   rng: np.random.Generator) -> Tuple[np.ndarray, int]:
+                   rng: np.random.Generator,
+                   budget: Optional[int] = None) -> Tuple[np.ndarray, int]:
         """One descending temperature ladder of Metropolis swap moves.
         Energy is J_max plus a J_sum tie-break term scaled below one
         bottleneck unit, so uphill acceptance is governed by the bottleneck.
@@ -113,6 +141,8 @@ class ScheduledRefiner:
             T = max(T * t_scale, 1e-12)
             boundary = ic.boundary_positions()
             for _ in range(self.sa_moves):
+                if budget is not None and accepted >= budget:
+                    return ic.node_of_pos.copy(), accepted
                 if boundary.size < 2:
                     return ic.node_of_pos.copy(), accepted
                 p = int(boundary[rng.integers(boundary.size)])
@@ -131,40 +161,49 @@ class ScheduledRefiner:
 
     # -- schedule building blocks (shared with PortfolioRefiner) ------------
     def run_rounds(self, grid: CartGrid, stencil: Stencil, cur: np.ndarray,
-                   num_nodes: Optional[int],
-                   consider) -> Tuple[np.ndarray, int, int]:
+                   num_nodes: Optional[int], consider,
+                   max_swaps: Optional[int] = None) \
+            -> Tuple[np.ndarray, int, int]:
         """The deterministic alternating-objective rounds: returns the final
         phase-chain state (the SA ladder's start point — *not* the
         lexicographic best) plus accepted-swap/pass counts.  ``consider`` is
-        called with every phase result's ``(assignment, (j_max, j_sum))``."""
+        called with every phase result's ``(assignment, (j_max, j_sum))``;
+        ``max_swaps`` caps total accepted swaps across all phases."""
         swaps = passes = 0
         for _ in range(self.rounds):
             round_swaps = 0
             for obj in self.objectives:
-                res = self._phase(obj).refine(grid, stencil, cur,
-                                              num_nodes=num_nodes)
+                cap = None if max_swaps is None else max_swaps - swaps
+                res = self._phase(obj, cap).refine(grid, stencil, cur,
+                                                   num_nodes=num_nodes)
                 cur = res.assignment
                 swaps += res.swaps
                 passes += res.passes
                 round_swaps += res.swaps
                 consider(cur, (res.final.j_max, res.final.j_sum))
+                if max_swaps is not None and swaps >= max_swaps:
+                    return cur, swaps, passes
             if round_swaps == 0:
                 break
         return cur, swaps, passes
 
     def polish(self, grid: CartGrid, stencil: Stencil, cur: np.ndarray,
-               num_nodes: Optional[int],
-               consider) -> Tuple[np.ndarray, int, int]:
+               num_nodes: Optional[int], consider,
+               max_swaps: Optional[int] = None) \
+            -> Tuple[np.ndarray, int, int]:
         """One pass of the phase objectives over a (perturbed) state — what
         the annealed schedule runs after its SA ladder."""
         swaps = passes = 0
         for obj in self.objectives:
-            res = self._phase(obj).refine(grid, stencil, cur,
-                                          num_nodes=num_nodes)
+            cap = None if max_swaps is None else max_swaps - swaps
+            res = self._phase(obj, cap).refine(grid, stencil, cur,
+                                               num_nodes=num_nodes)
             cur = res.assignment
             swaps += res.swaps
             passes += res.passes
             consider(cur, (res.final.j_max, res.final.j_sum))
+            if max_swaps is not None and swaps >= max_swaps:
+                break
         return cur, swaps, passes
 
     # -- driver -------------------------------------------------------------
@@ -183,15 +222,22 @@ class ScheduledRefiner:
                 best, best_key = candidate.copy(), key
 
         cur, swaps, passes = self.run_rounds(grid, stencil, cur, num_nodes,
-                                             consider)
+                                             consider,
+                                             max_swaps=self.max_swaps)
 
-        if self.anneal:
+        if self.anneal and (self.max_swaps is None
+                            or swaps < self.max_swaps):
             rng = np.random.default_rng(self.seed)
+            budget = None if self.max_swaps is None \
+                else self.max_swaps - swaps
             perturbed, accepted = self._sa_ladder(grid, stencil, cur,
-                                                  num_nodes, rng)
+                                                  num_nodes, rng,
+                                                  budget=budget)
             swaps += accepted
+            budget = None if self.max_swaps is None \
+                else self.max_swaps - swaps
             cur, s, p = self.polish(grid, stencil, perturbed, num_nodes,
-                                    consider)
+                                    consider, max_swaps=budget)
             swaps += s
             passes += p
 

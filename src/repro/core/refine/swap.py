@@ -123,6 +123,20 @@ class SwapRefiner:
         self.max_partners = int(max_partners)
         self.engine = engine
 
+    def as_stage(self, budget: Optional[int] = None):
+        """Uniform :class:`~repro.core.refine.stage.RefineStage` adapter
+        (``budget`` caps this stage's accepted swaps)."""
+        from .stage import RefineStage
+        return RefineStage(self, budget=budget, prefix="refined")
+
+    def config(self) -> dict:
+        """Full constructor configuration — the stage layer's canonical
+        cache identity for hand-built refiners."""
+        return {"objective": self.objective, "policy": self.policy,
+                "max_passes": self.max_passes, "max_swaps": self.max_swaps,
+                "weighted": self.weighted, "tol": self.tol,
+                "max_partners": self.max_partners, "engine": self.engine}
+
     def _tol(self, ic: IncrementalCost) -> float:
         """Acceptance threshold in the objective's own units: byte-weighted
         deltas are ~mean-weight sized, so the raw tol would drown in float

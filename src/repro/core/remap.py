@@ -15,20 +15,39 @@ from typing import Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from .cost import MappingCost, evaluate
+from .cost import MappingCost, evaluate, rowmajor_rank_layout
 from .grid import CartGrid
 from .mapping import (Mapper, MapperInapplicable, get_mapper,
                       split_mapper_name)
+from .plan import (MappingProblem, PlanCache, blocked_node_sizes, parse_plan,
+                   resolve_cache)
 from .refine import PortfolioRefiner, RefinedMapper
+from .refine.stage import canon_options
 from .stencil import Stencil
 
 __all__ = ["device_layout", "layout_cost", "mapped_device_array",
-           "ensure_refined", "ELASTIC_PORTFOLIO_KWARGS"]
+           "apply_layout", "ensure_refined", "ELASTIC_PORTFOLIO_KWARGS"]
+
+
+def apply_layout(devices: Sequence, layout: np.ndarray) -> np.ndarray:
+    """Permute ``devices`` (pod-major runtime order) by ``L[logical coord]
+    = device index`` into the object ndarray ``jax.sharding.Mesh``
+    expects — the one place the permutation convention lives
+    (``mapped_device_array`` and ``cart_create().mesh()`` both use it)."""
+    layout = np.asarray(layout)
+    p = int(math.prod(layout.shape))
+    if len(devices) != p:
+        raise ValueError(f"{len(devices)} devices != mesh size {p}")
+    dev_arr = np.empty(p, dtype=object)
+    for i, d in enumerate(devices):
+        dev_arr[i] = d
+    return dev_arr[layout.reshape(-1)].reshape(layout.shape)
 
 
 def device_layout(mapper: Union[Mapper, str], mesh_shape: Sequence[int],
                   stencil: Stencil, node_sizes: Sequence[int],
-                  intra_order: str = "mapper") -> np.ndarray:
+                  intra_order: str = "mapper",
+                  cache: Union[None, bool, PlanCache] = None) -> np.ndarray:
     """Return L with shape ``mesh_shape``: L[logical coord] = device index.
 
     ``intra_order`` (beyond-paper, DESIGN.md §2):
@@ -44,22 +63,43 @@ def device_layout(mapper: Union[Mapper, str], mesh_shape: Sequence[int],
 
     Falls back to the blocked layout if the algorithm is inapplicable
     (e.g. Nodecart on a non-factorizable configuration).
+
+    ``cache``: layouts are served from the plan cache (default: the
+    process-wide :func:`~repro.core.plan.default_plan_cache`; ``False``
+    disables) whenever the mapper has a stable content key — a string
+    spelling, or any mapper built by ``get_mapper``/``parse_plan``/
+    ``ensure_refined`` (``plan_key``, a construction-time snapshot: clear
+    it if you mutate the mapper afterwards).  Ad-hoc mapper instances
+    without a key are never cached.
     """
-    if isinstance(mapper, str):
-        mapper = get_mapper(mapper)
+    # canonical plan key (sorted bracket options), so equivalent spellings
+    # and get_mapper instances of the same plan share one cache entry; the
+    # spelling is parsed once — the key comes from the plan, and the cold
+    # path materializes the mapper from the same parse.
+    plan = parse_plan(mapper) if isinstance(mapper, str) else None
+    key = plan.key if plan is not None else getattr(mapper, "plan_key", None)
+    c = resolve_cache(cache)
+    if c is not None and key is not None:
+        problem = MappingProblem(tuple(mesh_shape), stencil,
+                                 tuple(int(n) for n in node_sizes))
+        return c.layout(
+            problem, key, intra_order,
+            lambda: _compute_layout(
+                plan.to_mapper() if plan is not None else mapper,
+                mesh_shape, stencil, node_sizes, intra_order))
+    return _compute_layout(plan.to_mapper() if plan is not None else mapper,
+                           mesh_shape, stencil, node_sizes, intra_order)
+
+
+def _compute_layout(mapper: Mapper, mesh_shape: Sequence[int],
+                    stencil: Stencil, node_sizes: Sequence[int],
+                    intra_order: str) -> np.ndarray:
     grid = CartGrid(tuple(mesh_shape))
     try:
         if intra_order == "rowmajor":
             node_of_pos = mapper.assignment(grid, stencil, node_sizes)
-            sizes = np.asarray(node_sizes, dtype=np.int64)
-            starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
-            counters = np.zeros(len(sizes), dtype=np.int64)
-            layout = np.empty(grid.size, dtype=np.int64)
-            for pos in range(grid.size):
-                nd = node_of_pos[pos]
-                layout[pos] = starts[nd] + counters[nd]
-                counters[nd] += 1
-            return layout.reshape(tuple(mesh_shape))
+            return rowmajor_rank_layout(node_of_pos).reshape(
+                tuple(mesh_shape))
         coords = mapper.coords(grid, stencil, node_sizes)
     except MapperInapplicable:
         return np.arange(grid.size).reshape(tuple(mesh_shape))
@@ -109,16 +149,26 @@ def ensure_refined(mapper: Union[Mapper, str]) -> Union[Mapper, str]:
         mapper = get_mapper(mapper)
     if isinstance(mapper, RefinedMapper):
         return mapper
-    return RefinedMapper(mapper,
-                         refiner=PortfolioRefiner(**ELASTIC_PORTFOLIO_KWARGS),
-                         prefix="portfolio", fallback="blocked")
+    wrapped = RefinedMapper(
+        mapper, refiner=PortfolioRefiner(**ELASTIC_PORTFOLIO_KWARGS),
+        prefix="portfolio", fallback="blocked")
+    # stable cache identity for the upgrade, iff the base itself has one —
+    # same convention as the plan layer (the fallback marker rides on the
+    # base segment, cf. BaseStage.spec)
+    base_key = getattr(mapper, "plan_key", None)
+    if base_key is not None:
+        opts = canon_options(ELASTIC_PORTFOLIO_KWARGS)
+        wrapped.plan_key = f"portfolio[{opts}]:{base_key}@fallback=blocked"
+    return wrapped
 
 
 def mapped_device_array(devices: Sequence, mapper: Union[Mapper, str],
                         mesh_shape: Sequence[int], stencil: Stencil,
                         chips_per_pod: int,
                         node_sizes: Optional[Sequence[int]] = None,
-                        auto_refine: bool = True) -> np.ndarray:
+                        auto_refine: bool = True,
+                        cache: Union[None, bool, PlanCache] = None) \
+        -> np.ndarray:
     """Arrange ``devices`` (pod-major order) into an ndarray for `Mesh`.
 
     ``node_sizes`` overrides the uniform ``chips_per_pod`` split for
@@ -128,6 +178,12 @@ def mapped_device_array(devices: Sequence, mapper: Union[Mapper, str],
     multi-start annealing-portfolio variant at mesh construction time (see
     :func:`ensure_refined`), so callers no longer opt in by mapper name to
     recover mapping quality after a pod loses chips.
+
+    ``cache`` (default: the process-wide plan cache; ``False`` disables):
+    the solved device layout is keyed by the full problem signature, so a
+    repeated build — an elastic re-mesh onto the same survivors, or a
+    serving-time mesh rebuild — reuses the solved assignment instead of
+    re-annealing (see :class:`~repro.core.plan.PlanCache`).
     """
     p = int(math.prod(mesh_shape))
     if len(devices) != p:
@@ -137,15 +193,10 @@ def mapped_device_array(devices: Sequence, mapper: Union[Mapper, str],
         if sum(node_sizes) != p:
             raise ValueError(f"sum(node_sizes)={sum(node_sizes)} != mesh "
                              f"size {p}")
-    elif p % chips_per_pod == 0:
-        node_sizes = [chips_per_pod] * (p // chips_per_pod)
-    else:  # ragged tail pod (elastic operation after failures)
-        full, rem = divmod(p, chips_per_pod)
-        node_sizes = [chips_per_pod] * full + [rem]
+    else:   # blocked split, ragged tail pod when it doesn't divide evenly
+        node_sizes = list(blocked_node_sizes(p, chips_per_pod))
     if auto_refine and len(set(node_sizes)) > 1:
         mapper = ensure_refined(mapper)
-    layout = device_layout(mapper, mesh_shape, stencil, node_sizes)
-    dev_arr = np.empty(p, dtype=object)
-    for i, d in enumerate(devices):
-        dev_arr[i] = d
-    return dev_arr[layout.reshape(-1)].reshape(tuple(mesh_shape))
+    layout = device_layout(mapper, mesh_shape, stencil, node_sizes,
+                           cache=cache)
+    return apply_layout(devices, layout)

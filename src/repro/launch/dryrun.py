@@ -8,7 +8,12 @@ cost, collective and roofline analysis (EXPERIMENTS.md §Dry-run/§Roofline).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
-      --mesh both --out runs/dryrun [--mapper stencil_strips]
+      --mesh both --out runs/dryrun \
+      [--mappers blocked,hyperplane,portfolio[k=8]:hyperplane]
+
+``--mappers`` accepts every ``parse_plan`` spelling (refinement prefixes,
+bracket options, chained prefixes); each cell records per-mapper linksim
+traffic plus DCI deltas against the blocked baseline.
 """
 import argparse
 import json
@@ -23,12 +28,22 @@ from repro.analysis.hlo import parse_hlo
 from repro.analysis.linksim import simulate
 from repro.analysis.roofline import roofline_from_module
 from repro.configs import ARCHS, SHAPES, get_arch, shape_applicable
-from repro.core import Stencil, device_layout, get_mapper
+from repro.core import Stencil, device_layout
 from repro.launch.input_specs import build_cell
 from repro.launch.mesh import (machine_for, make_mapped_mesh,
                                make_production_mesh, stencil_for_plan)
 from repro.optim.adamw import AdamWConfig
 from repro.sharding.partition import use_partitioning
+
+
+def _split_order(mname: str):
+    """``"hyperplane+rm" -> ("hyperplane", "rm")``: only the trailing
+    ``+rm`` suffix selects intra-pod order — a ``+`` anywhere else (e.g. a
+    signed bracket-option value, ``annealed[t0=+1e-2]:``) is part of the
+    mapper spelling."""
+    if mname.endswith("+rm"):
+        return mname[:-3], "rm"
+    return mname, ""
 
 
 def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
@@ -73,18 +88,34 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
         memory_stats=mem, cost_analysis=ca)
 
     # topology decomposition: play the collectives on physical links for
-    # each candidate device layout (paper metric: DCI bytes ~ J_sum/J_max)
+    # each candidate device layout (paper metric: DCI bytes ~ J_sum/J_max).
+    # Mapper names accept the full parse_plan grammar (chained prefixes,
+    # bracket options, e.g. "portfolio[k=8]:hyperplane"); solved layouts
+    # come from the plan cache, so sweeping many (arch, shape) cells
+    # re-solves each distinct (stencil, mapper) pair only once.
     colls = module.collectives()
     link_reports = {}
     plan_stencil = stencil_for_plan(cfg, shape, multi_pod)
     for mname in mappers:
-        base, _, order = mname.partition("+")
-        layout = device_layout(get_mapper(base), mesh.devices.shape,
+        base, order = _split_order(mname)
+        layout = device_layout(base, mesh.devices.shape,
                                plan_stencil, machine.node_sizes(),
                                intra_order="rowmajor" if order == "rm"
                                else "mapper")
         r = simulate(colls, layout.reshape(-1), machine)
         link_reports[mname] = {**r.summary(), **r.times(machine)}
+    # per-mapper DCI deltas against the blocked baseline (first mapper when
+    # blocked isn't in the sweep): negative = the mapping saves DCI bytes.
+    base_name = next((m for m in link_reports
+                      if _split_order(m)[0] == "blocked"),
+                     next(iter(link_reports), None))
+    if base_name is not None:
+        ref = link_reports[base_name]
+        for rep in link_reports.values():
+            rep["dci_total_delta"] = (rep["dci_total_bytes"]
+                                      - ref["dci_total_bytes"])
+            rep["dci_max_delta"] = (rep["max_dci_pod_bytes"]
+                                    - ref["max_dci_pod_bytes"])
 
     n_coll = {}
     coll_by_op = {}
@@ -110,6 +141,7 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
         "coll_payload_bytes_per_dev": rep.coll_payload_bytes,
         "coll_wire_bytes_per_dev": rep.coll_wire_bytes,
         "linksim": link_reports,
+        "linksim_baseline": base_name,
         "fallbacks": [str(f) for f in cell.partitioning.fallbacks[:8]],
     }
     if out_dir:
@@ -134,7 +166,12 @@ def main():
     ap.add_argument("--shape", default="all")
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
     ap.add_argument("--out", default="runs/dryrun")
-    ap.add_argument("--mappers", default="blocked,stencil_strips,hyperplane,kdtree")
+    ap.add_argument("--mappers",
+                    default="blocked,stencil_strips,hyperplane,kdtree,"
+                            "portfolio:hyperplane",
+                    help="comma list; any parse_plan spelling works "
+                         "(portfolio[k=8]:hyperplane, chained prefixes, "
+                         "+rm for rowmajor intra-pod order)")
     ap.add_argument("--moe-dispatch", default="einsum",
                     choices=["einsum", "scatter"])
     args = ap.parse_args()
@@ -142,7 +179,11 @@ def main():
     archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
     shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
     meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
-    mappers = args.mappers.split(",")
+    from repro.core import parse_plan
+    from repro.core.mapping import split_mapper_list
+    mappers = split_mapper_list(args.mappers)
+    for m in mappers:                     # fail fast on typos, full spelling
+        parse_plan(_split_order(m)[0])
 
     results = []
     for arch in archs:

@@ -24,7 +24,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from ..configs.base import ArchConfig, ShapeSpec
-from ..core import Stencil, get_mapper, mapped_device_array
+from ..core import Stencil, mapped_device_array
 from ..topology.machine import MachineSpec, V5E_2POD, V5E_POD
 
 __all__ = ["make_production_mesh", "make_mapped_mesh", "stencil_for_plan",
@@ -83,7 +83,8 @@ def make_mapped_mesh(mapper_name: str, *, multi_pod: bool = False,
                      auto_refine: bool = True,
                      mesh_shape: Optional[Sequence[int]] = None,
                      axes: Optional[Sequence[str]] = None,
-                     chips_per_pod: Optional[int] = None) -> Mesh:
+                     chips_per_pod: Optional[int] = None,
+                     cache=None) -> Mesh:
     """Production mesh with a paper-algorithm device permutation.
 
     ``node_sizes`` describes the surviving chips per pod for elastic
@@ -96,7 +97,15 @@ def make_mapped_mesh(mapper_name: str, *, multi_pod: bool = False,
     defaults — the elastic path uses this to re-mesh onto an arbitrary
     survivor count (and tests to dry-run the whole flow on a handful of
     fake host devices).  ``mapper_name`` accepts every registry spelling,
-    including bracket options (``"portfolio[k=8]:hyperplane"``).
+    including bracket options (``"portfolio[k=8]:hyperplane"``) and
+    chained prefixes (any :func:`~repro.core.plan.parse_plan` grammar).
+
+    Solved layouts are served from the plan cache (``cache``: None ->
+    process default, False -> off, or a
+    :class:`~repro.core.plan.PlanCache`), so a repeated build of the same
+    problem signature — elastic re-mesh onto the same survivors, serving
+    restart, dry-run sweep cell — skips the mapper+refinement pipeline
+    entirely.
     """
     if mesh_shape is None:
         mesh_shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -129,7 +138,8 @@ def make_mapped_mesh(mapper_name: str, *, multi_pod: bool = False,
     if len(devs) != math.prod(mesh_shape):
         raise ValueError(f"need {math.prod(mesh_shape)} devices, "
                          f"have {len(devs)} (dry-run sets XLA_FLAGS)")
-    arr = mapped_device_array(devs, get_mapper(mapper_name), mesh_shape,
+    arr = mapped_device_array(devs, mapper_name, mesh_shape,
                               stencil, chips_per_pod,
-                              node_sizes=node_sizes, auto_refine=auto_refine)
+                              node_sizes=node_sizes, auto_refine=auto_refine,
+                              cache=cache)
     return Mesh(arr, tuple(axes))

@@ -17,7 +17,7 @@ from typing import Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["MachineSpec", "V5E_POD", "V5E_2POD"]
+__all__ = ["MachineSpec", "RaggedMachineSpec", "V5E_POD", "V5E_2POD"]
 
 
 @dataclass(frozen=True)
@@ -71,6 +71,58 @@ class MachineSpec:
     def __post_init__(self):
         if self.num_pods < 1 or self.chips_per_pod < 1:
             raise ValueError("machine must have at least one pod and one chip")
+
+
+@dataclass(frozen=True)
+class RaggedMachineSpec(MachineSpec):
+    """Machine with per-pod chip counts (elastic allocations after chip
+    loss).  Pod i holds ``pod_sizes[i]`` chips on a 1-d ICI ring; chips are
+    numbered pod-major (pod 0's chips first), matching the blocked rank
+    allocation.  ``num_pods``/``torus`` are derived — ``torus`` is set to
+    the *smallest* pod's ring so bandwidth-derived quantities
+    (``LinkReport.times``) stay conservative.
+    """
+
+    pod_sizes: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        sizes = tuple(int(s) for s in self.pod_sizes)
+        if not sizes or any(s < 1 for s in sizes):
+            raise ValueError(f"pod_sizes must be positive, got {self.pod_sizes}")
+        object.__setattr__(self, "pod_sizes", sizes)
+        object.__setattr__(self, "num_pods", len(sizes))
+        object.__setattr__(self, "torus", (min(sizes),))
+        starts = (0,) + tuple(np.cumsum(sizes).tolist())
+        object.__setattr__(self, "_starts", starts)
+        super().__post_init__()
+
+    @property
+    def num_chips(self) -> int:
+        return sum(self.pod_sizes)
+
+    def node_sizes(self) -> list[int]:
+        return list(self.pod_sizes)
+
+    def pod_of(self, chip: int) -> int:
+        return int(np.searchsorted(np.asarray(self._starts), chip,
+                                   side="right")) - 1
+
+    def torus_coord(self, chip: int) -> Tuple[int, ...]:
+        return (chip - self._starts[self.pod_of(chip)],)
+
+    def torus_hop_path(self, a: int, b: int) -> list[Tuple[int, Tuple[int, ...], int]]:
+        pod = self.pod_of(a)
+        assert pod == self.pod_of(b)
+        size = self.pod_sizes[pod]
+        ca, cb = self.torus_coord(a)[0], self.torus_coord(b)[0]
+        links = []
+        while ca != cb:
+            fwd = (cb - ca) % size
+            bwd = (ca - cb) % size
+            step = +1 if fwd <= bwd else -1
+            links.append((0, (ca,), step))
+            ca = (ca + step) % size
+        return links
 
 
 V5E_POD = MachineSpec(name="tpu-v5e-256", num_pods=1, torus=(16, 16))

@@ -89,11 +89,42 @@ def test_stencil_collectives_shape():
     assert rep.dci_total == 0.0 and rep.ici_total > 0.0
 
 
-def test_machine_for_nodes_rejects_ragged():
-    with pytest.raises(ValueError):
-        machine_for_nodes([16, 12])
+def test_machine_for_nodes_homogeneous_and_ragged():
     m = machine_for_nodes([8] * 6)
     assert m.num_pods == 6 and m.chips_per_pod == 8
+    # ragged allocations get a per-pod-torus machine (elastic pods)
+    r = machine_for_nodes([16, 12])
+    assert r.num_pods == 2 and r.num_chips == 28
+    assert r.node_sizes() == [16, 12]
+    assert [r.pod_of(c) for c in (0, 15, 16, 27)] == [0, 0, 1, 1]
+    assert r.torus_coord(16) == (0,) and r.torus_coord(27) == (11,)
+    # hop path stays inside the pod's own ring (size 12, not 16)
+    path = r.torus_hop_path(27, 16)
+    assert len(path) == 1 and path[0][2] == +1        # wraps 11 -> 0
+    with pytest.raises(ValueError):
+        machine_for_nodes([8, 0])
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_replay_dci_equals_cost_metrics_ragged(seed):
+    """Ragged (elastic) allocations close the same loop: per-pod torus
+    sizes, dci_total == J_sum and max_dci_pod == J_max exactly."""
+    rng = np.random.default_rng(seed)
+    n_nodes = int(rng.integers(2, 6))
+    sizes = [int(rng.integers(2, 9)) for _ in range(n_nodes)]
+    total = sum(sizes)
+    dims = (total,) if rng.integers(2) else (2, -(-total // 2))
+    if int(np.prod(dims)) != total:       # odd total: keep it 1-d
+        dims = (total,)
+    grid = CartGrid(dims)
+    stencil = Stencil.nearest_neighbor(len(dims))
+    a = rng.permutation(np.repeat(np.arange(n_nodes), sizes))
+    cost = evaluate(grid, stencil, a, num_nodes=n_nodes)
+    rep = replay_assignment(grid, stencil, a, sizes)
+    assert rep.dci_total == cost.j_sum
+    assert rep.max_dci_pod() == cost.j_max
+    np.testing.assert_array_equal(rep.dci_pod_egress, cost.per_node)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,496 @@
+"""Plan-layer contract: grammar<->plan parity, the serving cache, budgets,
+and the `cart_create` facade.
+
+Pinned invariants:
+  * parity — for EVERY spelling in ``available_mappers()`` (and chained
+    prefixes), ``parse_plan(name).solve(problem)`` returns the same
+    assignment bit-exactly as ``get_mapper(name)`` on the refine_suite
+    ``--tiny`` instances;
+  * cache — hit/miss/eviction counters, content-keyed identity (changing
+    stencil *weights* must miss), disk spill round-trip, and the
+    acceptance claim: a warm cache makes a repeated mesh build >= 10x
+    faster than the cold portfolio solve;
+  * chained prefixes — appending a lexicographic refine stage never
+    worsens ``(J_max, J_sum)`` (property test);
+  * option grammar — negative numbers / scientific notation parse, and
+    errors name the full spelling.
+"""
+import math
+import time
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline: deterministic shim
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import (CartGrid, MapperInapplicable, MappingPlan,
+                        MappingProblem, PlanCache, Stencil, available_mappers,
+                        cart_create, evaluate, get_mapper, mapped_device_array,
+                        parse_plan)
+from repro.core.mapping import parse_mapper_options, split_mapper_name
+from repro.core.plan import default_plan_cache
+from repro.core.refine import (BaseStage, RefineStage, ScheduledRefiner,
+                               SwapRefiner)
+
+# the refine_suite --tiny instances
+TINY = [
+    ("2d-8x8-hom", (8, 8), (16,) * 4),
+    ("2d-6x8-ragged", (6, 8), (16, 16, 10, 6)),
+    ("3d-4x4x4-hom", (4, 4, 4), (16,) * 4),
+]
+
+CHAINED = ("refined2:refined:hyperplane",
+           "portfolio[k=2,sa_moves=40]:refined:kdtree",
+           "annealed[sa_moves=50]:refined[policy=steepest]:blocked")
+
+
+def _problem(dims, sizes, stencil=None):
+    return MappingProblem(dims, stencil or Stencil.nearest_neighbor(len(dims)),
+                          sizes)
+
+
+# ---------------------------------------------------------------------------
+# parity: the string grammar is a thin front-end onto plans
+
+
+@pytest.mark.parametrize("label,dims,sizes", TINY)
+def test_parse_plan_parity_with_get_mapper_all_spellings(label, dims, sizes):
+    """Acceptance: every available_mappers() spelling solves bit-exactly
+    equal through the plan API and the Mapper API."""
+    grid = CartGrid(dims)
+    stencil = Stencil.nearest_neighbor(len(dims))
+    problem = _problem(dims, sizes, stencil)
+    for name in available_mappers():
+        plan = parse_plan(name)
+        try:
+            via_mapper = get_mapper(name).assignment(grid, stencil,
+                                                     list(sizes))
+        except MapperInapplicable:
+            with pytest.raises(MapperInapplicable):
+                plan.solve(problem)
+            continue
+        sol = plan.solve(problem)
+        np.testing.assert_array_equal(sol.assignment, via_mapper,
+                                      err_msg=f"{name} on {label}")
+        cost = evaluate(grid, stencil, via_mapper, num_nodes=len(sizes))
+        assert (sol.j_max, sol.j_sum) == (cost.j_max, cost.j_sum)
+
+
+def test_parse_plan_parity_chained_prefixes():
+    """Chained prefixes work identically through both front-ends, one
+    refine stage per prefix, applied inner-first."""
+    dims, sizes = (8, 8), (16,) * 4
+    grid = CartGrid(dims)
+    stencil = Stencil.nearest_neighbor(2)
+    problem = _problem(dims, sizes, stencil)
+    for name in CHAINED:
+        plan = parse_plan(name)
+        assert len(plan.stages) == 3
+        assert isinstance(plan.stages[0], BaseStage)
+        assert all(isinstance(s, RefineStage) for s in plan.stages[1:])
+        sol = plan.solve(problem)
+        via_mapper = get_mapper(name).assignment(grid, stencil, list(sizes))
+        np.testing.assert_array_equal(sol.assignment, via_mapper, err_msg=name)
+
+
+def test_plan_key_canonical_and_kwargs_merge():
+    assert parse_plan("portfolio[seed=3,k=8]:hyperplane").key \
+        == "portfolio[k=8,seed=3]:hyperplane"
+    # kwargs configure the outermost refiner and land in the key; bracket
+    # options win on conflict (same rule as get_mapper)
+    assert parse_plan("refined:kdtree", policy="steepest").key \
+        == "refined[policy=steepest]:kdtree"
+    assert parse_plan("portfolio[k=4]:hyperplane", k=16).key \
+        == "portfolio[k=4]:hyperplane"
+    assert parse_plan("refined2:refined:hyperplane").key \
+        == "refined2:refined:hyperplane"
+    # base kwargs (no prefix) are part of the spelling too
+    assert parse_plan("random", seed=7).key == "random{seed=7}"
+    m = get_mapper("annealed[sa_moves=50]:kdtree")
+    assert m.plan_key == "annealed[sa_moves=50]:kdtree"
+
+
+def test_get_mapper_fallback_and_budget_kwargs_still_work():
+    """Wrapper-level knobs survive the parse_plan rewrite: `fallback`
+    starts refinement from another base when the primary is inapplicable
+    (nodecart on ragged sizes), `budget` caps stage swaps — via kwargs or
+    bracket options, through both front-ends."""
+    dims, sizes = (6, 8), (16, 16, 10, 6)          # ragged: nodecart raises
+    grid = CartGrid(dims)
+    stencil = Stencil.nearest_neighbor(2)
+    with pytest.raises(MapperInapplicable):
+        get_mapper("refined:nodecart").assignment(grid, stencil, list(sizes))
+    a = get_mapper("refined:nodecart",
+                   fallback="blocked").assignment(grid, stencil, list(sizes))
+    np.testing.assert_array_equal(np.bincount(a, minlength=4), sizes)
+    plan = parse_plan("annealed[fallback=blocked,budget=5]:nodecart")
+    assert plan.stages[0].fallback is not None
+    assert plan.stages[1].budget == 5
+    assert plan.key == "annealed@budget=5:nodecart@fallback=blocked"
+    sol = plan.solve(_problem(dims, sizes, stencil))
+    assert sum(s.get("swaps", 0) for s in sol.stage_stats) <= 5
+    via_mapper = get_mapper(
+        "annealed[fallback=blocked,budget=5]:nodecart").assignment(
+        grid, stencil, list(sizes))
+    np.testing.assert_array_equal(sol.assignment, via_mapper)
+
+
+def test_hand_built_stages_never_share_keys_across_configs():
+    """Cache-identity soundness: two differently-configured hand-built
+    plans (no spelled options) must have different keys — and neither may
+    collide with the bare parsed spelling."""
+    from repro.core.mapping import RandomMapper
+    p1 = MappingPlan([BaseStage("hyperplane"),
+                      ScheduledRefiner(anneal=True, seed=1,
+                                       sa_moves=300).as_stage()])
+    p2 = MappingPlan([BaseStage("hyperplane"),
+                      ScheduledRefiner(anneal=True, seed=2,
+                                       sa_moves=50).as_stage()])
+    parsed = parse_plan("annealed:hyperplane")
+    assert p1.key != p2.key
+    assert p1.key != parsed.key and p2.key != parsed.key
+    # equal configs do share (deduplication, not just safety)
+    p1b = MappingPlan([BaseStage("hyperplane"),
+                       ScheduledRefiner(anneal=True, seed=1,
+                                        sa_moves=300).as_stage()])
+    assert p1.key == p1b.key
+    # instance-built base mappers carry their configuration too
+    assert MappingPlan([BaseStage(RandomMapper(seed=9))]).key \
+        != MappingPlan([BaseStage(RandomMapper(seed=1))]).key
+    # and the cache really separates them
+    cache = PlanCache()
+    problem = _problem((8, 8), (16,) * 4)
+    s1 = cache.solve(problem, p1)
+    s2 = cache.solve(problem, p2)
+    assert not s2.from_cache and cache.misses == 2
+
+
+def test_unkeyable_plans_bypass_the_cache():
+    """A stage whose configuration has no stable spelling (nested objects
+    would render as memory-address reprs) must never enter the cache."""
+    from repro.core import RefinedMapper
+    inner = RefinedMapper("hyperplane")            # nested objects in vars()
+    plan = MappingPlan([BaseStage(inner)])
+    assert not plan.cacheable
+    cache = PlanCache()
+    s1 = cache.solve(_problem((8, 8), (16,) * 4), plan)
+    s2 = cache.solve(_problem((8, 8), (16,) * 4), plan)
+    assert not s1.from_cache and not s2.from_cache
+    assert cache.stats()["puts"] == 0
+    # and to_mapper propagates "no stable key" instead of a bogus one
+    assert plan.to_mapper().plan_key is None
+    # a foreign refiner without config() is likewise unkeyed
+    class Alien:
+        def __init__(self):
+            self.helper = object()
+        def refine(self, *a, **k):                 # pragma: no cover
+            raise NotImplementedError
+    assert not RefineStage(Alien()).cacheable
+    # cacheable plans still advertise it
+    assert parse_plan("annealed:hyperplane").cacheable
+    assert MappingPlan([BaseStage("hyperplane"),
+                        SwapRefiner().as_stage()]).cacheable
+
+
+def test_refine_stage_rejects_assignment_violating_node_sizes():
+    """The blocked-allocation guard: a base whose assignment doesn't
+    realize node_sizes must raise, not silently corrupt the bijection."""
+    grid, stencil = CartGrid((4, 4)), Stencil.nearest_neighbor(2)
+    bad = np.repeat([0, 1], [10, 6])               # node_sizes say [8, 8]
+    with pytest.raises(AssertionError, match="node_sizes"):
+        SwapRefiner().as_stage().run(grid, stencil, (8, 8), bad)
+
+
+def test_device_layout_cache_key_is_canonical():
+    """Equivalent spellings (reordered bracket options, get_mapper
+    instances) share one cache entry."""
+    from repro.core import device_layout
+    dims, sizes = (8, 8), [16] * 4
+    stencil = Stencil.nearest_neighbor(2)
+    cache = PlanCache()
+    spelled = "annealed[sa_moves=50,seed=1]:hyperplane"
+    reordered = "annealed[seed=1,sa_moves=50]:hyperplane"
+    L1 = device_layout(spelled, dims, stencil, sizes, cache=cache)
+    L2 = device_layout(reordered, dims, stencil, sizes, cache=cache)
+    L3 = device_layout(get_mapper(spelled), dims, stencil, sizes, cache=cache)
+    assert (cache.hits, cache.misses) == (2, 1)
+    np.testing.assert_array_equal(L1, L2)
+    np.testing.assert_array_equal(L1, L3)
+
+
+def test_parse_plan_unknown_names_raise():
+    with pytest.raises(KeyError, match="unknown mapper"):
+        parse_plan("nope")
+    with pytest.raises(KeyError, match=r"base of 'refined:nope'"):
+        parse_plan("refined:nope")
+    with pytest.raises(ValueError, match="first stage"):
+        MappingPlan([RefineStage(SwapRefiner())])
+
+
+def test_solution_layout_matches_device_layout_rowmajor():
+    from repro.core import device_layout
+    dims, sizes = (6, 8), (16, 16, 10, 6)
+    problem = _problem(dims, sizes)
+    sol = parse_plan("refined:hyperplane").solve(problem)
+    L = device_layout("refined:hyperplane", dims, problem.stencil,
+                      list(sizes), intra_order="rowmajor", cache=False)
+    np.testing.assert_array_equal(sol.layout(), L)
+
+
+# ---------------------------------------------------------------------------
+# bracket-option grammar: negative numbers, scientific notation, errors
+
+
+def test_parse_mapper_options_negative_and_scientific():
+    out = parse_mapper_options("t0=1e-2,seed=-3,x=+4,y=-2.5E3,z=1e3,w=.5")
+    assert out == {"t0": 0.01, "seed": -3, "x": 4, "y": -2500.0,
+                   "z": 1000.0, "w": 0.5}
+    assert isinstance(out["seed"], int) and isinstance(out["z"], float)
+    # through the full spelling (the ISSUE's example)
+    prefix, opts, base = split_mapper_name("annealed[t0=1e-2]:hyperplane")
+    assert (prefix, opts, base) == ("annealed", {"t0": 0.01}, "hyperplane")
+    sched = parse_plan("annealed[sa_moves=50,tol=1e-9]:blocked").stages[1]
+    assert sched.refiner.tol == 1e-9
+
+
+def test_parse_mapper_options_errors_name_full_spelling():
+    with pytest.raises(ValueError, match=r"'annealed\[k\]:hyperplane'"):
+        split_mapper_name("annealed[k]:hyperplane")
+    with pytest.raises(ValueError, match=r"'portfolio\[k=1,k=2\]:kdtree'"):
+        parse_plan("portfolio[k=1,k=2]:kdtree")
+    # chained: the error quotes the ORIGINAL spelling, not the inner rest
+    with pytest.raises(ValueError,
+                       match=r"'portfolio:annealed\[=3\]:kdtree'"):
+        parse_plan("portfolio:annealed[=3]:kdtree")
+
+
+# ---------------------------------------------------------------------------
+# the serving cache
+
+
+def test_plan_cache_hit_miss_and_weights_invalidate():
+    dims, sizes = (8, 8), (16,) * 4
+    cache = PlanCache()
+    plan = parse_plan("refined:hyperplane")
+    p1 = _problem(dims, sizes)
+    s1 = cache.solve(p1, plan)
+    assert (cache.hits, cache.misses) == (0, 1) and not s1.from_cache
+    s2 = cache.solve(_problem(dims, sizes), plan)     # equal content, new obj
+    assert (cache.hits, cache.misses) == (1, 1) and s2.from_cache
+    np.testing.assert_array_equal(s1.assignment, s2.assignment)
+    assert s2.key() == s1.key() and s2.stage_stats
+
+    # changing stencil WEIGHTS (same offsets) must miss
+    heavy = Stencil(p1.stencil.offsets, (8.0,) + (1.0,) * (p1.stencil.k - 1))
+    assert _problem(dims, sizes, heavy).content_hash() != p1.content_hash()
+    cache.solve(_problem(dims, sizes, heavy), plan)
+    assert cache.misses == 2
+    # different plan, different node sizes, different objective: all miss
+    cache.solve(p1, parse_plan("refined2:hyperplane"))
+    cache.solve(_problem(dims, (20, 16, 14, 14)), plan)
+    cache.solve(MappingProblem(dims, p1.stencil, sizes, objective="j_max"),
+                plan)
+    assert cache.misses == 5 and cache.hits == 1
+
+
+def test_plan_cache_hits_are_isolated_from_caller_mutation():
+    """Warm hits hand back fresh copies: mutating a returned solution must
+    not corrupt the live cache entry (serving-grade contract)."""
+    cache = PlanCache()
+    plan = parse_plan("refined:hyperplane")
+    problem = _problem((8, 8), (16,) * 4)
+    cache.solve(problem, plan)
+    warm = cache.solve(problem, plan)
+    warm.stage_stats[1]["swaps"] = "CORRUPTED"
+    warm.assignment[:] = -1
+    clean = cache.solve(problem, plan)
+    assert clean.stage_stats[1]["swaps"] != "CORRUPTED"
+    assert clean.assignment.min() >= 0
+    # layout hits too
+    L1 = cache.layout(problem, plan.key, "rowmajor",
+                      lambda: np.arange(64).reshape(8, 8))
+    L1[:] = -1
+    L2 = cache.layout(problem, plan.key, "rowmajor", lambda: 1 / 0)
+    assert L2.min() >= 0
+
+
+def test_split_mapper_list_and_dryrun_order_suffix():
+    """CLI list splitting respects bracket commas, and the dry-run's +rm
+    order suffix never bites a signed bracket-option value."""
+    import os
+    from repro.core.mapping import split_mapper_list
+    saved = os.environ.get("XLA_FLAGS")         # dryrun import sets 512 fake
+    try:                                        # devices; don't leak it
+        from repro.launch.dryrun import _split_order
+    finally:
+        if saved is None:
+            os.environ.pop("XLA_FLAGS", None)
+        else:                                   # pragma: no cover
+            os.environ["XLA_FLAGS"] = saved
+    assert split_mapper_list(
+        "blocked,portfolio[k=8,seed=3]:kdtree,hyperplane+rm") \
+        == ["blocked", "portfolio[k=8,seed=3]:kdtree", "hyperplane+rm"]
+    assert _split_order("hyperplane+rm") == ("hyperplane", "rm")
+    assert _split_order("annealed[tol=+1e-9]:hyperplane") \
+        == ("annealed[tol=+1e-9]:hyperplane", "")
+    base, order = _split_order("annealed[tol=+1e-9]:hyperplane+rm")
+    assert order == "rm"
+    assert parse_plan(base).stages[1].refiner.tol == 1e-9
+
+
+def test_plan_cache_lru_eviction_and_clear():
+    cache = PlanCache(maxsize=2)
+    for i in range(3):
+        cache.put(f"k{i}", {"v": i})
+    assert cache.evictions == 1 and cache.get("k0") is None
+    assert cache.get("k2")["v"] == 2
+    cache.clear()
+    assert cache.stats() == {"size": 0, "hits": 0, "misses": 0,
+                             "disk_hits": 0, "puts": 0, "evictions": 0}
+
+
+def test_plan_cache_disk_spill_roundtrip(tmp_path):
+    dims, sizes = (6, 8), (16, 16, 10, 6)
+    plan = parse_plan("refined:hyperplane")
+    c1 = PlanCache(disk_dir=tmp_path)
+    sol = c1.solve(_problem(dims, sizes), plan)
+    assert list(tmp_path.glob("*.json"))
+    # a fresh cache (fresh process, conceptually) reads the spill back
+    c2 = PlanCache(disk_dir=tmp_path)
+    warm = c2.solve(_problem(dims, sizes), plan)
+    assert warm.from_cache and c2.disk_hits == 1 and c2.misses == 0
+    np.testing.assert_array_equal(warm.assignment, sol.assignment)
+    assert warm.key() == sol.key()
+
+
+def test_warm_cache_mesh_build_10x_faster_than_cold_portfolio():
+    """Acceptance: a warm PlanCache makes a repeated mesh build >= 10x
+    faster than the cold solve on a portfolio row, proven by hit counters
+    (mapped_device_array is make_mapped_mesh minus the jax Mesh wrapper)."""
+    dims, sizes = (8, 8), [22, 16, 16, 10]          # ragged portfolio row
+    stencil = Stencil.nearest_neighbor(2)
+    devices = list(range(math.prod(dims)))
+    cache = PlanCache()
+    name = "portfolio[k=4]:hyperplane"
+    t0 = time.perf_counter()
+    cold = mapped_device_array(devices, name, dims, stencil, 16,
+                               node_sizes=sizes, cache=cache)
+    t_cold = time.perf_counter() - t0
+    assert (cache.hits, cache.misses) == (0, 1)
+    t0 = time.perf_counter()
+    warm = mapped_device_array(devices, name, dims, stencil, 16,
+                               node_sizes=sizes, cache=cache)
+    t_warm = time.perf_counter() - t0
+    assert (cache.hits, cache.misses) == (1, 1)
+    np.testing.assert_array_equal(np.vectorize(int)(cold),
+                                  np.vectorize(int)(warm))
+    assert t_warm < t_cold / 10.0, (t_cold, t_warm)
+
+
+def test_elastic_auto_upgrade_is_cacheable():
+    """The ragged-pod ensure_refined upgrade carries a stable plan_key, so
+    even a *plain* mapper name reuses its elastic portfolio solve."""
+    dims, sizes = (6, 4), [8, 8, 5, 3]
+    stencil = Stencil.nearest_neighbor(2)
+    devices = list(range(24))
+    cache = PlanCache()
+    for _ in range(2):
+        arr = mapped_device_array(devices, "hyperplane", dims, stencil, 8,
+                                  node_sizes=sizes, cache=cache)
+    assert (cache.hits, cache.misses) == (1, 1)
+    # ad-hoc instances (no plan_key) never pollute the cache
+    from repro.core.mapping import HyperplaneMapper
+    mapped_device_array(devices, HyperplaneMapper(), dims, stencil, 8,
+                        node_sizes=sizes, auto_refine=False, cache=cache)
+    assert (cache.hits, cache.misses) == (1, 1)
+
+
+# ---------------------------------------------------------------------------
+# per-stage budgets
+
+
+def test_refine_stage_budget_caps_swaps():
+    dims, sizes = (8, 8), (16,) * 4
+    grid, stencil = CartGrid(dims), Stencil.nearest_neighbor(2)
+    base = get_mapper("random").assignment(grid, stencil, list(sizes))
+    free = SwapRefiner().as_stage().run(grid, stencil, sizes, base)
+    assert free.stats["swaps"] > 2
+    for budget in (0, 1, 2):
+        capped = SwapRefiner().as_stage(budget=budget).run(
+            grid, stencil, sizes, base)
+        assert capped.stats["swaps"] <= budget
+    sched = ScheduledRefiner(anneal=True, sa_moves=30).as_stage(budget=3).run(
+        grid, stencil, sizes, base)
+    assert sched.stats["swaps"] <= 3
+    # a budgeted stage still never loses the lexicographic guarantee
+    k_in = evaluate(grid, stencil, base, num_nodes=4)
+    k_out = evaluate(grid, stencil, sched.assignment, num_nodes=4)
+    assert (k_out.j_max, k_out.j_sum) <= (k_in.j_max, k_in.j_sum)
+
+
+# ---------------------------------------------------------------------------
+# chained-prefix lexicographic improvement (property)
+
+
+@given(st.integers(0, 10_000), st.sampled_from(["hyperplane", "random",
+                                                "kdtree"]))
+@settings(max_examples=12, deadline=None)
+def test_chained_prefix_lexicographic_improvement(seed, base):
+    """Appending a lexicographic refine stage to any plan never worsens
+    (J_max, J_sum): `refined2:refined:<base>` <= `refined:<base>`."""
+    rng = np.random.default_rng(seed)
+    n_nodes = int(rng.integers(2, 5))
+    per = int(rng.integers(3, 7))
+    dims = (n_nodes * per,) if rng.integers(2) else (n_nodes, per)
+    sizes = (per,) * n_nodes if len(dims) == 1 \
+        else (dims[1],) * n_nodes
+    problem = _problem(dims, sizes)
+    inner = parse_plan(f"refined:{base}").solve(problem)
+    chained = parse_plan(f"refined2:refined:{base}").solve(problem)
+    assert chained.key() <= inner.key(), (dims, sizes, base)
+
+
+# ---------------------------------------------------------------------------
+# cart_create facade
+
+
+def test_cart_create_cold_then_warm():
+    cache = PlanCache()
+    r1 = cart_create((8, 8), node_sizes=[16] * 4, cache=cache)
+    assert not r1.from_cache and (cache.hits, cache.misses) == (0, 1)
+    r2 = cart_create((8, 8), node_sizes=[16] * 4, cache=cache)
+    assert r2.from_cache and (cache.hits, cache.misses) == (1, 1)
+    np.testing.assert_array_equal(r1.layout, r2.layout)
+    assert r1.layout.shape == (8, 8)
+    assert sorted(r1.layout.reshape(-1).tolist()) == list(range(64))
+    assert r1.plan_key == "annealed:hyperplane"       # the documented default
+    # the default-cache path works too (no explicit cache object)
+    r3 = cart_create((8, 8), node_sizes=[16] * 4)
+    np.testing.assert_array_equal(r3.layout, r1.layout)
+    assert default_plan_cache().puts >= 1
+
+
+def test_cart_create_chips_per_pod_and_ragged_tail():
+    r = cart_create((6, 4), chips_per_pod=9, plan="refined:hyperplane",
+                    cache=False)
+    assert r.problem.node_sizes == (9, 9, 6) and r.problem.is_ragged
+    counts = np.bincount(r.solution.assignment, minlength=3)
+    np.testing.assert_array_equal(counts, [9, 9, 6])
+    with pytest.raises(ValueError, match="node_sizes or chips_per_pod"):
+        cart_create((4, 4))
+
+
+def test_cart_create_reorder_false_is_blocked():
+    r = cart_create((4, 4), chips_per_pod=4, reorder=False, cache=False)
+    np.testing.assert_array_equal(r.layout.reshape(-1), np.arange(16))
+    assert r.plan_key == "blocked"
+
+
+def test_cart_create_beats_blocked_on_stencil():
+    blocked = cart_create((8, 8), chips_per_pod=16, reorder=False,
+                          cache=False)
+    mapped = cart_create((8, 8), chips_per_pod=16, cache=False)
+    assert (mapped.j_max, mapped.j_sum) <= (blocked.j_max, blocked.j_sum)
