@@ -15,19 +15,49 @@ if [[ "${1:-}" == "--slow" ]]; then
 fi
 
 # batched-engine parity + scheduled-refiner/portfolio invariants, the
-# elastic re-mesh + linksim replay integration modules, and the plan-layer
-# contract (grammar<->plan parity, PlanCache, cart_create), run explicitly
-# so a collection failure elsewhere can't mask a refinement regression
+# sharded-portfolio engine (shard invariance, adaptive control, cache
+# hardening), the elastic re-mesh + linksim replay integration modules,
+# and the plan-layer contract (grammar<->plan parity, PlanCache,
+# cart_create), run explicitly so a collection failure elsewhere can't
+# mask a refinement regression
 python -m pytest -q tests/test_refine_batch.py tests/test_portfolio.py \
+    tests/test_sharded_portfolio.py \
     tests/test_elastic_remesh.py tests/test_linksim_replay.py \
     tests/test_plan.py
 
 # smoke the whole refinement registry (refined: / refined2: / annealed: /
-# portfolio:) incl. the linksim replay columns (ragged rows replay on
-# per-pod torus sizes); the full K=8 sweep is the `-m slow` acceptance
-# test (test_portfolio_k8_acceptance_on_suite_ragged_rows)
+# portfolio: / sharded:) incl. the linksim replay columns (ragged rows
+# replay on per-pod torus sizes) and the matching-K sharded claim
+# (bit-identity / adaptive superset); the full K=8 sweep is the `-m slow`
+# acceptance test (test_portfolio_k8_acceptance_on_suite_ragged_rows)
 PYTHONPATH=src python -m benchmarks.refine_suite --tiny --linksim \
-    --variants refined,refined2,annealed,portfolio[k=4]
+    --variants "refined,refined2,annealed,portfolio[k=4],sharded[shards=2,k=4,restarts=auto]"
+
+# the K-scaling claim, focused so it stays offline-sized: 4x the starts
+# (K=32 sharded across 2 worker processes vs K=8 single-process) must cost
+# < 4x the wall-time while never worsening (J_max, J_sum) vs annealed —
+# run on the 16x28 ragged suite instance, where per-temperature work is
+# chunky enough for the mp backend to amortize IPC
+PYTHONPATH=src python -m benchmarks.refine_suite --instances 16x28 \
+    --stencils hops --mappers hyperplane,random \
+    --variants "annealed,portfolio[k=8],sharded[shards=2,k=32,restarts=auto,backend=mp]"
+
+# sharded smoke: shard-count invariance of the grammar spelling — the
+# sharded engine must be bit-identical to the single-process portfolio
+PYTHONPATH=src python - <<'EOF'
+import numpy as np
+from repro.core import CartGrid, Stencil, get_mapper
+
+grid, stencil, sizes = CartGrid((6, 8)), Stencil.nearest_neighbor(2), \
+    [16, 16, 10, 6]
+ref = get_mapper("portfolio[k=4]:hyperplane").assignment(grid, stencil,
+                                                         sizes)
+sh = get_mapper("sharded[shards=2,k=4]:hyperplane").assignment(grid,
+                                                               stencil,
+                                                               sizes)
+np.testing.assert_array_equal(sh, ref)
+print("sharded smoke OK: sharded[shards=2,k=4] == portfolio[k=4] bit-exact")
+EOF
 
 # cart_create smoke: cold solve -> warm cache hit, asserted via counters
 PYTHONPATH=src python - <<'EOF'

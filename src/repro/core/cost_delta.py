@@ -51,7 +51,33 @@ from .grid import CartGrid
 from .stencil import Stencil, resolve_weighted
 
 __all__ = ["IncrementalCost", "NeighborTable", "Delta", "BatchSwapDelta",
-           "PortfolioCost", "PortfolioSwapDelta", "LOAD_CHUNK_ELEMS"]
+           "PortfolioCost", "PortfolioSwapDelta", "LOAD_CHUNK_ELEMS",
+           "stacked_count_arrays"]
+
+
+def stacked_count_arrays(table: "NeighborTable", assignments: np.ndarray,
+                         num_nodes: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Integer crossing counts for stacked (K, p) assignments:
+    ``((K, k) count_off, (K, N, k) count_node)``.
+
+    THE crossing-count builder — :class:`PortfolioCost` initializes from
+    it, and the sharded engine's numpy fallback
+    (:func:`repro.core.refine.sharded.stacked_crossing_counts`) calls the
+    same function, so the ``counts=`` fast path's "bit-interchangeable
+    producers" contract is upheld mechanically rather than by keeping two
+    copies of this loop in sync.
+    """
+    A = np.asarray(assignments, dtype=np.int64)
+    K, k = A.shape[0], table.out_valid.shape[0]
+    count_off = np.zeros((K, k), dtype=np.int64)
+    count_node = np.zeros((K, int(num_nodes), k), dtype=np.int64)
+    for j in range(k):
+        valid, tgt = table.out_valid[j], table.out_tgt[j]
+        crossing = valid[None, :] & (A != A[:, tgt])
+        count_off[:, j] = crossing.sum(axis=1)
+        rr, pp = np.nonzero(crossing)
+        np.add.at(count_node[:, :, j], (rr, A[rr, pp]), 1)
+    return count_off, count_node
 
 #: Load-matrix scoring materializes (chunk, N) float matrices; callers chunk
 #: proposals so chunk * N stays below this, bounding peak extra memory to
@@ -463,7 +489,8 @@ class PortfolioCost:
 
     def __init__(self, grid: CartGrid, stencil: Stencil,
                  assignments: np.ndarray, num_nodes: Optional[int] = None,
-                 weighted=False, table: Optional[NeighborTable] = None):
+                 weighted=False, table: Optional[NeighborTable] = None,
+                 counts: Optional[Tuple[np.ndarray, np.ndarray]] = None):
         assignments = np.asarray(assignments, dtype=np.int64)
         if assignments.ndim != 2 or assignments.shape[1] != grid.size:
             raise ValueError(
@@ -480,15 +507,23 @@ class PortfolioCost:
                         else np.ones(stencil.k))
         self.node = assignments.copy()
         k = stencil.k
-        self._count_off = np.zeros((self.n_starts, k), dtype=np.int64)
-        self._count_node = np.zeros((self.n_starts, self.n_nodes, k),
-                                    dtype=np.int64)
-        for j in range(k):
-            valid, tgt = self.table.out_valid[j], self.table.out_tgt[j]
-            crossing = valid[None, :] & (self.node != self.node[:, tgt])
-            self._count_off[:, j] = crossing.sum(axis=1)
-            rr, pp = np.nonzero(crossing)
-            np.add.at(self._count_node[:, :, j], (rr, self.node[rr, pp]), 1)
+        if counts is not None:
+            # precomputed integer crossing counts (e.g. the sharded
+            # engine's jax.vmap kernel — see
+            # :func:`repro.core.refine.sharded.stacked_crossing_counts`).
+            # Counts are pure integers, so any correct producer is
+            # bit-interchangeable with the loop below; shapes are checked,
+            # values trusted.
+            count_off, count_node = counts
+            self._count_off = np.array(count_off, dtype=np.int64)
+            self._count_node = np.array(count_node, dtype=np.int64)
+            if self._count_off.shape != (self.n_starts, k) \
+                    or self._count_node.shape != (self.n_starts,
+                                                  self.n_nodes, k):
+                raise ValueError("precomputed counts have wrong shapes")
+        else:
+            self._count_off, self._count_node = stacked_count_arrays(
+                self.table, self.node, self.n_nodes)
         self._per_node = np.zeros((self.n_starts, self.n_nodes),
                                   dtype=np.float64)
         self._rebuild_rows(np.arange(self.n_starts))

@@ -28,6 +28,11 @@ Names resolve in two layers:
    annealed:    ScheduledRefiner(anneal=True) — adds the SA ladder    (J_max, J_sum)
    portfolio:   :class:`~repro.core.refine.PortfolioRefiner` — K      (J_max, J_sum)
                 batched annealing starts, never worse than annealed:
+   sharded:     :class:`~repro.core.refine.ShardedPortfolioRefiner`   (J_max, J_sum)
+                — the portfolio partitioned into seed blocks run in
+                parallel worker processes; bit-identical to
+                ``portfolio[k=K]:`` for any shard count, plus optional
+                adaptive restart/retune control (``restarts=auto``)
    ============ ===================================================== =========
 
 Every spelling accepted here is accepted everywhere a mapper name appears:
@@ -55,6 +60,7 @@ Usage::
     get_mapper("annealed:nodecart", seed=7).assignment(grid, stencil, sizes)
     get_mapper("portfolio[k=4,kill_factor=1.25]:hyperplane")
     get_mapper("annealed[tol=1e-9,seed=-3]:kdtree")  # scientific/negative ok
+    get_mapper("sharded[shards=4,k=64,restarts=auto]:hyperplane")
 """
 from __future__ import annotations
 
@@ -88,10 +94,12 @@ SCHEDULED_PREFIX = "refined2:"
 ANNEALED_PREFIX = "annealed:"
 #: Prefix for the K-start batched annealing portfolio.
 PORTFOLIO_PREFIX = "portfolio:"
+#: Prefix for the process-sharded adaptive portfolio engine.
+SHARDED_PREFIX = "sharded:"
 
 #: All refinement prefixes, in registry-listing order.
 REFINE_PREFIXES = (REFINED_PREFIX, SCHEDULED_PREFIX, ANNEALED_PREFIX,
-                   PORTFOLIO_PREFIX)
+                   PORTFOLIO_PREFIX, SHARDED_PREFIX)
 
 #: ``<prefix>[k=8,...]:<base>`` — the option-bearing prefixed spelling.
 _PREFIXED_NAME_RE = re.compile(
@@ -176,7 +184,8 @@ def split_mapper_name(name: str, full_name: Optional[str] = None) \
 
 
 def _make_refiner(prefix: str, kwargs: Dict[str, object]):
-    from ..refine import PortfolioRefiner, ScheduledRefiner
+    from ..refine import (PortfolioRefiner, ScheduledRefiner,
+                          ShardedPortfolioRefiner)
     if prefix == "refined":
         return None                       # RefinedMapper's default SwapRefiner
     if prefix == "refined2":
@@ -185,6 +194,8 @@ def _make_refiner(prefix: str, kwargs: Dict[str, object]):
         return ScheduledRefiner(anneal=True, **kwargs)
     if prefix == "portfolio":
         return PortfolioRefiner(**kwargs)
+    if prefix == "sharded":
+        return ShardedPortfolioRefiner(**kwargs)
     raise KeyError(prefix)  # pragma: no cover - guarded by split_mapper_name
 
 
@@ -222,6 +233,7 @@ __all__ = [
     "BlockedMapper", "RandomMapper", "NodecartMapper", "HyperplaneMapper",
     "KDTreeMapper", "StencilStripsMapper", "GraphGreedyMapper",
     "MAPPERS", "REFINED_PREFIX", "SCHEDULED_PREFIX", "ANNEALED_PREFIX",
-    "PORTFOLIO_PREFIX", "REFINE_PREFIXES", "get_mapper", "available_mappers",
-    "split_mapper_name", "split_mapper_list", "parse_mapper_options",
+    "PORTFOLIO_PREFIX", "SHARDED_PREFIX", "REFINE_PREFIXES", "get_mapper",
+    "available_mappers", "split_mapper_name", "split_mapper_list",
+    "parse_mapper_options",
 ]

@@ -55,10 +55,17 @@ import math
 import os
 import threading
 import time
+import uuid
 from collections import OrderedDict
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+try:
+    import fcntl
+except ImportError:                       # pragma: no cover - non-POSIX
+    fcntl = None
 
 import numpy as np
 
@@ -329,6 +336,24 @@ def parse_plan(name: str, **kwargs) -> MappingPlan:
 # the serving cache
 
 
+@contextmanager
+def _dir_lock(disk_dir: Path):
+    """Advisory cross-process exclusion for spill-dir mutations: ``flock``
+    on a ``.lock`` sidecar (two caches in different processes publishing
+    the same key serialize their ``os.replace``).  No-op where flock is
+    unavailable — the per-writer unique tmp names alone already prevent
+    interleaved writes there."""
+    if fcntl is None:                     # pragma: no cover - non-POSIX
+        yield
+        return
+    with open(disk_dir / ".lock", "a+b") as lf:
+        fcntl.flock(lf.fileno(), fcntl.LOCK_EX)
+        try:
+            yield
+        finally:
+            fcntl.flock(lf.fileno(), fcntl.LOCK_UN)
+
+
 class PlanCache:
     """LRU cache of solved plans (and derived device layouts).
 
@@ -356,6 +381,8 @@ class PlanCache:
         self.disk_hits = 0
         self.puts = 0
         self.evictions = 0
+        self.corrupt_drops = 0
+        self._tmp_swept_at = 0.0
 
     # -- raw key/value store ------------------------------------------------
     def _disk_path(self, key: str) -> Path:
@@ -384,12 +411,32 @@ class PlanCache:
             return None
         path = self._disk_path(key)
         try:
-            blob = json.loads(path.read_text())
-        except (OSError, ValueError):
+            text = path.read_text()
+        except OSError:                   # no spill (or unreadable): a miss
             return None
-        if blob.get("key") != key:   # hash-prefix collision / stale file
+        try:
+            blob = json.loads(text)
+            if blob.get("key") != key:   # hash-prefix collision: valid
+                return None              # file, someone else's entry
+            value = blob["value"]
+            if not isinstance(value, dict):
+                raise TypeError("spill value must be a dict")
+        except (ValueError, KeyError, AttributeError, TypeError):
+            # truncated/corrupt spill (crashed or interleaved writer): it
+            # is a miss, and the bad file must not poison every future
+            # read of this key — drop it.  The unlink revalidates under
+            # the writers' lock: a concurrent put may have just replaced
+            # the corrupt file with a valid entry, which must survive.
+            with self._lock:
+                self.corrupt_drops += 1
+            try:
+                with _dir_lock(self.disk_dir):
+                    if path.read_text() == text:
+                        path.unlink()
+            except OSError:
+                pass
             return None
-        return blob["value"]
+        return value
 
     def _mem_put(self, key: str, value: dict) -> None:
         with self._lock:
@@ -399,34 +446,76 @@ class PlanCache:
                 self._mem.popitem(last=False)
                 self.evictions += 1
 
+    #: a ``*.tmp`` older than this is a crashed writer's leftover — with
+    #: per-writer unique names nobody will ever finish it.
+    _TMP_STALE_S = 600.0
+
+    def _clean_stale_tmp(self) -> None:
+        # throttled: a leftover only *becomes* stale _TMP_STALE_S after a
+        # crash, so scanning the spill dir more often than that per cache
+        # instance buys nothing — and the scan is O(dir size) on the hot
+        # write path.
+        now = time.time()
+        if now - self._tmp_swept_at < self._TMP_STALE_S:
+            return
+        self._tmp_swept_at = now
+        cutoff = now - self._TMP_STALE_S
+        try:
+            for p in self.disk_dir.glob("*.tmp"):
+                try:
+                    if p.stat().st_mtime < cutoff:
+                        p.unlink()
+                except OSError:
+                    pass
+        except OSError:                   # pragma: no cover - racing rmdir
+            pass
+
     def put(self, key: str, value: dict) -> None:
-        """Store a JSON-able value dict under ``key`` (memory + disk)."""
+        """Store a JSON-able value dict under ``key`` (memory + disk).
+
+        The disk spill is crash- and concurrency-safe: each writer stages
+        into its own ``<sha>.<pid>.<uuid>.tmp`` (two processes spilling the
+        same key can never interleave bytes in a shared staging file), the
+        publish is an atomic ``os.replace`` under an advisory ``flock``
+        (:func:`_dir_lock`), and stale ``.tmp`` leftovers from crashed
+        writers are swept so they cannot accumulate and poison the dir.
+        """
         self._mem_put(key, value)
         with self._lock:
             self.puts += 1
-        if self.disk_dir is not None:
-            try:
-                self.disk_dir.mkdir(parents=True, exist_ok=True)
-                path = self._disk_path(key)
-                tmp = path.with_suffix(".tmp")
-                tmp.write_text(json.dumps({"key": key, "value": value},
-                                          default=_jsonable))
+        if self.disk_dir is None:
+            return
+        tmp = None
+        try:
+            self.disk_dir.mkdir(parents=True, exist_ok=True)
+            self._clean_stale_tmp()
+            path = self._disk_path(key)
+            tmp = path.with_name(f"{path.stem}.{os.getpid()}."
+                                 f"{uuid.uuid4().hex[:8]}.tmp")
+            tmp.write_text(json.dumps({"key": key, "value": value},
+                                      default=_jsonable))
+            with _dir_lock(self.disk_dir):
                 os.replace(tmp, path)
-            except OSError:
-                pass                 # disk spill is best-effort
+        except OSError:
+            if tmp is not None:          # disk spill is best-effort, but
+                try:                     # never leave our own litter
+                    tmp.unlink()
+                except OSError:
+                    pass
 
     def clear(self) -> None:
         """Drop the in-memory entries and reset counters (disk files stay)."""
         with self._lock:
             self._mem.clear()
             self.hits = self.misses = self.disk_hits = 0
-            self.puts = self.evictions = 0
+            self.puts = self.evictions = self.corrupt_drops = 0
 
     def stats(self) -> Dict[str, int]:
         with self._lock:
             return {"size": len(self._mem), "hits": self.hits,
                     "misses": self.misses, "disk_hits": self.disk_hits,
-                    "puts": self.puts, "evictions": self.evictions}
+                    "puts": self.puts, "evictions": self.evictions,
+                    "corrupt_drops": self.corrupt_drops}
 
     # -- typed entry points ---------------------------------------------------
     # Hit paths hand back fresh copies (np.array copies; stats go through a

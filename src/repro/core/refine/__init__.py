@@ -18,6 +18,11 @@ package supplies that pass in three tiers:
   one batched computation (:class:`~repro.core.cost_delta.PortfolioCost`),
   with early-kill of dominated ladders; never worse than a single
   ``annealed`` ladder on the same seed.
+* :class:`ShardedPortfolioRefiner` — the portfolio partitioned into seed
+  blocks run in parallel worker processes (K into the hundreds),
+  bit-identical to the single-process portfolio for any shard count, with
+  optional adaptive control: killed ladders' unspent budgets fund restarts
+  from the leader, and restart temperatures retune from accept rates.
 * :class:`RefinedMapper` — packages any refiner as a drop-in
   :class:`~repro.core.mapping.Mapper`, so ``get_mapper("refined:<base>")``,
   ``"refined2:<base>"``, ``"annealed:<base>"`` and ``"portfolio:<base>"``
@@ -32,10 +37,13 @@ an optional per-stage accepted-swap budget.
 """
 from .swap import RefineResult, SwapRefiner, refine_assignment
 from .schedule import ScheduledRefiner
-from .portfolio import PortfolioRefiner
+from .portfolio import PortfolioRefiner, run_temperature
+from .sharded import ShardedPortfolioRefiner, stacked_crossing_counts
 from .stage import BaseStage, RefineStage, Stage, StageResult
 from .mapper import RefinedMapper
 
 __all__ = ["SwapRefiner", "ScheduledRefiner", "PortfolioRefiner",
+           "ShardedPortfolioRefiner", "run_temperature",
+           "stacked_crossing_counts",
            "RefineResult", "refine_assignment", "RefinedMapper",
            "Stage", "StageResult", "BaseStage", "RefineStage"]

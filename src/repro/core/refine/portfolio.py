@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import math
 import time
+import warnings
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
@@ -51,7 +52,76 @@ from ..stencil import Stencil
 from .schedule import ScheduledRefiner
 from .swap import RefineResult
 
-__all__ = ["PortfolioRefiner"]
+__all__ = ["PortfolioRefiner", "run_temperature"]
+
+
+def run_temperature(pc: PortfolioCost, rngs, alive: np.ndarray,
+                    done: np.ndarray, temps: np.ndarray, sa_moves: int,
+                    eps: np.ndarray,
+                    budget: Optional[int] = None) -> np.ndarray:
+    """Advance every alive, not-yet-done ladder of ``pc`` through one
+    temperature of ``sa_moves`` Metropolis proposals, batched per move.
+
+    This is THE ladder kernel: :class:`PortfolioRefiner` runs it once per
+    temperature over all K ladders, and the sharded engine
+    (:class:`~repro.core.refine.sharded.ShardedPortfolioRefiner`) runs it
+    per seed block inside worker processes — both replicate
+    :meth:`ScheduledRefiner._sa_ladder` move for move per ladder (same rng
+    draw order: position, partner, then acceptance only for uphill moves;
+    same boundary snapshot per temperature; same early-out rules), so a
+    ladder's trajectory depends only on its own rng and start state, never
+    on which batch it ran in.
+
+    ``temps`` is the per-ladder *absolute* temperature (schedule scale and
+    any adaptive retune multiplier already folded in); ``eps`` the
+    per-ladder J_sum tie-break scale.  ``pc``, ``rngs`` and ``done`` are
+    mutated in place; ``budget`` caps the call's accepted swaps (checked
+    before each batched move, exactly as the single-process engine does).
+    Returns the per-ladder accepted-swap counts.
+    """
+    K = pc.n_starts
+    masks = pc.boundary_masks()
+    boundaries = {i: np.nonzero(masks[i])[0]
+                  for i in range(K) if alive[i] and not done[i]}
+    stopped = set()         # no cross-node partner this temperature
+    accepted = np.zeros(K, dtype=np.int64)
+    total = 0
+    for _ in range(sa_moves):
+        if budget is not None and total >= budget:
+            break
+        rows, Ps, Qs = [], [], []
+        for i, b in boundaries.items():
+            if done[i] or i in stopped:
+                continue
+            if b.size < 2:
+                done[i] = True
+                continue
+            p = int(b[rngs[i].integers(b.size)])
+            partners = b[pc.node[i, b] != pc.node[i, p]]
+            if partners.size == 0:
+                stopped.add(i)
+                continue
+            q = int(partners[rngs[i].integers(partners.size)])
+            rows.append(i)
+            Ps.append(p)
+            Qs.append(q)
+        if not rows:
+            break           # every ladder done/stopped this temperature
+        rows_a = np.asarray(rows, dtype=np.int64)
+        d = pc.swap_deltas(rows_a, Ps, Qs, with_loads=True,
+                           with_counts=True)
+        d_e = (d.new_j_max - pc.j_max()[rows_a]
+               + d.d_j_sum * eps[rows_a])
+        acc = [idx for idx, i in enumerate(rows)
+               if (d_e[idx] <= 0.0
+                   or rngs[i].random() < math.exp(-float(d_e[idx])
+                                                  / float(temps[i])))]
+        if acc:
+            pc.commit(d, acc)
+            total += len(acc)
+            for idx in acc:
+                accepted[rows[idx]] += 1
+    return accepted
 
 
 class PortfolioRefiner:
@@ -97,13 +167,21 @@ class PortfolioRefiner:
                  temperatures: Sequence[float] = (2.0, 1.0, 0.5, 0.25),
                  sa_moves: int = 200, max_swaps: Optional[int] = None):
         if seeds is not None:
-            seeds = tuple(int(s) for s in seeds)
+            raw = tuple(int(s) for s in seeds)
+            # duplicate seeds replay identical trajectories — ladders burnt
+            # for zero extra candidates.  Dedupe order-preserved (ladder 0
+            # keeps its dominance role) and keep cache keys honest: config()
+            # reflects the deduped tuple, never the raw spelling.
+            seeds = tuple(dict.fromkeys(raw))
+            if len(seeds) != len(raw):
+                warnings.warn(
+                    f"duplicate portfolio seeds {raw} collapsed to {seeds}: "
+                    "identical seeds replay identical annealing trajectories",
+                    UserWarning, stacklevel=2)
         else:
             seeds = tuple(int(seed) + i for i in range(int(k)))
         if not seeds:
             raise ValueError("portfolio needs at least one start")
-        if len(set(seeds)) != len(seeds):
-            raise ValueError(f"duplicate portfolio seeds: {seeds}")
         if kill_factor is not None and kill_factor < 1.0:
             raise ValueError("kill_factor must be >= 1.0 (or None)")
         if polish_top is not None and polish_top < 1:
@@ -176,42 +254,9 @@ class PortfolioRefiner:
             if budget is not None and accepted >= budget:
                 break               # skip leftover temperatures' setup too
             T = max(T0 * t_scale, 1e-12)
-            masks = pc.boundary_masks()
-            boundaries = {i: np.nonzero(masks[i])[0]
-                          for i in range(K) if alive[i] and not done[i]}
-            stopped = set()     # no cross-node partner this temperature
-            for _ in range(sched.sa_moves):
-                if budget is not None and accepted >= budget:
-                    break
-                rows, Ps, Qs = [], [], []
-                for i, b in boundaries.items():
-                    if done[i] or i in stopped:
-                        continue
-                    if b.size < 2:
-                        done[i] = True
-                        continue
-                    p = int(b[rngs[i].integers(b.size)])
-                    partners = b[pc.node[i, b] != pc.node[i, p]]
-                    if partners.size == 0:
-                        stopped.add(i)
-                        continue
-                    q = int(partners[rngs[i].integers(partners.size)])
-                    rows.append(i)
-                    Ps.append(p)
-                    Qs.append(q)
-                if not rows:
-                    break       # every ladder done/stopped this temperature
-                rows_a = np.asarray(rows, dtype=np.int64)
-                d = pc.swap_deltas(rows_a, Ps, Qs, with_loads=True,
-                                   with_counts=True)
-                d_e = (d.new_j_max - pc.j_max()[rows_a]
-                       + d.d_j_sum * eps[rows_a])
-                acc = [idx for idx, i in enumerate(rows)
-                       if (d_e[idx] <= 0.0
-                           or rngs[i].random() < math.exp(-float(d_e[idx]) / T))]
-                if acc:
-                    pc.commit(d, acc)
-                    accepted += len(acc)
+            accepted += int(run_temperature(
+                pc, rngs, alive, done, np.full(K, T), sched.sa_moves, eps,
+                budget=None if budget is None else budget - accepted).sum())
             # temperature boundary: exact keys, early-kill of dominated runs
             keys = np.stack([pc.j_max(), pc.j_sum()], axis=1)
             for i in range(K):
@@ -224,6 +269,46 @@ class PortfolioRefiner:
                         alive[i] = False
                         killed += 1
         return pc, alive, accepted, killed
+
+    # -- survivor selection + polish (shared with the sharded engine) -------
+    def _polish_survivors(self, grid: CartGrid, stencil: Stencil,
+                          num_nodes: Optional[int], consider,
+                          nodes: np.ndarray, lad_j_max: np.ndarray,
+                          lad_j_sum: np.ndarray, alive: np.ndarray,
+                          swaps: int, passes: int):
+        """Feed every surviving raw ladder state to ``consider`` (its exact
+        key is already on hand, so it is a candidate for free), then run the
+        full polish phases on the most promising survivors: start 0 always
+        (the dominance guarantee vs the single annealed run), then the best
+        survivors by ladder-end key, deduplicating identical end states.
+        ``nodes`` is the (K, p) ladder-end assignment stack.  Returns the
+        updated ``(swaps, passes, polish_order)``."""
+        sched = self.schedule
+        K = nodes.shape[0]
+        for i in range(K):
+            if alive[i]:
+                consider(nodes[i].copy(),
+                         (float(lad_j_max[i]), float(lad_j_sum[i])))
+        ranked = sorted((i for i in range(K) if alive[i]),
+                        key=lambda i: (lad_j_max[i], lad_j_sum[i], i))
+        budget = len(ranked) if self.polish_top is None else self.polish_top
+        seen = set()
+        polish_order = []
+        for i in [0] + ranked:
+            if not alive[i] or len(polish_order) >= budget:
+                continue
+            key = nodes[i].tobytes()
+            if key not in seen:
+                seen.add(key)
+                polish_order.append(i)
+        for i in polish_order:
+            cap = None if self.max_swaps is None \
+                else max(0, self.max_swaps - swaps)
+            _, s, p = sched.polish(grid, stencil, nodes[i].copy(), num_nodes,
+                                   consider, max_swaps=cap)
+            swaps += s
+            passes += p
+        return swaps, passes, polish_order
 
     # -- driver -------------------------------------------------------------
     def refine(self, grid: CartGrid, stencil: Stencil,
@@ -255,36 +340,12 @@ class PortfolioRefiner:
         swaps += sa_accepted
         t_ladders = time.perf_counter() - t0 - t_rounds
 
-        # 3. every surviving raw ladder state is a candidate for free (its
-        # exact key is already on hand) ...
+        # 3. raw survivors are free candidates; the best of them get the
+        # full polish phases (shared with the sharded engine's merge step)
         lad_j_max, lad_j_sum = pc.j_max(), pc.j_sum()
-        for i in range(self.k):
-            if alive[i]:
-                consider(pc.assignment(i),
-                         (float(lad_j_max[i]), float(lad_j_sum[i])))
-        # ... but the full polish phases scale with the grid, so only the
-        # most promising ladders get them: start 0 always (the dominance
-        # guarantee vs the single annealed run), then the best survivors by
-        # ladder-end key, deduplicating identical end states.
-        ranked = sorted((i for i in range(self.k) if alive[i]),
-                        key=lambda i: (lad_j_max[i], lad_j_sum[i], i))
-        budget = len(ranked) if self.polish_top is None else self.polish_top
-        seen = set()
-        polish_order = []
-        for i in [0] + ranked:
-            if not alive[i] or len(polish_order) >= budget:
-                continue
-            key = pc.node[i].tobytes()
-            if key not in seen:
-                seen.add(key)
-                polish_order.append(i)
-        for i in polish_order:
-            cap = None if self.max_swaps is None \
-                else max(0, self.max_swaps - swaps)
-            _, s, p = sched.polish(grid, stencil, pc.assignment(i), num_nodes,
-                                   consider, max_swaps=cap)
-            swaps += s
-            passes += p
+        swaps, passes, polish_order = self._polish_survivors(
+            grid, stencil, num_nodes, consider, pc.node,
+            lad_j_max, lad_j_sum, alive, swaps, passes)
 
         final = IncrementalCost(grid, stencil, best, num_nodes=num_nodes,
                                 weighted=sched.weighted).cost()

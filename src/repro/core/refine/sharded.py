@@ -1,0 +1,641 @@
+"""Sharded adaptive portfolio engine (process-parallel K-start annealing).
+
+The paper's headline is that mapping *search* parallelizes: its distributed
+algorithms beat high-quality sequential mappers (Glantz-Meyerhenke-Noe;
+Schulz-Träff "Better Process Mapping and Sparse Quadratic Assignment") on
+wall-time while matching quality.  :class:`ShardedPortfolioRefiner` is that
+scaling step for the portfolio engine: K annealing ladders partitioned into
+``shards`` seed blocks, each block advanced one temperature at a time by
+:func:`~repro.core.refine.portfolio.run_temperature` inside
+``multiprocessing`` workers (a picklable primitives-only task per block),
+with the coordinator merging per-ladder keys at every temperature boundary
+so the early-kill rule sees the *global* leader — exactly the
+single-process rule.
+
+**Bit-identity.**  A ladder's trajectory depends only on its own rng and
+start state (the shared kernel guarantees the draw order), and every
+cross-ladder coupling — best-seen bookkeeping, the kill rule, survivor
+ranking and polish — runs on the coordinator over globally merged state.
+``sharded[shards=S,k=K]:<base>`` is therefore bit-identical to
+``portfolio[k=K]:<base>`` for any S when adaptive control is off (pinned by
+``tests/test_sharded_portfolio.py``).  The one coupling that cannot shard
+is a global ``max_swaps`` budget (one shared counter checked per batched
+move), so budgeted runs delegate to the single-process engine, which *is*
+that semantics.
+
+**Adaptive control** (``restarts="auto"`` or an int cap):
+
+* early-killed ladders return their unspent proposal budget — the
+  remaining ``temperatures x sa_moves`` they would have run — to a shared
+  pool;
+* the pool funds *restart ladders* seeded fresh (``max(seeds)+1+j``, never
+  colliding with originals) that start from the current portfolio leader's
+  assignment and run the remaining temperatures;
+* with ``retune=True``, each restart ladder's temperature is retuned at
+  phase boundaries from its own observed accept rate: below
+  ``accept_band[0]`` doubles its multiplier (reheat a frozen walk), above
+  ``accept_band[1]`` halves it, always clamped to ``retune_bounds``.
+
+Restart ladders never enter the kill rule's leader computation and are
+never killed, and retune applies *only* to them — so the original K
+ladders replay the single-process portfolio exactly, and the adaptive
+engine's candidate set is a strict superset.  That is the structural
+guarantee behind "adaptive on is lexicographically never worse on the
+(J_max, J_sum) key" (also pinned by tests).
+
+The optional jax path (:func:`stacked_crossing_counts`,
+``vmap_counts=True``) computes each block's integer crossing-count state
+with one ``jax.vmap``-batched kernel over the stacked assignment arrays
+instead of the per-offset numpy loop.  Counts are pure integers, so both
+producers are bit-interchangeable; without jax the numpy path is used
+silently.
+
+Usage::
+
+    from repro.core import ShardedPortfolioRefiner, get_mapper
+    res = ShardedPortfolioRefiner(shards=4, k=64).refine(grid, st, a,
+                                                         num_nodes=N)
+    m = get_mapper("sharded[shards=4,k=64]:hyperplane")
+    m = get_mapper("sharded[shards=2,k=16,restarts=auto,retune=true]:kdtree")
+"""
+from __future__ import annotations
+
+import copy
+import math
+import multiprocessing
+import os
+import sys
+import time
+from collections import OrderedDict
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..cost_delta import (IncrementalCost, NeighborTable, PortfolioCost,
+                          stacked_count_arrays)
+from ..grid import CartGrid
+from ..stencil import Stencil, resolve_weighted
+from .portfolio import PortfolioRefiner, run_temperature
+from .swap import RefineResult
+
+__all__ = ["ShardedPortfolioRefiner", "stacked_crossing_counts"]
+
+#: auto backend: fork+pickle round-trips per temperature only pay off once
+#: the per-temperature batched numpy work dominates the IPC (measured
+#: crossover on the 16x28 ragged suite instance at K in the tens).
+_MP_AUTO_MIN_ELEMS = 1 << 14
+
+
+def _jax_available() -> bool:
+    """True when jax is *already imported* — ``vmap_counts="auto"`` never
+    pays a cold multi-second ``import jax`` just to count integers."""
+    return "jax" in sys.modules
+
+
+def stacked_crossing_counts(grid: CartGrid, stencil: Stencil,
+                            assignments: np.ndarray, num_nodes: int,
+                            use_jax="auto") \
+        -> Tuple[np.ndarray, np.ndarray]:
+    """Integer crossing counts for a stacked (K, p) assignment array:
+    ``((K, k) count_off, (K, N, k) count_node)``, bit-equal to what
+    :class:`~repro.core.cost_delta.PortfolioCost` builds in its own init
+    loop (integers — exact on every path).
+
+    With ``use_jax`` truthy and jax importable the counts come from one
+    ``jax.vmap``-batched kernel over the stacked assignments (crossing
+    masks + ``segment_sum`` per offset); ``"auto"`` uses jax only when it
+    is already imported.  Falls back to the numpy loop otherwise.
+    """
+    A = np.asarray(assignments, dtype=np.int64)
+    table = _memo_table(grid, stencil)
+    N = int(num_nodes)
+    if use_jax and (use_jax != "auto" or _jax_available()):
+        try:
+            return _jax_stacked_counts(table, A, N)
+        except ImportError:
+            pass
+    return stacked_count_arrays(table, A, N)
+
+
+def _jax_stacked_counts(table: NeighborTable, A: np.ndarray,
+                        N: int) -> Tuple[np.ndarray, np.ndarray]:
+    import jax
+    import jax.numpy as jnp
+    out_valid = jnp.asarray(table.out_valid)         # (k, p)
+    out_tgt = jnp.asarray(table.out_tgt)             # (k, p)
+
+    def one(a):                                      # a: (p,)
+        crossing = out_valid & (a[None, :] != a[out_tgt])        # (k, p)
+        count_off = crossing.sum(axis=1)
+        # count_node[j, n] = #{i : crossing[j, i] and a[i] == n}
+        count_node = jax.vmap(
+            lambda c: jax.ops.segment_sum(c.astype(jnp.int32), a,
+                                          num_segments=N))(crossing)
+        return count_off, count_node                 # (k,), (k, N)
+
+    co, cn = jax.jit(jax.vmap(one))(jnp.asarray(A))
+    return (np.asarray(co, dtype=np.int64),
+            np.ascontiguousarray(np.asarray(cn, dtype=np.int64)
+                                 .transpose(0, 2, 1)))
+
+
+# ---------------------------------------------------------------------------
+# the per-(block, temperature) worker task
+
+
+#: NeighborTable memo keyed by (dims, periodic, offsets): persistent pool
+#: workers rebuild block state every temperature, but the table is
+#: trajectory-independent and grid-sized — build it once per process.
+_TABLE_MEMO: "OrderedDict[tuple, NeighborTable]" = OrderedDict()
+_TABLE_MEMO_MAX = 8
+
+
+def _memo_table(grid: CartGrid, stencil: Stencil) -> NeighborTable:
+    key = (tuple(grid.dims), tuple(grid.periodic), stencil.offsets)
+    table = _TABLE_MEMO.get(key)
+    if table is None:
+        table = NeighborTable.build(grid, stencil)
+        _TABLE_MEMO[key] = table
+        while len(_TABLE_MEMO) > _TABLE_MEMO_MAX:
+            _TABLE_MEMO.popitem(last=False)
+    else:
+        _TABLE_MEMO.move_to_end(key)
+    return table
+
+
+def _block_step(payload: dict) -> dict:
+    """Advance one seed block through one temperature of proposals.
+
+    Module-level and primitives-only (dims/offsets/arrays/rng generators —
+    all picklable) so it ships to ``multiprocessing`` workers; the serial
+    backend calls it inline.  The block's cost state is rebuilt from its
+    assignment rows each call (integer counts — exact), optionally via the
+    jax.vmap kernel when the coordinator precomputed ``counts``.
+    """
+    grid = CartGrid(tuple(payload["dims"]), periodic=payload["periodic"])
+    stencil = Stencil(payload["offsets"], payload["weights"])
+    pc = PortfolioCost(grid, stencil, payload["node"],
+                       num_nodes=payload["num_nodes"],
+                       weighted=payload["weighted"],
+                       table=_memo_table(grid, stencil),
+                       counts=payload.get("counts"))
+    rngs = payload["rngs"]
+    done = np.array(payload["done"], dtype=bool)
+    accepted = run_temperature(pc, rngs, np.asarray(payload["alive"]), done,
+                               payload["temps"], payload["sa_moves"],
+                               payload["eps"])
+    return {"node": pc.node, "rngs": rngs, "done": done,
+            "accepted": accepted, "j_max": pc.j_max(), "j_sum": pc.j_sum()}
+
+
+# ---------------------------------------------------------------------------
+# the refiner
+
+
+class ShardedPortfolioRefiner:
+    """Shard the K-start annealing portfolio across worker processes, with
+    optional adaptive restart/retune control.
+
+    Args:
+      shards: number of seed blocks (capped at K); each block is one
+        worker task per temperature.
+      restarts: adaptive control.  ``None`` (default) disables it — the
+        engine is then bit-identical to
+        ``PortfolioRefiner(k=K, seed=seed)`` for any shard count.
+        ``"auto"`` restarts as many ladders as the killed-budget pool
+        affords; an int additionally caps total restarts.
+      retune: retune each *restart* ladder's temperature from its observed
+        accept rate at phase boundaries (originals are never retuned — that
+        is what keeps the dominance guarantee structural).
+      accept_band: (low, high) accept-rate band; outside it a restart
+        ladder's temperature multiplier doubles/halves.
+      retune_bounds: (min, max) clamp on the multiplier.
+      backend: ``"serial"`` runs blocks inline (still block-partitioned,
+        still bit-identical), ``"mp"`` uses a process pool, ``"auto"``
+        picks ``"mp"`` when ``shards > 1`` and the stacked state is large
+        enough to amortize IPC.
+      workers: process-pool size cap (default: min(shards, cpu count)).
+      vmap_counts: rebuild block cost state via the jax.vmap counts kernel
+        (``"auto"``: only when jax is already imported; ``True`` pays the
+        jax import; plain numpy otherwise — results are bit-identical
+        either way).  Serial backend only: mp workers are numpy-only by
+        design (no jax in forked children), so the flag is inert there.
+      Remaining arguments are :class:`PortfolioRefiner`'s, same defaults —
+      a bare ``sharded:<base>`` equals a bare ``portfolio:<base>``.
+    """
+
+    def __init__(self, shards: int = 4, k: int = 8, seed: int = 0,
+                 seeds: Optional[Sequence[int]] = None,
+                 restarts=None, retune: bool = False,
+                 accept_band: Tuple[float, float] = (0.05, 0.5),
+                 retune_bounds: Tuple[float, float] = (0.25, 4.0),
+                 backend: str = "auto", workers: Optional[int] = None,
+                 vmap_counts="auto",
+                 kill_factor: Optional[float] = 1.5,
+                 polish_top: Optional[int] = 3,
+                 objectives: Sequence[str] = ("j_sum", "j_max"),
+                 rounds: int = 4, policy: str = "first", max_passes: int = 8,
+                 weighted="auto", tol: float = 1e-12,
+                 max_partners: int = 32, engine: str = "batch",
+                 temperatures: Sequence[float] = (2.0, 1.0, 0.5, 0.25),
+                 sa_moves: int = 200, max_swaps: Optional[int] = None):
+        if int(shards) < 1:
+            raise ValueError("shards must be >= 1")
+        if restarts not in (None, "auto") and int(restarts) < 0:
+            raise ValueError('restarts must be None, "auto", or an int >= 0')
+        if backend not in ("auto", "serial", "mp"):
+            raise ValueError('backend must be "auto", "serial", or "mp"')
+        lo, hi = float(accept_band[0]), float(accept_band[1])
+        if not (0.0 <= lo <= hi <= 1.0):
+            raise ValueError("accept_band must satisfy 0 <= low <= high <= 1")
+        blo, bhi = float(retune_bounds[0]), float(retune_bounds[1])
+        if not (0.0 < blo <= 1.0 <= bhi):
+            raise ValueError("retune_bounds must bracket 1.0 "
+                             "(0 < min <= 1 <= max)")
+        self.shards = int(shards)
+        self.restarts = restarts if restarts in (None, "auto") \
+            else int(restarts)
+        self.retune = bool(retune)
+        self.accept_band = (lo, hi)
+        self.retune_bounds = (blo, bhi)
+        self.backend = backend
+        self.workers = None if workers is None else int(workers)
+        self.vmap_counts = vmap_counts
+        # the single-process engine this one must replicate: seeds,
+        # schedule, kill/polish rules, and the budget-delegation target.
+        self.portfolio = PortfolioRefiner(
+            k=k, seed=seed, seeds=seeds, kill_factor=kill_factor,
+            polish_top=polish_top, objectives=objectives, rounds=rounds,
+            policy=policy, max_passes=max_passes, weighted=weighted, tol=tol,
+            max_partners=max_partners, engine=engine,
+            temperatures=temperatures, sa_moves=sa_moves, max_swaps=None)
+        self.schedule = self.portfolio.schedule
+        self.seeds = self.portfolio.seeds
+        self.k = self.portfolio.k
+        #: restart ladder j is seeded ``max(seeds) + 1 + j`` — fresh,
+        #: deterministic, and never colliding with an original ladder.
+        self._restart_seed_base = max(self.seeds) + 1
+        if max_swaps is not None and int(max_swaps) < 0:
+            raise ValueError("max_swaps must be >= 0 (or None)")
+        self.max_swaps = None if max_swaps is None else int(max_swaps)
+
+    def as_stage(self, budget: Optional[int] = None):
+        """Uniform :class:`~repro.core.refine.stage.RefineStage` adapter
+        (``budget`` caps this stage's accepted swaps)."""
+        from .stage import RefineStage
+        return RefineStage(self, budget=budget, prefix="sharded")
+
+    def config(self) -> dict:
+        """Full constructor configuration — the stage layer's canonical
+        cache identity for hand-built refiners.  Execution-only knobs
+        (backend/workers/vmap_counts) are included for faithfulness even
+        though every backend returns bit-identical results."""
+        cfg = self.portfolio.config()
+        cfg.update({"shards": self.shards, "restarts": self.restarts,
+                    "retune": self.retune, "accept_band": self.accept_band,
+                    "retune_bounds": self.retune_bounds,
+                    "backend": self.backend, "workers": self.workers,
+                    "vmap_counts": self.vmap_counts,
+                    "max_swaps": self.max_swaps})
+        return cfg
+
+    # -- backend ------------------------------------------------------------
+    def _resolve_backend(self, problem_size: int) -> str:
+        if self.backend != "auto":
+            return self.backend
+        if self.shards > 1 and self.k * problem_size >= _MP_AUTO_MIN_ELEMS:
+            return "mp"
+        return "serial"
+
+    def _use_vmap_counts(self) -> bool:
+        """Whether the coordinator should precompute block counts with the
+        jax kernel.  Precomputing only to fall back to the numpy loop would
+        *duplicate* the exact work ``PortfolioCost.__init__`` does anyway,
+        so this is True only when the jax path will really run: ``"auto"``
+        requires jax already imported; explicit ``True`` pays the import."""
+        if self.vmap_counts == "auto":
+            return _jax_available()
+        if not self.vmap_counts:
+            return False
+        try:
+            import jax  # noqa: F401
+            return True
+        except ImportError:
+            return False
+
+    # -- driver -------------------------------------------------------------
+    def refine(self, grid: CartGrid, stencil: Stencil,
+               node_of_pos: np.ndarray,
+               num_nodes: Optional[int] = None) -> RefineResult:
+        if self.max_swaps is not None:
+            # a global accepted-swap budget couples every ladder at move
+            # granularity (one shared counter, checked per batched move) —
+            # exactly the coupling sharding removes.  The single-process
+            # engine IS that semantics, so budgeted runs delegate to it.
+            delegate = copy.copy(self.portfolio)
+            delegate.max_swaps = self.max_swaps
+            res = delegate.refine(grid, stencil, node_of_pos, num_nodes)
+            res.stats.update({"shards": 1, "backend": "single-process",
+                              "restarted": 0, "delegated": "max_swaps"})
+            return res
+        t0 = time.perf_counter()
+        sched = self.schedule
+        cur = np.asarray(node_of_pos, dtype=np.int64).copy()
+        initial = IncrementalCost(grid, stencil, cur, num_nodes=num_nodes,
+                                  weighted=sched.weighted).cost()
+        best, best_key = cur.copy(), (initial.j_max, initial.j_sum)
+
+        def consider(candidate: np.ndarray, key: Tuple[float, float]):
+            nonlocal best, best_key
+            if key < best_key:
+                best, best_key = candidate.copy(), key
+
+        # 1. shared deterministic prefix (seed-independent, run once)
+        cur, swaps, passes = sched.run_rounds(grid, stencil, cur, num_nodes,
+                                              consider, max_swaps=None)
+        t_rounds = time.perf_counter() - t0
+
+        # 2. sharded ladders with coordinator-side boundaries
+        lad = self._sharded_ladders(grid, stencil, cur, num_nodes)
+        swaps += lad["sa_accepted"]
+        t_ladders = time.perf_counter() - t0 - t_rounds
+
+        # 3. original survivors: the exact single-process selection + polish
+        swaps, passes, polish_order = self.portfolio._polish_survivors(
+            grid, stencil, num_nodes, consider, lad["nodes"],
+            lad["lad_j_max"], lad["lad_j_sum"], lad["alive"], swaps, passes)
+
+        # 4. adaptive extras: restart ladders are pure additional
+        # candidates (raw + their own ranked polish), so the adaptive
+        # engine can only improve on the base portfolio's selection.
+        restart_polished = 0
+        restarts = lad["restarts"]
+        for r in restarts:
+            consider(r["node"].copy(), (r["j_max"], r["j_sum"]))
+        ranked = sorted(range(len(restarts)),
+                        key=lambda j: (restarts[j]["j_max"],
+                                       restarts[j]["j_sum"], j))
+        r_budget = len(ranked) if self.portfolio.polish_top is None \
+            else self.portfolio.polish_top
+        seen = set()
+        for j in ranked:
+            if restart_polished >= r_budget:
+                break
+            key = restarts[j]["node"].tobytes()
+            if key in seen:
+                continue
+            seen.add(key)
+            _, s, p = sched.polish(grid, stencil, restarts[j]["node"].copy(),
+                                   num_nodes, consider, max_swaps=None)
+            swaps += s
+            passes += p
+            restart_polished += 1
+
+        final = IncrementalCost(grid, stencil, best, num_nodes=num_nodes,
+                                weighted=sched.weighted).cost()
+        wall = time.perf_counter() - t0
+        stats = {
+            "k": self.k,
+            "seeds": self.seeds,
+            "shards": lad["shards"],
+            "backend": lad["backend"],
+            "sa_accepted": lad["sa_accepted"],
+            "killed": lad["killed"],
+            "restarted": len(restarts),
+            "pool_moves_left": lad["pool_moves"],
+            "restart_t_mults": [r["t_mult"] for r in restarts],
+            "polished": len(polish_order),
+            "restart_polished": restart_polished,
+            "ladder_keys": [(float(j), float(s)) for j, s in
+                            zip(lad["lad_j_max"], lad["lad_j_sum"])],
+            "t_rounds_s": t_rounds,
+            "t_ladders_s": t_ladders,
+            "t_polish_s": wall - t_rounds - t_ladders,
+        }
+        return RefineResult(assignment=best, initial=initial, final=final,
+                            swaps=swaps, passes=passes, wall_time_s=wall,
+                            stats=stats)
+
+    # -- the sharded ladder coordinator -------------------------------------
+    def _sharded_ladders(self, grid: CartGrid, stencil: Stencil,
+                         start: np.ndarray,
+                         num_nodes: Optional[int]) -> dict:
+        sched, port = self.schedule, self.portfolio
+        K = self.k
+        S = min(self.shards, K)
+        n_nodes = int(num_nodes) if num_nodes is not None \
+            else int(start.max() + 1)
+        weighted = resolve_weighted(sched.weighted, stencil)
+        weights = stencil.weight_array() if weighted else np.ones(stencil.k)
+        t_scale = float(np.mean(weights))
+        backend = self._resolve_backend(grid.size)
+        vmap_counts = backend == "serial" and self._use_vmap_counts()
+
+        # per-ladder start bookkeeping, identical floats to the
+        # single-process engine (same integer counts, same ascending-offset
+        # accumulation order)
+        start_ic = IncrementalCost(grid, stencil, start, num_nodes=n_nodes,
+                                   weighted=weighted)
+        j_sum0, j_max0 = start_ic.j_sum, start_ic.j_max
+        eps0 = float(1.0 / (1.0 + np.abs(j_sum0)))
+        alive = np.ones(K, dtype=bool)
+        best_seen = np.broadcast_to(
+            np.asarray([j_max0, j_sum0]), (K, 2)).copy()
+        cur_keys = best_seen.copy()
+
+        idx_blocks = [b for b in np.array_split(np.arange(K), S) if b.size]
+        blocks = [{
+            "node": np.broadcast_to(start, (b.size, grid.size)).copy(),
+            "rngs": [np.random.default_rng(self.seeds[i]) for i in b],
+            "done": np.zeros(b.size, dtype=bool),
+        } for b in idx_blocks]
+        base_payload = {
+            "dims": tuple(grid.dims), "periodic": tuple(grid.periodic),
+            "offsets": stencil.offsets, "weights": stencil.weights,
+            "weighted": weighted, "num_nodes": n_nodes,
+            "sa_moves": sched.sa_moves,
+        }
+        restarts: List[dict] = []
+        pool_moves = 0
+        killed = 0
+        accepted = 0
+        n_temps = len(sched.temperatures)
+
+        pool = None
+        if backend == "mp" and S > 1:
+            # fork keeps the workers cheap (no re-import; the tasks are
+            # numpy-only, so jax's forked threadpools are never touched);
+            # spawn is the non-POSIX fallback.  The executor — unlike
+            # multiprocessing.Pool — *raises* BrokenProcessPool when a
+            # worker dies at startup (e.g. spawn under a non-importable
+            # __main__, REPL/stdin scripts), so a broken pool degrades to
+            # the inline path instead of hanging a map() forever.
+            from concurrent.futures import ProcessPoolExecutor
+            methods = multiprocessing.get_all_start_methods()
+            ctx = multiprocessing.get_context(
+                "fork" if "fork" in methods else "spawn")
+            n_proc = min(S, os.cpu_count() or 1)
+            if self.workers is not None:
+                n_proc = max(1, min(n_proc, self.workers))
+            try:
+                pool = ProcessPoolExecutor(max_workers=n_proc,
+                                           mp_context=ctx)
+            except (OSError, ValueError):    # pragma: no cover - no procs
+                pool = None
+
+        def step(payloads):
+            nonlocal pool, backend
+            if pool is not None and len(payloads) > 1:
+                try:
+                    return list(pool.map(_block_step, payloads))
+                except Exception:
+                    # dead workers (broken spawn main, OOM-killed child):
+                    # results are bit-identical either way, so finish the
+                    # run inline rather than failing the mapping
+                    pool.shutdown(wait=False)
+                    pool = None
+                    backend = "serial-fallback"
+            return [_block_step(p) for p in payloads]
+
+        def leader_state() -> Tuple[np.ndarray, float]:
+            """Current portfolio leader (lexicographic best current key,
+            originals then restarts, lowest index wins ties)."""
+            cand = [((cur_keys[i, 0], cur_keys[i, 1], 0, i), None)
+                    for i in range(K) if alive[i]]
+            cand += [((r["j_max"], r["j_sum"], 1, j), r)
+                     for j, r in enumerate(restarts)]
+            key, r = min(cand, key=lambda c: c[0])
+            if r is not None:
+                return r["node"], r["j_sum"]
+            i = key[3]
+            for b, blk in zip(idx_blocks, blocks):
+                pos = np.nonzero(b == i)[0]
+                if pos.size:
+                    return blk["node"][int(pos[0])], float(cur_keys[i, 1])
+            raise AssertionError("leader not found")  # pragma: no cover
+
+        try:
+            for ti, T0 in enumerate(sched.temperatures):
+                T = max(T0 * t_scale, 1e-12)
+                payloads, specs = [], []
+                for bi, b in enumerate(idx_blocks):
+                    blk = blocks[bi]
+                    if not (alive[b] & ~blk["done"]).any():
+                        continue    # every ladder killed/ended: nothing to
+                        # advance — skip the state rebuild (and, under mp,
+                        # the round-trip); cur_keys[b] stays frozen, which
+                        # is exactly what a no-op dispatch would produce
+                    payload = {**base_payload, "node": blk["node"],
+                               "rngs": blk["rngs"], "alive": alive[b],
+                               "done": blk["done"],
+                               "temps": np.full(b.size, T),
+                               "eps": np.full(b.size, eps0)}
+                    if vmap_counts:
+                        payload["counts"] = stacked_crossing_counts(
+                            grid, stencil, blk["node"], n_nodes,
+                            use_jax=self.vmap_counts)
+                    payloads.append(payload)
+                    specs.append(("orig", bi, b))
+                active = [r for r in restarts if not r["done"]]
+                if active:
+                    # blocking only buys parallel dispatch; ladder
+                    # trajectories are blocking-invariant, so the serial
+                    # backend batches all restarts into one kernel call
+                    n_chunks = min(S, len(active)) if pool is not None else 1
+                    for chunk in np.array_split(np.arange(len(active)),
+                                                n_chunks):
+                        if not chunk.size:
+                            continue
+                        rs = [active[int(c)] for c in chunk]
+                        payloads.append({
+                            **base_payload,
+                            "node": np.stack([r["node"] for r in rs]),
+                            "rngs": [r["rng"] for r in rs],
+                            "alive": np.ones(len(rs), dtype=bool),
+                            "done": np.array([r["done"] for r in rs]),
+                            "temps": np.array(
+                                [max(T0 * t_scale * r["t_mult"], 1e-12)
+                                 for r in rs]),
+                            "eps": np.array([r["eps"] for r in rs]),
+                        })
+                        specs.append(("restart", None, rs))
+                for (kind, bi, ref), res in zip(specs, step(payloads)):
+                    accepted += int(res["accepted"].sum())
+                    if kind == "orig":
+                        blocks[bi].update(node=res["node"],
+                                          rngs=res["rngs"],
+                                          done=res["done"])
+                        cur_keys[ref] = np.stack(
+                            [res["j_max"], res["j_sum"]], axis=1)
+                    else:
+                        for li, r in enumerate(ref):
+                            r.update(node=res["node"][li],
+                                     rng=res["rngs"][li],
+                                     done=bool(res["done"][li]),
+                                     j_max=float(res["j_max"][li]),
+                                     j_sum=float(res["j_sum"][li]),
+                                     accepted_last=int(res["accepted"][li]))
+                # temperature boundary: the exact single-process rule over
+                # globally merged keys (restarts never feed the kill rule)
+                for i in range(K):
+                    if tuple(cur_keys[i]) < tuple(best_seen[i]):
+                        best_seen[i] = cur_keys[i]
+                newly_killed = 0
+                if port.kill_factor is not None:
+                    lead = best_seen[alive, 0].min()
+                    for i in range(1, K):
+                        if alive[i] \
+                                and best_seen[i, 0] > port.kill_factor * lead:
+                            alive[i] = False
+                            killed += 1
+                            newly_killed += 1
+                # adaptive control: killed ladders fund restarts from the
+                # leader; restart temperatures retune from accept rates
+                rem = n_temps - ti - 1
+                if self.restarts is not None and rem > 0:
+                    pool_moves += newly_killed * rem * sched.sa_moves
+                    if self.retune:
+                        lo, hi = self.accept_band
+                        blo, bhi = self.retune_bounds
+                        for r in restarts:
+                            if r["done"]:
+                                continue
+                            rate = r["accepted_last"] / max(1, sched.sa_moves)
+                            if rate < lo:
+                                r["t_mult"] = min(r["t_mult"] * 2.0, bhi)
+                            elif rate > hi:
+                                r["t_mult"] = max(r["t_mult"] * 0.5, blo)
+                    cost = rem * sched.sa_moves
+                    cap = math.inf if self.restarts == "auto" \
+                        else int(self.restarts) - len(restarts)
+                    # cost == 0 (sa_moves=0 schedules) would spawn forever:
+                    # a free restart buys zero proposals, so spawn none
+                    while cost > 0 and pool_moves >= cost and cap > 0:
+                        node, lead_j_sum = leader_state()
+                        restarts.append({
+                            "node": node.copy(),
+                            "rng": np.random.default_rng(
+                                self._restart_seed_base + len(restarts)),
+                            "done": False,
+                            "eps": float(1.0 / (1.0 + abs(lead_j_sum))),
+                            "t_mult": 1.0,
+                            "j_max": math.inf, "j_sum": math.inf,
+                            "accepted_last": 0,
+                        })
+                        pool_moves -= cost
+                        cap -= 1
+        finally:
+            if pool is not None:
+                pool.shutdown(wait=True)
+
+        nodes = np.empty((K, grid.size), dtype=np.int64)
+        for b, blk in zip(idx_blocks, blocks):
+            nodes[b] = blk["node"]
+        # every restart ran at least one temperature (the spawn loop is
+        # gated on rem > 0), so its key is finite and usable as a candidate
+        assert all(math.isfinite(r["j_max"]) for r in restarts)
+        return {"nodes": nodes, "lad_j_max": cur_keys[:, 0].copy(),
+                "lad_j_sum": cur_keys[:, 1].copy(), "alive": alive,
+                "restarts": restarts, "sa_accepted": accepted,
+                "killed": killed, "pool_moves": pool_moves,
+                "shards": S, "backend": backend}

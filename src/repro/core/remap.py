@@ -141,8 +141,11 @@ def ensure_refined(mapper: Union[Mapper, str]) -> Union[Mapper, str]:
     search mesh-construction sized), with ``blocked`` as the starting point
     when the base itself is inapplicable to ragged sizes (e.g. Nodecart
     needs homogeneous nodes — refinement must still run); already-refined
-    names (any ``<prefix>[opts]:`` spelling) and :class:`RefinedMapper`
-    instances pass through unchanged."""
+    names (any ``<prefix>[opts]:`` spelling, ``sharded[...]:`` included)
+    and :class:`RefinedMapper` instances pass through unchanged.  Callers
+    wanting the process-sharded engine for big elastic meshes spell it
+    (``"sharded[shards=4,k=64,restarts=auto]:hyperplane"``) — the upgrade
+    never second-guesses an explicit refining spelling."""
     if isinstance(mapper, str):
         if split_mapper_name(mapper) is not None:
             return mapper

@@ -170,8 +170,10 @@ def main():
                     default="blocked,stencil_strips,hyperplane,kdtree,"
                             "portfolio:hyperplane",
                     help="comma list; any parse_plan spelling works "
-                         "(portfolio[k=8]:hyperplane, chained prefixes, "
-                         "+rm for rowmajor intra-pod order)")
+                         "(portfolio[k=8]:hyperplane, "
+                         "sharded[shards=4,k=64,restarts=auto]:hyperplane, "
+                         "chained prefixes, +rm for rowmajor intra-pod "
+                         "order)")
     ap.add_argument("--moe-dispatch", default="einsum",
                     choices=["einsum", "scatter"])
     args = ap.parse_args()

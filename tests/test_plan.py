@@ -15,6 +15,7 @@ Pinned invariants:
   * option grammar — negative numbers / scientific notation parse, and
     errors name the full spelling.
 """
+import json
 import math
 import time
 
@@ -349,7 +350,8 @@ def test_plan_cache_lru_eviction_and_clear():
     assert cache.get("k2")["v"] == 2
     cache.clear()
     assert cache.stats() == {"size": 0, "hits": 0, "misses": 0,
-                             "disk_hits": 0, "puts": 0, "evictions": 0}
+                             "disk_hits": 0, "puts": 0, "evictions": 0,
+                             "corrupt_drops": 0}
 
 
 def test_plan_cache_disk_spill_roundtrip(tmp_path):
@@ -364,6 +366,90 @@ def test_plan_cache_disk_spill_roundtrip(tmp_path):
     assert warm.from_cache and c2.disk_hits == 1 and c2.misses == 0
     np.testing.assert_array_equal(warm.assignment, sol.assignment)
     assert warm.key() == sol.key()
+
+
+def test_plan_cache_corrupt_spill_is_miss_and_dropped(tmp_path):
+    """A truncated/corrupt spill file is a *miss*, never an exception, and
+    the bad file is deleted so it cannot poison every future read."""
+    plan = parse_plan("refined:hyperplane")
+    problem = _problem((8, 8), (16,) * 4)
+    c1 = PlanCache(disk_dir=tmp_path)
+    c1.solve(problem, plan)
+    path = next(tmp_path.glob("*.json"))
+    key = f"sol:{problem.content_hash()}:{plan.key}"
+    for garbage in ('{"key": tru',                  # truncated JSON
+                    "[1, 2, 3]",                    # valid JSON, not a dict
+                    '"just a string"',
+                    json.dumps({"key": key}),       # right key, no value
+                    json.dumps({"key": key, "value": 7})):  # non-dict value
+        path.write_text(garbage)
+        fresh = PlanCache(disk_dir=tmp_path)
+        assert fresh.get(key) is None, garbage
+        assert (fresh.misses, fresh.disk_hits) == (1, 0), garbage
+        assert fresh.corrupt_drops == 1, garbage
+        assert not path.exists(), garbage           # dropped, not left to rot
+        assert "corrupt_drops" in fresh.stats()
+    # a valid spill for a *different* key (hash-prefix collision) is a
+    # plain miss: the file is someone else's entry and must survive
+    path.write_text(json.dumps({"key": "other", "value": {"x": 1}}))
+    fresh = PlanCache(disk_dir=tmp_path)
+    assert fresh.get(key) is None and fresh.corrupt_drops == 0
+    assert path.exists()
+    # and after the drop, a re-solve repopulates the spill cleanly
+    path.unlink()
+    c2 = PlanCache(disk_dir=tmp_path)
+    sol = c2.solve(problem, plan)
+    assert not sol.from_cache
+    assert PlanCache(disk_dir=tmp_path).solve(problem, plan).from_cache
+
+
+def test_plan_cache_stale_tmp_cleanup(tmp_path):
+    """A crashed writer's abandoned .tmp (per-writer unique name — nobody
+    will ever finish it) is swept on the next put; fresh in-flight ones
+    are left alone."""
+    import os as _os
+    stale = tmp_path / "deadbeef.12345.aaaaaaaa.tmp"
+    stale.write_text('{"key": "never finis')
+    _os.utime(stale, (time.time() - 3600, time.time() - 3600))
+    fresh = tmp_path / "cafebabe.12346.bbbbbbbb.tmp"
+    fresh.write_text("in flight")
+    cache = PlanCache(disk_dir=tmp_path)
+    cache.put("k", {"v": 1})
+    assert not stale.exists()
+    assert fresh.exists()
+    assert cache.get("k") == {"v": 1}
+
+
+def _hammer_put(args):
+    """Worker for the concurrent-put stress: every process spills the same
+    key (plus one private key) many times into one shared dir."""
+    disk_dir, wid, n = args
+    cache = PlanCache(disk_dir=disk_dir)
+    for i in range(n):
+        cache.put("shared", {"writer": wid, "i": i})
+        cache.put(f"private-{wid}", {"writer": wid, "i": i})
+    return cache.get("shared") is not None
+
+
+def test_plan_cache_concurrent_put_stress(tmp_path):
+    """Many processes spilling the same key concurrently: unique tmp names
+    + flock'd atomic publish mean the spill file is always one writer's
+    complete JSON — never interleaved, never truncated — and no .tmp
+    litter survives."""
+    import multiprocessing as mp
+    if "fork" not in mp.get_all_start_methods():
+        pytest.skip("needs fork start method")
+    ctx = mp.get_context("fork")
+    with ctx.Pool(4) as pool:
+        ok = pool.map(_hammer_put, [(str(tmp_path), w, 25) for w in range(4)])
+    assert all(ok)
+    assert not list(tmp_path.glob("*.tmp"))
+    reader = PlanCache(disk_dir=tmp_path)
+    got = reader.get("shared")
+    assert got is not None and got["i"] == 24      # some writer's last put
+    assert reader.corrupt_drops == 0
+    for w in range(4):
+        assert reader.get(f"private-{w}") == {"writer": w, "i": 24}
 
 
 def test_warm_cache_mesh_build_10x_faster_than_cold_portfolio():

@@ -199,11 +199,35 @@ def test_portfolio_validates_config():
     with pytest.raises(ValueError):
         PortfolioRefiner(k=0)
     with pytest.raises(ValueError):
-        PortfolioRefiner(seeds=[3, 3])
-    with pytest.raises(ValueError):
         PortfolioRefiner(kill_factor=0.5)
     assert PortfolioRefiner(seeds=[9, 4]).k == 2
     assert PortfolioRefiner(kill_factor=None).kill_factor is None
+
+
+def test_portfolio_duplicate_seeds_dedupe_warn_and_honest_config():
+    """Duplicate explicit seeds replay identical trajectories — they are
+    deduped order-preserved with a warning, and config() (the stage layer's
+    cache identity) reflects the deduped tuple so two spellings of the same
+    effective portfolio share one cache key."""
+    with pytest.warns(UserWarning, match="duplicate portfolio seeds"):
+        r = PortfolioRefiner(seeds=[3, 3, 5, 3])
+    assert r.seeds == (3, 5) and r.k == 2
+    assert r.config()["seeds"] == (3, 5)
+    assert r.config() == PortfolioRefiner(seeds=[3, 5]).config()
+    # the deduped portfolio IS the clean one, bit for bit
+    rng = np.random.default_rng(0)
+    grid = CartGrid((6, 6))
+    stencil = Stencil.nearest_neighbor(2)
+    a = rng.permutation(np.repeat(np.arange(3), 12))
+    with pytest.warns(UserWarning):
+        dup = PortfolioRefiner(seeds=[3, 3, 5], sa_moves=40)
+    clean = PortfolioRefiner(seeds=[3, 5], sa_moves=40)
+    np.testing.assert_array_equal(
+        dup.refine(grid, stencil, a, num_nodes=3).assignment,
+        clean.refine(grid, stencil, a, num_nodes=3).assignment)
+    # an all-duplicate list still leaves one ladder (never zero starts)
+    with pytest.warns(UserWarning):
+        assert PortfolioRefiner(seeds=[7, 7]).k == 1
 
 
 # ---------------------------------------------------------------------------
