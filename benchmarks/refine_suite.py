@@ -362,6 +362,122 @@ def validate_claims(rows, objective="j_sum", variants=VARIANTS):
     return claims
 
 
+# ---------------------------------------------------------------------------
+# warm-start repair suite: repair-vs-cold on the churn scenarios
+# (BENCH_6.json — wall-time, J_max/J_sum, repair-vs-cold ratios)
+
+REPAIR_EPS = 0.05           # quality band vs the cold elastic portfolio
+REPAIR_LATENCY_FRAC = 0.5   # repair wall-time cap as a fraction of cold
+
+
+def _repair_stencil():
+    """Byte-weighted ring (data-parallel traffic outweighing model-parallel
+    — the ``stencil_for_plan`` shape) so the quality band is measured at
+    the weighted granularity the runtime actually solves."""
+    return Stencil(((1, 0), (-1, 0), (0, 1), (0, -1)),
+                   (3.0, 3.0, 1.0, 1.0), name="ring-w")
+
+
+def repair_scenarios():
+    """(label, prev_shape, prev_sizes, shape, sizes, node_map) — the three
+    churn kinds the runtime produces: whole-pod loss (runtime-style
+    ``(n, chips)`` re-mesh), pod rejoin, and a slow pod's down-weighted
+    re-solve."""
+    from repro.core.repair import downweighted_node_sizes
+    return [
+        ("loss-8to7", (8, 16), (16,) * 8, (7, 16), (16,) * 7,
+         [0, 1, 2, 3, 4, 5, 7]),
+        ("add-7to8", (7, 16), (16,) * 7, (8, 16), (16,) * 8,
+         [0, 1, 2, 3, 4, 5, 6, -1]),
+        ("slow-8", (8, 16), (16,) * 8, (8, 16),
+         tuple(downweighted_node_sizes((16,) * 8, 3, 2.0)), None),
+    ]
+
+
+def run_repair():
+    """One row per churn scenario: cold elastic-portfolio solve vs
+    warm-start repair of the pre-churn solution (quality, wall-time,
+    ratios, and the repair stage's own stats)."""
+    from repro.core import (MappingProblem, elastic_portfolio_plan,
+                            repair_layout)
+    st = _repair_stencil()
+    rows = []
+    for label, pshape, psizes, shape, sizes, node_map in repair_scenarios():
+        prev = elastic_portfolio_plan().solve(
+            MappingProblem(tuple(pshape), st, tuple(psizes)))
+        t0 = time.perf_counter()
+        cold = elastic_portfolio_plan().solve(
+            MappingProblem(tuple(shape), st, tuple(sizes)))
+        t_cold = time.perf_counter() - t0
+        rep, t_rep = None, float("inf")
+        for _ in range(2):      # min-of-2: repair is deterministic, the
+            t0 = time.perf_counter()    # clock is the only noisy part
+            rep = repair_layout(prev, sizes, mesh_shape=shape,
+                                node_map=node_map, cache=False)
+            t_rep = min(t_rep, time.perf_counter() - t0)
+        stats = rep.stage_stats[0]
+        rows.append({
+            "scenario": label,
+            "prev_shape": list(pshape), "mesh_shape": list(shape),
+            "node_sizes": [int(s) for s in sizes],
+            "j_max_cold": cold.j_max, "j_sum_cold": cold.j_sum,
+            "t_cold_s": t_cold,
+            "j_max_repair": rep.j_max, "j_sum_repair": rep.j_sum,
+            "t_repair_s": t_rep,
+            "ratio_j_max": rep.j_max / cold.j_max,
+            "ratio_j_sum": rep.j_sum / cold.j_sum,
+            "latency_frac": t_rep / t_cold,
+            "used_fallback": bool(stats.get("used_fallback")),
+            "strategy": stats.get("strategy", "warm"),
+            "swaps": stats.get("swaps"),
+            "resplits": stats.get("resplits"),
+            "pinned": stats.get("pinned"),
+        })
+    return rows
+
+
+def validate_repair_claims(rows, eps=REPAIR_EPS, frac=REPAIR_LATENCY_FRAC):
+    """The PR's acceptance bar, machine-checked: repair within ``eps`` of
+    cold on both objectives, at most ``frac`` of cold's wall-time, and
+    never via the silent cold fallback."""
+    claims = []
+    bad = [r for r in rows if r["ratio_j_max"] > 1 + eps
+           or r["ratio_j_sum"] > 1 + eps]
+    claims.append(("PASS" if not bad else "FAIL")
+                  + f": repair within {eps:.0%} of cold (J_max and J_sum) "
+                  f"on all {len(rows)} scenarios"
+                  + (f" (violations: {[(r['scenario'], round(r['ratio_j_max'], 3), round(r['ratio_j_sum'], 3)) for r in bad]})"
+                     if bad else ""))
+    slow = [r for r in rows if r["latency_frac"] > frac]
+    claims.append(("PASS" if not slow else "FAIL")
+                  + f": repair wall-time <= {frac:.0%} of cold on all "
+                  f"{len(rows)} scenarios"
+                  + (f" (violations: {[(r['scenario'], round(r['latency_frac'], 2)) for r in slow]})"
+                     if slow else ""))
+    fb = [r for r in rows if r["used_fallback"]]
+    claims.append(("PASS" if not fb else "FAIL")
+                  + ": warm path taken on all scenarios (no cold fallback)"
+                  + (f" (violations: {[r['scenario'] for r in fb]})"
+                     if fb else ""))
+    return claims
+
+
+def print_repair_table(rows):
+    print(f"{'scenario':12s} {'mesh':10s} "
+          f"{'Jmax_cold':>9s} {'Jsum_cold':>9s} "
+          f"{'Jmax_rep':>9s} {'Jsum_rep':>9s} "
+          f"{'rmax':>6s} {'rsum':>6s} {'t_cold':>8s} {'t_rep':>8s} "
+          f"{'frac':>5s}  strategy")
+    for r in rows:
+        shape = "x".join(str(d) for d in r["mesh_shape"])
+        print(f"{r['scenario']:12s} {shape:10s} "
+              f"{r['j_max_cold']:9.0f} {r['j_sum_cold']:9.0f} "
+              f"{r['j_max_repair']:9.0f} {r['j_sum_repair']:9.0f} "
+              f"{r['ratio_j_max']:6.3f} {r['ratio_j_sum']:6.3f} "
+              f"{r['t_cold_s'] * 1e3:6.0f}ms {r['t_repair_s'] * 1e3:6.0f}ms "
+              f"{r['latency_frac']:5.2f}  {r['strategy']}")
+
+
 def _portfolio_k(variant):
     m = re.search(r"\bk=(\d+)", variant)
     if m:
@@ -416,8 +532,27 @@ def main():
     ap.add_argument("--objective", default="j_sum",
                     choices=["j_sum", "j_max"],
                     help="refined: objective (scheduled variants own theirs)")
+    ap.add_argument("--repair", action="store_true",
+                    help="run the warm-start repair suite instead of the "
+                         "variant sweep (repair-vs-cold on loss/add/slow "
+                         "churn scenarios; --json emits the BENCH_6.json "
+                         "rows)")
     ap.add_argument("--json", default=None, help="also dump rows as JSON")
     args = ap.parse_args()
+
+    if args.repair:
+        rows = run_repair()
+        print_repair_table(rows)
+        print()
+        claims = validate_repair_claims(rows)
+        for c in claims:
+            print("# " + c)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(rows, f, indent=1, default=float)
+        if any(c.startswith("FAIL") for c in claims):
+            raise SystemExit(1)
+        return
 
     variants = split_variants(args.variants)
     rows = run(tiny=args.tiny,

@@ -23,7 +23,7 @@ fi
 python -m pytest -q tests/test_refine_batch.py tests/test_portfolio.py \
     tests/test_sharded_portfolio.py \
     tests/test_elastic_remesh.py tests/test_linksim_replay.py \
-    tests/test_plan.py
+    tests/test_plan.py tests/test_repair.py
 
 # smoke the whole refinement registry (refined: / refined2: / annealed: /
 # portfolio: / sharded:) incl. the linksim replay columns (ragged rows
@@ -57,6 +57,38 @@ sh = get_mapper("sharded[shards=2,k=4]:hyperplane").assignment(grid,
                                                                sizes)
 np.testing.assert_array_equal(sh, ref)
 print("sharded smoke OK: sharded[shards=2,k=4] == portfolio[k=4] bit-exact")
+EOF
+
+# warm-start repair suite: repair-vs-cold on the loss/add/slow churn
+# scenarios — quality within 5% on (J_max, J_sum), wall-time <= 50% of the
+# cold elastic solve, warm path only (exit 1 on any FAIL) — and the
+# machine-readable BENCH_6.json perf snapshot
+mkdir -p results
+PYTHONPATH=src python -m benchmarks.refine_suite --repair \
+    --json results/BENCH_6.json
+
+# repair smoke: monitor-driven slow-pod flow — down-weighted warm repair
+# from a served solution, cached under the survivor signature
+PYTHONPATH=src python - <<'EOF'
+import numpy as np
+from repro.core import (MappingProblem, PlanCache, Stencil,
+                        elastic_portfolio_plan, repair_layout)
+from repro.core.repair import downweighted_node_sizes
+
+cache = PlanCache()
+stencil = Stencil.nearest_neighbor(2)
+prev = elastic_portfolio_plan().solve(
+    MappingProblem((6, 8), stencil, (8,) * 6), cache)
+dw = downweighted_node_sizes((8,) * 6, 4, 2.0)
+rep = repair_layout(prev, dw, cache=cache)
+assert not rep.from_cache
+assert np.bincount(rep.assignment, minlength=6).tolist() == dw
+st = rep.stage_stats[0]
+assert st["kind"] == "repair" and not st["used_fallback"]
+again = repair_layout(prev, dw, cache=cache)
+assert again.from_cache and again.key() == rep.key()
+print(f"repair smoke OK: J=(max {rep.j_max:.0f}, sum {rep.j_sum:.0f}) "
+      f"pinned={st['pinned']} swaps={st['swaps']} cache={cache.stats()}")
 EOF
 
 # cart_create smoke: cold solve -> warm cache hit, asserted via counters

@@ -17,8 +17,11 @@ from .refine import (BaseStage, PortfolioRefiner, RefinedMapper,
                      SwapRefiner, refine_assignment, stacked_crossing_counts)
 from .plan import (CartResult, MappingPlan, MappingProblem, MappingSolution,
                    PlanCache, cart_create, default_plan_cache, parse_plan)
-from .remap import (device_layout, ensure_refined, layout_cost,
-                    mapped_device_array)
+from .remap import (device_layout, elastic_portfolio_plan, ensure_refined,
+                    layout_cost, mapped_device_array, repair_layout)
+from .repair import (RepairInapplicable, RepairSeed, RepairStage,
+                     absorbed_node_sizes, downweighted_node_sizes,
+                     repair_plan, repair_seed, transfer_positions)
 from .stencil import Stencil, resolve_weighted
 
 __all__ = [
@@ -39,4 +42,8 @@ __all__ = [
     "MappingProblem", "MappingPlan", "MappingSolution", "parse_plan",
     "PlanCache", "default_plan_cache", "cart_create", "CartResult",
     "device_layout", "layout_cost", "mapped_device_array", "ensure_refined",
+    "elastic_portfolio_plan", "repair_layout",
+    "RepairInapplicable", "RepairSeed", "RepairStage", "repair_seed",
+    "repair_plan", "transfer_positions", "absorbed_node_sizes",
+    "downweighted_node_sizes",
 ]

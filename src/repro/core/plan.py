@@ -195,18 +195,21 @@ class MappingSolution:
 
 
 class MappingPlan:
-    """An ordered stage chain: one :class:`BaseStage` followed by zero or
-    more :class:`RefineStage` s.  ``key`` is the canonical spelling —
-    stable across equal configurations — used for cache identity."""
+    """An ordered stage chain: one initial stage (:class:`BaseStage`, or a
+    :class:`~repro.core.repair.RepairStage` warm-starting from a previous
+    solution) followed by zero or more :class:`RefineStage` s.  ``key`` is
+    the canonical spelling — stable across equal configurations — used for
+    cache identity."""
 
     def __init__(self, stages: Sequence[Stage], name: Optional[str] = None):
         stages = tuple(stages)
         if not stages:
             raise ValueError("a plan needs at least one stage")
-        if not isinstance(stages[0], BaseStage):
-            raise ValueError("a plan's first stage must be a BaseStage")
-        if any(isinstance(s, BaseStage) for s in stages[1:]):
-            raise ValueError("only the first stage may be a BaseStage")
+        if not getattr(stages[0], "is_initial", False):
+            raise ValueError("a plan's first stage must be an initial stage "
+                             "(BaseStage or RepairStage)")
+        if any(getattr(s, "is_initial", False) for s in stages[1:]):
+            raise ValueError("only the first stage may be an initial stage")
         self.stages = stages
         self.name = name
 
@@ -256,6 +259,11 @@ class MappingPlan:
         ``get_mapper`` returns, with ``plan_key`` set at every level so
         the cache can key off mapper instances too."""
         from .refine import RefinedMapper
+        if not isinstance(self.stages[0], BaseStage):
+            raise TypeError(
+                "only BaseStage-rooted plans have a Mapper form; a "
+                f"{type(self.stages[0]).__name__}-rooted plan (warm-start "
+                "repair) must be solved as a plan, not via get_mapper")
         mapper = self.stages[0].mapper
         key = self.stages[0].spec()
         cache_ok = self.stages[0].cacheable
@@ -288,10 +296,21 @@ def parse_plan(name: str, **kwargs) -> MappingPlan:
     ``get_mapper`` does; bracket options win over kwargs.  Chained
     prefixes (``"portfolio[k=8]:refined:hyperplane"``) need no special
     casing: the grammar is recursive in ``<base>``.
+
+    The warm-start spelling ``"repair[<options>]:<fallback>"`` (or bare
+    ``"repair"``) roots the plan in a
+    :class:`~repro.core.repair.RepairStage` instead of a base algorithm;
+    it requires the ``previous=`` keyword (the pre-churn solution) and
+    accepts ``node_map=``.  ``<fallback>`` — itself any spelling of this
+    grammar — is solved cold when the previous solution cannot seed the
+    problem.  Refine prefixes chain over it as usual
+    (``"portfolio[k=8]:repair:hyperplane"``).
     """
     from .mapping import MAPPERS, REFINE_PREFIXES, _make_refiner, \
         split_mapper_name
     from .refine import SwapRefiner
+    previous = kwargs.pop("previous", None)
+    node_map = kwargs.pop("node_map", None)
     chain = []                      # (prefix, options), outer-first
     rest = name
     while True:
@@ -300,12 +319,17 @@ def parse_plan(name: str, **kwargs) -> MappingPlan:
             break
         prefix, opts, rest = parsed
         chain.append((prefix, opts))
-    if rest not in MAPPERS:
+    is_repair = rest == "repair" or rest.startswith(("repair[", "repair:"))
+    if not is_repair and rest not in MAPPERS:
         raise KeyError(
             f"unknown mapper {rest!r}"
             + (f" (base of {name!r})" if rest != name else "")
-            + f"; choose from {sorted(MAPPERS)} "
-            f"or one of {[p + '<base>' for p in REFINE_PREFIXES]}")
+            + f"; choose from {sorted(MAPPERS)}, "
+            f"one of {[p + '<base>' for p in REFINE_PREFIXES]}, "
+            "or 'repair[<options>]:<fallback>'")
+    if not is_repair and previous is not None:
+        raise ValueError(f"previous= is only meaningful for repair plans, "
+                         f"not {name!r}")
     base_kwargs = kwargs if not chain else {}
     fallback = None
     refine_stages: List[Stage] = []
@@ -326,8 +350,30 @@ def parse_plan(name: str, **kwargs) -> MappingPlan:
             refiner = _make_refiner(prefix, merged)
         refine_stages.append(RefineStage(refiner, budget=budget,
                                          prefix=prefix, options=merged))
-    stages: List[Stage] = [BaseStage(MAPPERS[rest], fallback=fallback,
-                                     **base_kwargs)]
+    if is_repair:
+        from .mapping import parse_mapper_options
+        from .repair import RepairStage
+        head, _, fb_spelling = rest.partition(":")
+        r_opts: Dict[str, object] = {}
+        if head != "repair":
+            if not (head.startswith("repair[") and head.endswith("]")):
+                raise ValueError(
+                    f"malformed repair spelling {head!r}"
+                    + (f" in {name!r}" if rest != name else ""))
+            r_opts = parse_mapper_options(head[len("repair["):-1], name=name)
+        if previous is None:
+            raise ValueError(
+                "repair plans need the pre-churn solution: "
+                "parse_plan(..., previous=<MappingSolution>)")
+        if not fb_spelling and isinstance(fallback, str):
+            fb_spelling = fallback      # prefix-level fallback= spelling
+        first: Stage = RepairStage(
+            previous, node_map=node_map,
+            fallback=parse_plan(fb_spelling) if fb_spelling else None,
+            **{**base_kwargs, **r_opts})
+    else:
+        first = BaseStage(MAPPERS[rest], fallback=fallback, **base_kwargs)
+    stages: List[Stage] = [first]
     stages += refine_stages
     return MappingPlan(stages, name=name)
 

@@ -58,7 +58,8 @@ __all__ = ["PortfolioRefiner", "run_temperature"]
 def run_temperature(pc: PortfolioCost, rngs, alive: np.ndarray,
                     done: np.ndarray, temps: np.ndarray, sa_moves: int,
                     eps: np.ndarray,
-                    budget: Optional[int] = None) -> np.ndarray:
+                    budget: Optional[int] = None,
+                    allowed: Optional[np.ndarray] = None) -> np.ndarray:
     """Advance every alive, not-yet-done ladder of ``pc`` through one
     temperature of ``sa_moves`` Metropolis proposals, batched per move.
 
@@ -77,10 +78,17 @@ def run_temperature(pc: PortfolioCost, rngs, alive: np.ndarray,
     per-ladder J_sum tie-break scale.  ``pc``, ``rngs`` and ``done`` are
     mutated in place; ``budget`` caps the call's accepted swaps (checked
     before each batched move, exactly as the single-process engine does).
+    ``allowed`` (a (p,) bool mask, default all-True) restricts proposals to
+    a position subset — both endpoints of every swap are drawn from
+    ``boundary & allowed``, so positions outside it are *pinned* and can
+    never move (the repair path's churn-untouched nodes).  ``None``
+    preserves the historical draw sequence bit for bit.
     Returns the per-ladder accepted-swap counts.
     """
     K = pc.n_starts
     masks = pc.boundary_masks()
+    if allowed is not None:
+        masks = masks & np.asarray(allowed, dtype=bool)[None, :]
     boundaries = {i: np.nonzero(masks[i])[0]
                   for i in range(K) if alive[i] and not done[i]}
     stopped = set()         # no cross-node partner this temperature
@@ -223,7 +231,8 @@ class PortfolioRefiner:
     # -- batched SA ladders -------------------------------------------------
     def _batched_ladders(self, grid: CartGrid, stencil: Stencil,
                          start: np.ndarray, num_nodes: Optional[int],
-                         budget: Optional[int] = None) \
+                         budget: Optional[int] = None,
+                         allowed: Optional[np.ndarray] = None) \
             -> Tuple[PortfolioCost, np.ndarray, int, int]:
         """Advance K ladders from ``start`` in lock-step.  Returns the
         portfolio state, the per-ladder alive mask (False = early-killed),
@@ -256,7 +265,8 @@ class PortfolioRefiner:
             T = max(T0 * t_scale, 1e-12)
             accepted += int(run_temperature(
                 pc, rngs, alive, done, np.full(K, T), sched.sa_moves, eps,
-                budget=None if budget is None else budget - accepted).sum())
+                budget=None if budget is None else budget - accepted,
+                allowed=allowed).sum())
             # temperature boundary: exact keys, early-kill of dominated runs
             keys = np.stack([pc.j_max(), pc.j_sum()], axis=1)
             for i in range(K):
@@ -313,10 +323,23 @@ class PortfolioRefiner:
     # -- driver -------------------------------------------------------------
     def refine(self, grid: CartGrid, stencil: Stencil,
                node_of_pos: np.ndarray,
-               num_nodes: Optional[int] = None) -> RefineResult:
+               num_nodes: Optional[int] = None,
+               pinned: Optional[np.ndarray] = None) -> RefineResult:
+        """Refine ``node_of_pos``.  ``pinned`` (a (p,) bool mask) freezes a
+        position subset: the deterministic rounds and polish phases — which
+        have no notion of pinning — are skipped, and the SA ladders draw
+        both swap endpoints from unpinned positions only, so the result is
+        guaranteed to agree with the input everywhere ``pinned`` is True
+        (the repair path's churn-untouched nodes).  ``pinned=None`` is the
+        historical engine, bit for bit."""
         t0 = time.perf_counter()
         sched = self.schedule
         cur = np.asarray(node_of_pos, dtype=np.int64).copy()
+        if pinned is not None:
+            pinned = np.asarray(pinned, dtype=bool).reshape(-1)
+            if pinned.shape[0] != grid.size:
+                raise ValueError(f"pinned mask has {pinned.shape[0]} "
+                                 f"entries for a {grid.size}-position grid")
         initial = IncrementalCost(grid, stencil, cur, num_nodes=num_nodes,
                                   weighted=sched.weighted).cost()
         best, best_key = cur.copy(), (initial.j_max, initial.j_sum)
@@ -326,26 +349,42 @@ class PortfolioRefiner:
             if key < best_key:
                 best, best_key = candidate.copy(), key
 
-        # 1. shared deterministic prefix (seed-independent, run once)
-        cur, swaps, passes = sched.run_rounds(grid, stencil, cur, num_nodes,
-                                              consider,
-                                              max_swaps=self.max_swaps)
+        # 1. shared deterministic prefix (seed-independent, run once;
+        # pin-oblivious, so the pinned path skips it)
+        if pinned is None:
+            cur, swaps, passes = sched.run_rounds(grid, stencil, cur,
+                                                  num_nodes, consider,
+                                                  max_swaps=self.max_swaps)
+        else:
+            swaps = passes = 0
         t_rounds = time.perf_counter() - t0
 
         # 2. K annealing ladders, batched (budget caps accepted moves at
         # move granularity — up to K acceptances land per batched move)
         budget = None if self.max_swaps is None else self.max_swaps - swaps
         pc, alive, sa_accepted, killed = self._batched_ladders(
-            grid, stencil, cur, num_nodes, budget=budget)
+            grid, stencil, cur, num_nodes, budget=budget,
+            allowed=None if pinned is None else ~pinned)
         swaps += sa_accepted
         t_ladders = time.perf_counter() - t0 - t_rounds
 
         # 3. raw survivors are free candidates; the best of them get the
         # full polish phases (shared with the sharded engine's merge step)
+        # — pin-oblivious, so the pinned path takes raw survivors only
         lad_j_max, lad_j_sum = pc.j_max(), pc.j_sum()
-        swaps, passes, polish_order = self._polish_survivors(
-            grid, stencil, num_nodes, consider, pc.node,
-            lad_j_max, lad_j_sum, alive, swaps, passes)
+        if pinned is None:
+            swaps, passes, polish_order = self._polish_survivors(
+                grid, stencil, num_nodes, consider, pc.node,
+                lad_j_max, lad_j_sum, alive, swaps, passes)
+        else:
+            K = pc.n_starts
+            for i in range(K):
+                if alive[i]:
+                    consider(pc.node[i].copy(),
+                             (float(lad_j_max[i]), float(lad_j_sum[i])))
+            polish_order = []
+            assert np.array_equal(best[pinned], node_of_pos[pinned]), \
+                "pinned positions moved (ladder mask violated)"
 
         final = IncrementalCost(grid, stencil, best, num_nodes=num_nodes,
                                 weighted=sched.weighted).cost()
@@ -353,6 +392,7 @@ class PortfolioRefiner:
         stats = {
             "k": self.k,
             "seeds": self.seeds,
+            "pinned": 0 if pinned is None else int(pinned.sum()),
             "sa_accepted": sa_accepted,
             "killed": killed,
             "polished": len(polish_order),

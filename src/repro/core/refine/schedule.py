@@ -73,8 +73,9 @@ class ScheduledRefiner:
                  max_swaps: Optional[int] = None):
         if not objectives:
             raise ValueError("objectives must be non-empty")
-        if rounds <= 0:
-            raise ValueError("rounds must be positive")
+        if rounds < 0:
+            raise ValueError("rounds must be >= 0 (0 = skip the "
+                             "deterministic rounds, ladder/polish only)")
         # validate eagerly (same errors as SwapRefiner would raise later)
         for obj in objectives:
             SwapRefiner(objective=obj, policy=policy, max_passes=max_passes,

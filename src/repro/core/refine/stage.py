@@ -108,6 +108,12 @@ class Stage(abc.ABC):
     #: a stage are solved uncached.
     cacheable: bool = True
 
+    #: True for stages that *produce* a plan's first assignment (run with
+    #: ``assignment=None``): :class:`BaseStage` and
+    #: :class:`~repro.core.repair.RepairStage`.  A plan's first stage must
+    #: be initial; no later stage may be.
+    is_initial: bool = False
+
     #: stable spelling of this stage, used in plan keys (cache identity)
     @abc.abstractmethod
     def spec(self) -> str:
@@ -132,6 +138,8 @@ class BaseStage(Stage):
     :class:`MapperInapplicable` — without one, the exception propagates so
     plan callers can fall back themselves.
     """
+
+    is_initial = True
 
     def __init__(self, mapper: Union[Mapper, type, str] = "hyperplane",
                  fallback: Union[Mapper, type, str, None] = None, **kwargs):

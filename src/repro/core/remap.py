@@ -26,7 +26,8 @@ from .refine.stage import canon_options
 from .stencil import Stencil
 
 __all__ = ["device_layout", "layout_cost", "mapped_device_array",
-           "apply_layout", "ensure_refined", "ELASTIC_PORTFOLIO_KWARGS"]
+           "apply_layout", "ensure_refined", "ELASTIC_PORTFOLIO_KWARGS",
+           "elastic_portfolio_plan", "repair_layout"]
 
 
 def apply_layout(devices: Sequence, layout: np.ndarray) -> np.ndarray:
@@ -165,6 +166,101 @@ def ensure_refined(mapper: Union[Mapper, str]) -> Union[Mapper, str]:
     return wrapped
 
 
+def elastic_portfolio_plan(base: str = "hyperplane"):
+    """The elastic upgrade as a :class:`~repro.core.plan.MappingPlan` —
+    the exact stage chain :func:`ensure_refined` wraps mappers with
+    (``base`` with a ``blocked`` inapplicability fallback, then the
+    :data:`ELASTIC_PORTFOLIO_KWARGS` portfolio).  This is the cold-solve
+    baseline the repair path falls back to — and is measured against —
+    built programmatically because ``temperatures`` tuples are not
+    spellable in bracket options."""
+    from .plan import MappingPlan
+    from .refine.stage import BaseStage
+    return MappingPlan(
+        [BaseStage(base, fallback="blocked"),
+         PortfolioRefiner(**ELASTIC_PORTFOLIO_KWARGS).as_stage()],
+        name=f"elastic-portfolio:{base}")
+
+
+def repair_layout(previous, node_sizes: Sequence[int], *,
+                  mesh_shape: Optional[Sequence[int]] = None,
+                  stencil: Optional[Stencil] = None,
+                  node_map: Optional[Sequence[Optional[int]]] = None,
+                  fallback: Union[bool, str, None] = True,
+                  cache: Union[None, bool, PlanCache] = None,
+                  **repair_options):
+    """Warm-start re-solve after churn: repair ``previous`` (the pre-churn
+    :class:`~repro.core.plan.MappingSolution` / ``CartResult``) onto the
+    surviving ``node_sizes`` instead of solving cold.
+
+    This is the churn path's entry point (ROADMAP open item 4): the
+    previous assignment is restricted to the survivors, orphaned grid
+    positions are greedily re-homed to adjacent surviving pods, and only
+    the churn-affected pods' positions are annealed (everything else
+    pinned) — see :mod:`repro.core.repair`.
+
+    Args:
+      previous: the pre-churn solution (``MappingSolution``, ``CartResult``,
+        or an ``(assignment, mesh_shape, node_sizes)`` triple).
+      node_sizes: surviving chips per pod.  For a slow-but-alive pod pass
+        :func:`~repro.core.repair.downweighted_node_sizes` (the
+        weighted-node re-solve with down-weighted capacity).
+      mesh_shape: the post-churn mesh (default: the previous solution's
+        shape when the survivor total still matches it; a device loss that
+        shrinks the mesh must pass the new shape — repair transfers the
+        assignment geometrically).
+      stencil: communication stencil (default: the previous problem's).
+      node_map: post-churn pod index -> pre-churn pod index (``-1``/None =
+        newly added pod).  Default identity when the pod counts match;
+        :meth:`~repro.runtime.fault.SimulatedFault.survivor_map` spells it
+        for whole-pod losses.
+      fallback: ``True`` -> cold-solve via :func:`elastic_portfolio_plan`
+        when the previous solution cannot seed this problem; a string ->
+        that plan spelling; ``False``/``None`` -> raise instead.
+      cache: plan-cache policy (None -> process default).  The repaired
+        solution is cached under the *post-churn* problem signature (the
+        survivor ``node_sizes`` are part of the content hash), so
+        pre-churn entries stay intact and a repeated re-mesh onto the
+        same survivors is served without re-annealing.
+      repair_options: :class:`~repro.core.repair.RepairStage` knobs
+        (``k``, ``sa_moves``, ``temperatures``, ``pin``, ``max_swaps``).
+
+    Returns the post-churn :class:`~repro.core.plan.MappingSolution`
+    (``solution.layout()`` gives the device layout;
+    :func:`~repro.launch.mesh.repair_mapped_mesh` builds the jax Mesh).
+    """
+    from .plan import MappingSolution
+    from .repair import repair_plan
+    if hasattr(previous, "solution"):               # CartResult
+        previous = previous.solution
+    node_sizes = tuple(int(n) for n in node_sizes)
+    if isinstance(previous, MappingSolution):
+        if mesh_shape is None:
+            mesh_shape = previous.problem.mesh_shape
+            if sum(node_sizes) != math.prod(mesh_shape):
+                raise ValueError(
+                    f"sum(node_sizes)={sum(node_sizes)} != previous mesh "
+                    f"size {math.prod(mesh_shape)}: a churn that changes "
+                    "the device count must pass the post-churn mesh_shape")
+        if stencil is None:
+            stencil = previous.problem.stencil
+    elif mesh_shape is None or stencil is None:
+        raise ValueError("repairing from a raw (assignment, shape, sizes) "
+                         "triple needs explicit mesh_shape and stencil")
+    if fallback is True:
+        fb = elastic_portfolio_plan()
+    elif isinstance(fallback, str):
+        fb = parse_plan(fallback)
+    else:
+        fb = None
+    plan = repair_plan(previous, node_map=node_map, fallback=fb,
+                       **repair_options)
+    problem = MappingProblem(tuple(mesh_shape), stencil, node_sizes)
+    c = resolve_cache(cache)
+    return plan.solve(problem, cache=c) if c is not None \
+        else plan.solve(problem)
+
+
 def mapped_device_array(devices: Sequence, mapper: Union[Mapper, str],
                         mesh_shape: Sequence[int], stencil: Stencil,
                         chips_per_pod: int,
@@ -198,7 +294,12 @@ def mapped_device_array(devices: Sequence, mapper: Union[Mapper, str],
                              f"size {p}")
     else:   # blocked split, ragged tail pod when it doesn't divide evenly
         node_sizes = list(blocked_node_sizes(p, chips_per_pod))
-    if auto_refine and len(set(node_sizes)) > 1:
+    # any deviation from the homogeneous chips_per_pod split gets the
+    # refinement upgrade: ragged survivors AND uniform shrinks (every pod
+    # losing one chip, or whole-pod loss leaving equal survivors) — the
+    # blocked split no longer matches the original topology either way.
+    if auto_refine and node_sizes and (len(set(node_sizes)) > 1
+                                       or node_sizes[0] != int(chips_per_pod)):
         mapper = ensure_refined(mapper)
     layout = device_layout(mapper, mesh_shape, stencil, node_sizes,
                            cache=cache)

@@ -25,10 +25,11 @@ from jax.sharding import Mesh
 
 from ..configs.base import ArchConfig, ShapeSpec
 from ..core import Stencil, mapped_device_array
+from ..core.remap import apply_layout, repair_layout
 from ..topology.machine import MachineSpec, V5E_2POD, V5E_POD
 
-__all__ = ["make_production_mesh", "make_mapped_mesh", "stencil_for_plan",
-           "machine_for", "mesh_axes"]
+__all__ = ["make_production_mesh", "make_mapped_mesh", "repair_mapped_mesh",
+           "stencil_for_plan", "machine_for", "mesh_axes"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -143,3 +144,45 @@ def make_mapped_mesh(mapper_name: str, *, multi_pod: bool = False,
                               node_sizes=node_sizes, auto_refine=auto_refine,
                               cache=cache)
     return Mesh(arr, tuple(axes))
+
+
+def repair_mapped_mesh(previous, node_sizes: Sequence[int], *,
+                       devices: Sequence,
+                       mesh_shape: Optional[Sequence[int]] = None,
+                       axes: Optional[Sequence[str]] = None,
+                       stencil: Optional[Stencil] = None,
+                       node_map: Optional[Sequence[Optional[int]]] = None,
+                       cache=None, **repair_options):
+    """Re-mesh after churn by *repairing* the previous solution instead of
+    cold-solving (:func:`~repro.core.remap.repair_layout`): the survivors
+    keep their positions, orphaned coordinates are re-homed to adjacent
+    pods, and only the churn-affected pods are annealed.
+
+    ``previous`` is the pre-churn
+    :class:`~repro.core.plan.MappingSolution` (or ``CartResult``);
+    ``node_sizes`` the surviving chips per pod (use
+    :meth:`~repro.runtime.fault.SimulatedFault.survivors` /
+    ``survivor_map`` to spell both after an injected fault);
+    ``devices`` the surviving devices in pod-major order.  ``mesh_shape``
+    defaults to the previous solution's shape when the survivor total
+    still matches; a loss that shrinks the device count passes the new
+    shape and repair transfers the assignment geometrically.
+
+    Returns ``(Mesh, MappingSolution)`` — the solution is what the *next*
+    repair warm-starts from, and it is cached under the survivor
+    signature (pre-churn cache entries stay intact).
+    """
+    sol = repair_layout(previous, node_sizes, mesh_shape=mesh_shape,
+                        stencil=stencil, node_map=node_map, cache=cache,
+                        **repair_options)
+    layout = sol.layout()
+    if axes is None:
+        if layout.ndim == 2:
+            axes = ("data", "model")
+        elif layout.ndim == 3:
+            axes = ("pod", "data", "model")
+        else:
+            raise ValueError(f"pass axes for a rank-{layout.ndim} mesh")
+    if len(axes) != layout.ndim:
+        raise ValueError(f"{len(axes)} axes for rank-{layout.ndim} mesh")
+    return Mesh(apply_layout(list(devices), layout), tuple(axes)), sol

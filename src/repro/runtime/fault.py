@@ -2,43 +2,128 @@
 
 On a real fleet, failures arrive as ICI/host errors or missed heartbeats;
 here they are injected deterministically so the recovery paths (restore,
-restart, elastic re-mesh) are exercised by CPU tests.  Failure kinds:
+restart, elastic re-mesh, warm-start repair) are exercised by CPU tests.
+Failure kinds:
 
-  * "step_crash"   — transient: the step raises; driver restores from the
-                     last checkpoint and continues (same topology);
-  * "node_loss"    — persistent: a pod/host is gone; driver re-meshes onto
-                     the survivors (heterogeneous node sizes — the paper's
-                     n_i support doing real work) and continues.
+  * "step_crash"        — transient: the step raises; driver restores from
+                          the last checkpoint and continues (same topology);
+  * "node_loss:N"       — persistent: pod/host N is gone; driver re-meshes
+                          onto the survivors (heterogeneous node sizes —
+                          the paper's n_i support doing real work) and
+                          continues.  "node_loss:N:C" loses only C chips
+                          of pod N (the pod survives, degraded).
+
+Schedule entries are validated at construction — a malformed entry (e.g.
+``"node_loss"`` with no pod index) used to surface as ``node=None`` deep
+in the re-mesh path with no pod to drop; now it raises immediately with
+the offending spelling.  :class:`SimulatedFault` carries enough to compute
+the survivor topology (:meth:`SimulatedFault.survivors` /
+:meth:`SimulatedFault.survivor_map`) so recovery code never re-parses.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Tuple
 
-__all__ = ["SimulatedFault", "FaultInjector"]
+__all__ = ["SimulatedFault", "FaultInjector", "FAULT_KINDS"]
+
+#: the vocabulary of injectable failures
+FAULT_KINDS = ("step_crash", "node_loss")
 
 
 class SimulatedFault(RuntimeError):
-    def __init__(self, kind: str, step: int, node: Optional[int] = None):
-        super().__init__(f"simulated {kind} at step {step}"
-                         + (f" (node {node})" if node is not None else ""))
+    """One injected failure.  ``node`` is the lost (or degraded) pod for
+    "node_loss"; ``chips`` is how many of its chips are gone (``None`` =
+    the whole pod)."""
+
+    def __init__(self, kind: str, step: int, node: Optional[int] = None,
+                 chips: Optional[int] = None):
+        detail = ""
+        if node is not None:
+            detail = f" (node {node}" + \
+                (f", {chips} chips" if chips is not None else "") + ")"
+        super().__init__(f"simulated {kind} at step {step}" + detail)
         self.kind = kind
         self.step = step
         self.node = node
+        self.chips = chips
+
+    def survivors(self, node_sizes) -> List[int]:
+        """The post-fault ``node_sizes``: pod ``node`` shrunk by ``chips``,
+        or removed entirely for a whole-pod loss.  Raises for faults that
+        do not change topology ("step_crash") or an out-of-range pod."""
+        if self.kind != "node_loss":
+            raise ValueError(f"{self.kind!r} does not change topology")
+        sizes = [int(s) for s in node_sizes]
+        if not 0 <= self.node < len(sizes):
+            raise ValueError(f"lost node {self.node} out of range for "
+                             f"{len(sizes)} nodes")
+        if self.chips is None:
+            sizes.pop(self.node)
+            return sizes
+        if not 0 < self.chips < sizes[self.node]:
+            raise ValueError(
+                f"node {self.node} has {sizes[self.node]} chips, cannot "
+                f"lose {self.chips} (whole-pod loss omits the chip count)")
+        sizes[self.node] -= self.chips
+        return sizes
+
+    def survivor_map(self, num_nodes: int) -> Optional[List[int]]:
+        """``node_map`` for :func:`~repro.core.remap.repair_layout`:
+        post-fault pod index -> pre-fault pod index.  ``None`` (identity)
+        when the pod survives degraded; the surviving old indices in order
+        for a whole-pod loss."""
+        if self.kind != "node_loss" or self.chips is not None:
+            return None
+        return [i for i in range(int(num_nodes)) if i != self.node]
+
+
+def _parse_entry(step: int, spec: str) -> SimulatedFault:
+    """Validate one schedule entry and pre-build its fault."""
+    parts = str(spec).split(":")
+    kind = parts[0]
+    if kind not in FAULT_KINDS:
+        raise ValueError(f"unknown fault kind {kind!r} at step {step} "
+                         f"(entry {spec!r}); choose from {FAULT_KINDS}")
+    if kind == "step_crash":
+        if len(parts) != 1:
+            raise ValueError(f"step_crash takes no arguments, got {spec!r} "
+                             f"at step {step}")
+        return SimulatedFault(kind, step)
+    # node_loss requires the pod index; optional chip count
+    if len(parts) not in (2, 3):
+        raise ValueError(
+            f"malformed fault {spec!r} at step {step}: node_loss needs a "
+            "pod index — 'node_loss:<node>' or 'node_loss:<node>:<chips>'")
+    try:
+        node = int(parts[1])
+        chips = int(parts[2]) if len(parts) == 3 else None
+    except ValueError:
+        raise ValueError(f"malformed fault {spec!r} at step {step}: "
+                         "node/chips must be integers") from None
+    if node < 0:
+        raise ValueError(f"fault {spec!r} at step {step}: pod index must "
+                         "be >= 0")
+    if chips is not None and chips <= 0:
+        raise ValueError(f"fault {spec!r} at step {step}: chip count must "
+                         "be positive")
+    return SimulatedFault(kind, step, node, chips)
 
 
 @dataclass
 class FaultInjector:
-    """schedule: step -> kind ("step_crash" | "node_loss[:node]")."""
+    """schedule: step -> kind ("step_crash" | "node_loss:<node>[:<chips>]").
+    Entries are validated eagerly at construction (malformed spellings
+    raise here, not mid-training)."""
     schedule: Dict[int, str] = field(default_factory=dict)
     fired: set = field(default_factory=set)
 
+    def __post_init__(self):
+        self._parsed: Dict[int, SimulatedFault] = {
+            int(step): _parse_entry(int(step), spec)
+            for step, spec in self.schedule.items()}
+
     def check(self, step: int) -> None:
-        if step in self.schedule and step not in self.fired:
+        if step in self._parsed and step not in self.fired:
             self.fired.add(step)
-            kind = self.schedule[step]
-            node = None
-            if ":" in kind:
-                kind, node_s = kind.split(":", 1)
-                node = int(node_s)
-            raise SimulatedFault(kind, step, node)
+            raise self._parsed[step]

@@ -1,48 +1,117 @@
 """Straggler detection: per-step wall-time EWMA with a slow-step policy.
 
 At fleet scale one slow host serializes every collective; the standard
-mitigations are (a) replace/evict the host and re-map its shards, (b) shed
-non-critical work.  The monitor implements the detection and recommends an
-action; the driver wires it to the elastic re-mesh path.
+mitigations are (a) replace/evict the host and re-map its shards — the
+elastic repair path (:func:`~repro.core.remap.repair_layout` with
+:func:`~repro.core.repair.downweighted_node_sizes`), (b) shed non-critical
+work.  The monitor implements the detection and recommends an action; the
+driver wires it to the warm-start repair path.
+
+Escalation semantics (the load-bearing part):
+
+* a *healthy* step (``dt <= warn_ratio * ewma``) resets the slow streak
+  and updates the EWMA;
+* **any** slow step (``dt > warn_ratio * ewma``) — warn band *or* beyond
+  ``remap_ratio`` — extends the streak and is excluded from the EWMA, so a
+  host persistently ~2x slow that oscillates below ``remap_ratio`` still
+  escalates to "remap" after ``patience`` consecutive slow steps (it used
+  to reset the streak on every warn-band step and never escalate);
+* the EWMA is seeded from the *median* of the first ``warmup`` steps, not
+  from step 0 alone — an anomalously slow first step (compilation, cold
+  caches) otherwise poisons every later ratio.
 """
 from __future__ import annotations
 
+import statistics
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Dict, List, Optional
 
-__all__ = ["StragglerMonitor"]
+__all__ = ["StragglerMonitor", "FleetStragglerMonitor"]
 
 
 @dataclass
 class StragglerMonitor:
     alpha: float = 0.2          # EWMA factor
-    warn_ratio: float = 1.5     # step slower than ratio x EWMA -> warn
-    remap_ratio: float = 2.5    # persistently slower -> recommend remap
+    warn_ratio: float = 1.5     # step slower than ratio x EWMA -> slow
+    remap_ratio: float = 2.5    # severe: 2 consecutive such steps -> remap
     patience: int = 3           # consecutive slow steps before remap
+    warmup: int = 3             # steps whose median seeds the EWMA
     ewma: Optional[float] = None
     slow_streak: int = 0
     events: List[tuple] = field(default_factory=list)
+    _warmup_buf: List[float] = field(default_factory=list, repr=False)
 
     def record(self, step: int, dt: float) -> Optional[str]:
+        # warm-up: seed the EWMA from the median of the first steps so one
+        # anomalously slow step 0 (compilation) cannot poison the baseline
         if self.ewma is None:
-            self.ewma = dt
+            self._warmup_buf.append(float(dt))
+            if len(self._warmup_buf) >= max(1, self.warmup):
+                self.ewma = float(statistics.median(self._warmup_buf))
+                self._warmup_buf.clear()
             return None
         action = None
-        if dt > self.remap_ratio * self.ewma:
+        if dt > self.warn_ratio * self.ewma:
+            # warn band AND beyond-remap_ratio steps both extend the
+            # streak: persistent ~2x slowness must escalate even when no
+            # single step crosses remap_ratio
             self.slow_streak += 1
-            if self.slow_streak >= self.patience:
+            severe = dt > self.remap_ratio * self.ewma
+            # patience bounds warn-band escalation; a *repeated* severe
+            # step (beyond remap_ratio) escalates after two in a row — but
+            # a single severe hiccup alone never triggers a remap
+            if self.slow_streak >= self.patience or \
+                    (severe and self.slow_streak >= 2):
                 action = "remap"
                 self.slow_streak = 0
             else:
                 action = "warn"
-        elif dt > self.warn_ratio * self.ewma:
-            self.slow_streak = 0
-            action = "warn"
         else:
             self.slow_streak = 0
-        # EWMA excludes extreme outliers so a single hiccup does not poison it
-        if dt < self.remap_ratio * self.ewma:
+            # only healthy steps update the EWMA — warn-band steps used to
+            # leak in and ratchet the baseline toward the straggler's pace
             self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
         if action:
             self.events.append((step, dt, action))
         return action
+
+
+@dataclass
+class FleetStragglerMonitor:
+    """Per-node straggler monitors sharing one policy: feed each node's
+    step wall-time, get back the nodes needing action this step.  The
+    driver turns a "remap" into a down-weighted repair
+    (:func:`~repro.core.repair.downweighted_node_sizes` +
+    :func:`~repro.core.remap.repair_layout`) for that node."""
+
+    alpha: float = 0.2
+    warn_ratio: float = 1.5
+    remap_ratio: float = 2.5
+    patience: int = 3
+    warmup: int = 3
+    monitors: Dict[int, StragglerMonitor] = field(default_factory=dict)
+
+    def monitor(self, node: int) -> StragglerMonitor:
+        if node not in self.monitors:
+            self.monitors[node] = StragglerMonitor(
+                alpha=self.alpha, warn_ratio=self.warn_ratio,
+                remap_ratio=self.remap_ratio, patience=self.patience,
+                warmup=self.warmup)
+        return self.monitors[node]
+
+    def record(self, step: int, node_dts: Dict[int, float]) \
+            -> Dict[int, str]:
+        """Record one step's per-node wall-times; returns ``{node:
+        action}`` for the nodes whose monitor recommends one."""
+        actions: Dict[int, str] = {}
+        for node, dt in node_dts.items():
+            a = self.monitor(int(node)).record(step, float(dt))
+            if a:
+                actions[int(node)] = a
+        return actions
+
+    @property
+    def events(self) -> List[tuple]:
+        """All (node, step, dt, action) events, step-ordered."""
+        out = [(n, *e) for n, m in self.monitors.items() for e in m.events]
+        return sorted(out, key=lambda t: (t[1], t[0]))

@@ -17,7 +17,10 @@ import numpy as np
 
 from ..checkpoint.manager import CheckpointManager
 from ..configs.base import ArchConfig, ShapeSpec
-from ..core import CartGrid, Stencil, get_mapper
+from ..core import Stencil
+from ..core.plan import MappingProblem
+from ..core.remap import elastic_portfolio_plan, repair_layout
+from ..core.repair import downweighted_node_sizes
 from ..data.synthetic import DataConfig, host_batch
 from ..models import lm
 from ..models.common import init_params
@@ -37,6 +40,7 @@ class TrainResult:
     restarts: int
     remaps: int
     straggler_events: list
+    repairs: int = 0        # warm-start plan repairs (vs cold re-solves)
 
 
 class Trainer:
@@ -62,8 +66,25 @@ class Trainer:
         self.num_nodes = num_nodes          # simulated node count (elastic)
         self.alive_nodes = list(range(num_nodes))
         self.remaps = 0
+        self.repairs = 0                    # warm-start repairs performed
+        self._map_solution = None           # current topology's mapping
         self._step_fn = jax.jit(make_train_step(cfg, self.opt_cfg,
                                                 moe_dispatch=moe_dispatch))
+
+    #: simulated chips per node for the process-to-node mapping problem
+    #: (the driver has no real devices; the mapping pipeline runs for real)
+    _SIM_CHIPS = 4
+
+    def _mapping_stencil(self) -> Stencil:
+        return Stencil.component(2, axes=[0])
+
+    def _solve_mapping_cold(self, n: int):
+        """Cold-solve the n-node mapping (the elastic portfolio plan —
+        what repair is the warm alternative to)."""
+        problem = MappingProblem((max(n, 1), self._SIM_CHIPS),
+                                 self._mapping_stencil(),
+                                 (self._SIM_CHIPS,) * max(n, 1))
+        return elastic_portfolio_plan().solve(problem)
 
     # ------------------------------------------------------------------
     def _init_state(self):
@@ -94,19 +115,49 @@ class Trainer:
                 for k in shards[0]}
 
     def _elastic_remap(self, lost_node: int) -> None:
-        """Drop a node and recompute the process-to-node mapping for the
-        survivors (the paper's heterogeneous-n_i path).  On real hardware
-        this would rebuild the jax Mesh from the surviving devices via
-        ``core.remap.mapped_device_array``; here we recompute the mapping
-        and shrink the data-parallel width."""
+        """Drop a node and re-solve the process-to-node mapping for the
+        survivors (the paper's heterogeneous-n_i path) — warm-started from
+        the previous topology's solution when one exists
+        (:func:`~repro.core.remap.repair_layout`), cold otherwise.  On real
+        hardware the resulting ``solution.layout()`` would rebuild the jax
+        Mesh from the surviving devices via ``remap.apply_layout``; here we
+        run the mapping pipeline for real and shrink the data-parallel
+        width."""
+        prev_alive = list(self.alive_nodes)
         if lost_node in self.alive_nodes and len(self.alive_nodes) > 1:
             self.alive_nodes.remove(lost_node)
         self.remaps += 1
-        n = len(self.alive_nodes)
-        # re-run the mapper on the shrunken allocation to verify feasibility
-        grid = CartGrid((max(n, 1), 1))
-        st = Stencil.component(2, axes=[0])
-        get_mapper("hyperplane").assignment(grid, st, [1] * max(n, 1))
+        n = max(len(self.alive_nodes), 1)
+        prev = self._map_solution
+        if prev is not None and prev.problem.num_nodes == len(prev_alive) \
+                and n < len(prev_alive):
+            # warm-start: survivors keep their old positions, the lost
+            # node's share is re-homed and lightly annealed
+            node_map = [prev_alive.index(a) for a in self.alive_nodes]
+            self._map_solution = repair_layout(
+                prev, (self._SIM_CHIPS,) * n,
+                mesh_shape=(n, self._SIM_CHIPS), node_map=node_map)
+            self.repairs += 1
+        else:
+            self._map_solution = self._solve_mapping_cold(n)
+        self._map_solution.layout()     # the device permutation, realized
+
+    def _straggler_repair(self, slow_node: int, factor: float = 2.0) -> None:
+        """Honor a "remap" recommendation for a slow-but-alive node: a
+        weighted-node re-solve with its capacity down-weighted (the node
+        keeps ``1/factor`` of its share), warm-started from the current
+        solution."""
+        n = max(len(self.alive_nodes), 1)
+        if self._map_solution is None or \
+                self._map_solution.problem.num_nodes != n:
+            self._map_solution = self._solve_mapping_cold(n)
+        idx = self.alive_nodes.index(slow_node) \
+            if slow_node in self.alive_nodes else 0
+        sizes = downweighted_node_sizes(
+            self._map_solution.problem.node_sizes, idx, factor)
+        self._map_solution = repair_layout(self._map_solution, sizes)
+        self.repairs += 1
+        self._map_solution.layout()
 
     # ------------------------------------------------------------------
     def run(self, num_steps: int, max_restarts: int = 5) -> TrainResult:
@@ -124,7 +175,12 @@ class Trainer:
                 dt = time.perf_counter() - t0
                 action = self.straggler.record(step, dt)
                 if action == "remap":
-                    self.remaps += 1  # evict+remap recommendation honored
+                    # evict+remap recommendation honored: the slow node
+                    # (not identifiable from the aggregate step time in
+                    # this simulated driver — take the last alive node)
+                    # gets a down-weighted warm-start re-solve
+                    self.remaps += 1
+                    self._straggler_repair(self.alive_nodes[-1])
                 losses.append(loss)
                 step += 1
                 if self.ckpt is not None and (step % self.ckpt_every == 0
@@ -144,5 +200,5 @@ class Trainer:
         return TrainResult(steps_done=step - start,
                            final_loss=losses[-1] if losses else float("nan"),
                            losses=losses, restarts=restarts,
-                           remaps=self.remaps,
+                           remaps=self.remaps, repairs=self.repairs,
                            straggler_events=list(self.straggler.events))

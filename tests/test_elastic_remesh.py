@@ -14,8 +14,12 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core import Stencil, layout_cost, mapped_device_array
+from repro.core import (MappingProblem, Stencil, elastic_portfolio_plan,
+                        layout_cost, mapped_device_array, repair_layout)
+from repro.core.remap import apply_layout
+from repro.core.repair import downweighted_node_sizes
 from repro.runtime.fault import FaultInjector, SimulatedFault
+from repro.runtime.straggler import FleetStragglerMonitor
 
 SRC = str(Path(__file__).resolve().parent.parent / "src")
 
@@ -152,3 +156,117 @@ def test_node_loss_whole_pod_remesh_in_process():
                                               auto_refine=False)),
         stencil, sizes)
     assert cost.j_sum <= base.j_sum
+
+
+def test_uniform_shrink_gets_refinement(monkeypatch):
+    """Every pod shrinking by the same amount leaves *uniform* node_sizes
+    that no longer match the original chips_per_pod split — the elastic
+    upgrade must engage there too, not only for ragged survivors (it used
+    to key off raggedness alone and skip the uniform-shrink re-mesh)."""
+    import repro.core.remap as remap_mod
+    calls = []
+    orig = remap_mod.ensure_refined
+
+    def spy(mapper):
+        calls.append(mapper)
+        return orig(mapper)
+
+    monkeypatch.setattr(remap_mod, "ensure_refined", spy)
+    stencil = Stencil.nearest_neighbor(2)
+    devices = list(range(24))
+    remap_mod.mapped_device_array(devices, "hyperplane", (6, 4), stencil,
+                                  chips_per_pod=16, node_sizes=[8, 8, 8],
+                                  cache=False)
+    assert calls, "uniform shrink (16 -> 8 chips/pod) must auto-refine"
+    calls.clear()
+    remap_mod.mapped_device_array(devices, "hyperplane", (6, 4), stencil,
+                                  chips_per_pod=8, node_sizes=[8, 8, 8],
+                                  cache=False)
+    assert not calls, "sizes matching the homogeneous split: no upgrade"
+
+
+def test_straggler_monitor_drives_warm_repair_end_to_end():
+    """The full slow-pod loop in-process: fleet monitor flags the 2x pod,
+    its capacity is down-weighted, repair_layout warm-starts from the
+    serving solution, and remap.apply_layout re-permutes the surviving
+    devices — a bijection whose churn-untouched positions kept their
+    device assignment pinned."""
+    stencil = Stencil.nearest_neighbor(2)
+    sizes = (8,) * 6
+    prev = elastic_portfolio_plan().solve(
+        MappingProblem((6, 8), stencil, sizes))
+
+    fleet = FleetStragglerMonitor(patience=2, warmup=2)
+    slow_node = None
+    for step in range(12):
+        dts = {n: (2.1 if n == 4 and step >= 5 else 1.0) for n in range(6)}
+        for node, action in fleet.record(step, dts).items():
+            if action == "remap":
+                slow_node = node
+                break
+        if slow_node is not None:
+            break
+    assert slow_node == 4, "monitor must isolate the persistently slow pod"
+
+    dw = downweighted_node_sizes(sizes, slow_node, 2.0)
+    assert sum(dw) == sum(sizes) and dw[slow_node] < sizes[slow_node]
+    sol = repair_layout(prev, dw, cache=False)
+    st = sol.stage_stats[0]
+    assert st["kind"] == "repair" and not st["used_fallback"]
+    assert np.bincount(sol.assignment, minlength=6).tolist() == dw
+
+    devices = list(range(48))               # stand-ins, pod-major order
+    arr = apply_layout(devices, sol.layout())
+    assert sorted(int(d) for d in arr.reshape(-1)) == devices
+    assert arr.shape == (6, 8)
+
+
+def test_repair_mapped_mesh_dry_run():
+    """Whole-pod loss end-to-end with a real jax Mesh: the pre-churn mesh
+    solution is repaired onto the survivors via repair_mapped_mesh (warm
+    path, no cold fallback) and the rebuilt Mesh is a bijection over the
+    surviving devices."""
+    out = run_py("""
+        import json
+        import numpy as np
+        from repro.core import MappingProblem, Stencil, elastic_portfolio_plan
+        from repro.launch.mesh import repair_mapped_mesh
+        from repro.runtime.fault import FaultInjector, SimulatedFault
+        import jax
+
+        stencil = Stencil.nearest_neighbor(2)
+        prev = elastic_portfolio_plan().solve(
+            MappingProblem((4, 4), stencil, (4, 4, 4, 4)))
+
+        inj = FaultInjector(schedule={2: "node_loss:1"})
+        fault = None
+        for step in range(4):
+            try:
+                inj.check(step)
+            except SimulatedFault as f:
+                fault = f
+        survivors = fault.survivors([4, 4, 4, 4])
+        node_map = fault.survivor_map(4)
+
+        devices = jax.devices()[:sum(survivors)]
+        mesh, sol = repair_mapped_mesh(prev, survivors, devices=devices,
+                                       mesh_shape=(3, 4), stencil=stencil,
+                                       node_map=node_map, cache=False)
+        ids = np.vectorize(lambda d: d.id)(mesh.devices)
+        print(json.dumps({
+            "survivors": survivors,
+            "node_map": node_map,
+            "mesh_shape": list(mesh.devices.shape),
+            "axes": list(mesh.axis_names),
+            "ids": sorted(int(i) for i in ids.reshape(-1)),
+            "kind": sol.stage_stats[0]["kind"],
+            "used_fallback": sol.stage_stats[0]["used_fallback"],
+        }))
+    """, devices=16)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["survivors"] == [4, 4, 4]
+    assert res["node_map"] == [0, 2, 3]
+    assert res["mesh_shape"] == [3, 4]
+    assert res["axes"] == ["data", "model"]
+    assert res["ids"] == list(range(12))
+    assert res["kind"] == "repair" and not res["used_fallback"]

@@ -185,7 +185,10 @@ def test_scheduled_validates_config():
     with pytest.raises(ValueError):
         ScheduledRefiner(objectives=())
     with pytest.raises(ValueError):
-        ScheduledRefiner(rounds=0)
+        ScheduledRefiner(rounds=-1)
+    # rounds=0 is valid: skip the deterministic rounds, ladder/polish only
+    # (the repair warm path's pinned portfolio uses it)
+    assert ScheduledRefiner(rounds=0).rounds == 0
     with pytest.raises(ValueError):
         ScheduledRefiner(objectives=("nope",))
 
