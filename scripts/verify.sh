@@ -22,6 +22,7 @@ fi
 # mask a refinement regression
 python -m pytest -q tests/test_refine_batch.py tests/test_portfolio.py \
     tests/test_sharded_portfolio.py \
+    tests/test_run_temperature_props.py tests/test_device_portfolio.py \
     tests/test_elastic_remesh.py tests/test_linksim_replay.py \
     tests/test_plan.py tests/test_repair.py
 
@@ -57,6 +58,37 @@ sh = get_mapper("sharded[shards=2,k=4]:hyperplane").assignment(grid,
                                                                sizes)
 np.testing.assert_array_equal(sh, ref)
 print("sharded smoke OK: sharded[shards=2,k=4] == portfolio[k=4] bit-exact")
+EOF
+
+# device-portfolio suite: dominance vs the serial portfolio at equal
+# proposal budget over the base-mapper matrix, plus the K-scaling sweep
+# (K=1024 under 4x the K=8 wall-time at fixed budget) — exit 1 on any
+# FAIL — and the machine-readable BENCH_7.json perf snapshot.
+# JAX_PLATFORM_NAME=cpu keeps the run offline-reproducible.
+mkdir -p results
+JAX_PLATFORM_NAME=cpu PYTHONPATH=src python -m benchmarks.refine_suite \
+    --device --json results/BENCH_7.json
+
+# device smoke: the device: grammar spelling end to end — integer-exact
+# count state, deterministic, sizes preserved, no host fallback
+JAX_PLATFORM_NAME=cpu PYTHONPATH=src python - <<'EOF'
+import numpy as np
+from repro.core import CartGrid, Stencil, evaluate, get_mapper
+
+grid, stencil, sizes = CartGrid((6, 8)), Stencil.nearest_neighbor(2), \
+    [16, 16, 10, 6]
+vm = get_mapper("device[k=4,sa_moves=40]:hyperplane")
+a1 = vm.assignment(grid, stencil, sizes)
+stats = vm.last_result.stats
+assert stats["backend"].startswith("device["), stats["backend"]
+assert np.bincount(a1, minlength=4).tolist() == sizes
+a2 = get_mapper("device[k=4,sa_moves=40]:hyperplane").assignment(
+    grid, stencil, sizes)
+np.testing.assert_array_equal(a1, a2)
+c = evaluate(grid, stencil, a1, num_nodes=4)
+print(f"device smoke OK: backend={stats['backend']} "
+      f"J=(max {c.j_max:.0f}, sum {c.j_sum:.0f}) "
+      f"proposals={stats['proposals']}")
 EOF
 
 # warm-start repair suite: repair-vs-cold on the loss/add/slow churn

@@ -33,6 +33,12 @@ Names resolve in two layers:
                 parallel worker processes; bit-identical to
                 ``portfolio[k=K]:`` for any shard count, plus optional
                 adaptive restart/retune control (``restarts=auto``)
+   device:      :class:`~repro.core.refine.DevicePortfolioRefiner`    (J_max, J_sum)
+                — the portfolio's K ladders resident on the
+                accelerator (vmapped Metropolis moves over stacked
+                crossing-count state, one ``lax.scan`` per
+                temperature); same boundary protocol, scales to
+                K=1024; delegates to ``portfolio:`` without jax
    ============ ===================================================== =========
 
 Every spelling accepted here is accepted everywhere a mapper name appears:
@@ -96,10 +102,12 @@ ANNEALED_PREFIX = "annealed:"
 PORTFOLIO_PREFIX = "portfolio:"
 #: Prefix for the process-sharded adaptive portfolio engine.
 SHARDED_PREFIX = "sharded:"
+#: Prefix for the device-resident (jax) annealing portfolio engine.
+DEVICE_PREFIX = "device:"
 
 #: All refinement prefixes, in registry-listing order.
 REFINE_PREFIXES = (REFINED_PREFIX, SCHEDULED_PREFIX, ANNEALED_PREFIX,
-                   PORTFOLIO_PREFIX, SHARDED_PREFIX)
+                   PORTFOLIO_PREFIX, SHARDED_PREFIX, DEVICE_PREFIX)
 
 #: ``<prefix>[k=8,...]:<base>`` — the option-bearing prefixed spelling.
 _PREFIXED_NAME_RE = re.compile(
@@ -184,8 +192,8 @@ def split_mapper_name(name: str, full_name: Optional[str] = None) \
 
 
 def _make_refiner(prefix: str, kwargs: Dict[str, object]):
-    from ..refine import (PortfolioRefiner, ScheduledRefiner,
-                          ShardedPortfolioRefiner)
+    from ..refine import (DevicePortfolioRefiner, PortfolioRefiner,
+                          ScheduledRefiner, ShardedPortfolioRefiner)
     if prefix == "refined":
         return None                       # RefinedMapper's default SwapRefiner
     if prefix == "refined2":
@@ -196,6 +204,8 @@ def _make_refiner(prefix: str, kwargs: Dict[str, object]):
         return PortfolioRefiner(**kwargs)
     if prefix == "sharded":
         return ShardedPortfolioRefiner(**kwargs)
+    if prefix == "device":
+        return DevicePortfolioRefiner(**kwargs)
     raise KeyError(prefix)  # pragma: no cover - guarded by split_mapper_name
 
 
@@ -233,7 +243,8 @@ __all__ = [
     "BlockedMapper", "RandomMapper", "NodecartMapper", "HyperplaneMapper",
     "KDTreeMapper", "StencilStripsMapper", "GraphGreedyMapper",
     "MAPPERS", "REFINED_PREFIX", "SCHEDULED_PREFIX", "ANNEALED_PREFIX",
-    "PORTFOLIO_PREFIX", "SHARDED_PREFIX", "REFINE_PREFIXES", "get_mapper",
+    "PORTFOLIO_PREFIX", "SHARDED_PREFIX", "DEVICE_PREFIX",
+    "REFINE_PREFIXES", "get_mapper",
     "available_mappers", "split_mapper_name", "split_mapper_list",
     "parse_mapper_options",
 ]

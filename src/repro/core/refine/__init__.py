@@ -23,6 +23,13 @@ package supplies that pass in three tiers:
   bit-identical to the single-process portfolio for any shard count, with
   optional adaptive control: killed ladders' unspent budgets fund restarts
   from the leader, and restart temperatures retune from accept rates.
+* :class:`DevicePortfolioRefiner` — the portfolio's K ladders resident on
+  the accelerator (:mod:`repro.core.refine.device`): vmapped Metropolis
+  moves over stacked integer crossing-count state, one ``lax.scan`` per
+  temperature, one host round-trip per boundary.  Scales to K=1024; the
+  shared boundary protocol lives in :mod:`repro.core.refine.engine`
+  (:class:`LadderEngine` / :class:`BoundaryController`), so serial,
+  sharded, and device drivers run identical kill/restart/retune rules.
 * :class:`RefinedMapper` — packages any refiner as a drop-in
   :class:`~repro.core.mapping.Mapper`, so ``get_mapper("refined:<base>")``,
   ``"refined2:<base>"``, ``"annealed:<base>"`` and ``"portfolio:<base>"``
@@ -37,13 +44,19 @@ an optional per-stage accepted-swap budget.
 """
 from .swap import RefineResult, SwapRefiner, refine_assignment
 from .schedule import ScheduledRefiner
+from .engine import (BoundaryController, BoundaryReport, LadderEngine,
+                     RestartSeeder, SerialLadderEngine)
 from .portfolio import PortfolioRefiner, run_temperature
 from .sharded import ShardedPortfolioRefiner, stacked_crossing_counts
+from .device import DeviceLadderEngine, DevicePortfolioRefiner, jax_ready
 from .stage import BaseStage, RefineStage, Stage, StageResult
 from .mapper import RefinedMapper
 
 __all__ = ["SwapRefiner", "ScheduledRefiner", "PortfolioRefiner",
-           "ShardedPortfolioRefiner", "run_temperature",
-           "stacked_crossing_counts",
+           "ShardedPortfolioRefiner", "DevicePortfolioRefiner",
+           "run_temperature", "stacked_crossing_counts",
+           "LadderEngine", "SerialLadderEngine", "DeviceLadderEngine",
+           "BoundaryController", "BoundaryReport", "RestartSeeder",
+           "jax_ready",
            "RefineResult", "refine_assignment", "RefinedMapper",
            "Stage", "StageResult", "BaseStage", "RefineStage"]

@@ -245,40 +245,32 @@ class PortfolioRefiner:
         ladder i's trajectory equals a scalar ladder seeded ``seeds[i]``.
         Only the delta/energy arithmetic is batched across ladders.
         """
+        from .engine import BoundaryController, SerialLadderEngine
         sched = self.schedule
         K = self.k
-        pc = PortfolioCost(grid, stencil,
-                           np.broadcast_to(start, (K, grid.size)),
-                           num_nodes=num_nodes, weighted=sched.weighted)
-        rngs = [np.random.default_rng(s) for s in self.seeds]
+        eng = SerialLadderEngine(grid, stencil, start, self.seeds,
+                                 num_nodes=num_nodes, weighted=sched.weighted,
+                                 allowed=allowed)
+        pc = eng.pc
         t_scale = float(np.mean(pc.weights))
         j_sum0 = pc.j_sum()
         eps = 1.0 / (1.0 + np.abs(j_sum0))          # (K,) per-ladder
-        alive = np.ones(K, dtype=bool)              # not early-killed
-        done = np.zeros(K, dtype=bool)              # ended (boundary < 2)
-        best_seen = np.stack([pc.j_max(), j_sum0], axis=1)   # (K, 2)
+        ctrl = BoundaryController(
+            k=K, kill_factor=self.kill_factor,
+            start_keys=np.stack([pc.j_max(), j_sum0], axis=1))
         accepted = 0
-        killed = 0
         for T0 in sched.temperatures:
             if budget is not None and accepted >= budget:
                 break               # skip leftover temperatures' setup too
             T = max(T0 * t_scale, 1e-12)
-            accepted += int(run_temperature(
-                pc, rngs, alive, done, np.full(K, T), sched.sa_moves, eps,
-                budget=None if budget is None else budget - accepted,
-                allowed=allowed).sum())
+            rep = eng.run_temperature(
+                np.full(K, T), sched.sa_moves, ctrl.alive, eps,
+                budget=None if budget is None else budget - accepted)
+            accepted += int(rep.accepted.sum())
             # temperature boundary: exact keys, early-kill of dominated runs
-            keys = np.stack([pc.j_max(), pc.j_sum()], axis=1)
-            for i in range(K):
-                if tuple(keys[i]) < tuple(best_seen[i]):
-                    best_seen[i] = keys[i]
-            if self.kill_factor is not None:
-                lead = best_seen[alive, 0].min()
-                for i in range(1, K):
-                    if alive[i] and best_seen[i, 0] > self.kill_factor * lead:
-                        alive[i] = False
-                        killed += 1
-        return pc, alive, accepted, killed
+            ctrl.update_best(np.stack([rep.j_max, rep.j_sum], axis=1))
+            ctrl.kill()
+        return pc, ctrl.alive, accepted, ctrl.killed
 
     # -- survivor selection + polish (shared with the sharded engine) -------
     def _polish_survivors(self, grid: CartGrid, stencil: Stencil,

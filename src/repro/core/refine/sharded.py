@@ -61,6 +61,7 @@ Usage::
 from __future__ import annotations
 
 import copy
+import functools
 import math
 import multiprocessing
 import os
@@ -75,6 +76,7 @@ from ..cost_delta import (IncrementalCost, NeighborTable, PortfolioCost,
                           stacked_count_arrays)
 from ..grid import CartGrid
 from ..stencil import Stencil, resolve_weighted
+from .engine import BoundaryController, RestartSeeder
 from .portfolio import PortfolioRefiner, run_temperature
 from .swap import RefineResult
 
@@ -86,10 +88,43 @@ __all__ = ["ShardedPortfolioRefiner", "stacked_crossing_counts"]
 _MP_AUTO_MIN_ELEMS = 1 << 14
 
 
+#: memoized "is jax importable" verdict (``None`` = undecided).  Resolved
+#: once per process from spec discovery, NOT from ``sys.modules`` — the
+#: PR-5 ``"jax" in sys.modules`` probe made the very first
+#: ``use_jax="auto"`` call depend on whether anything else had imported
+#: jax yet (import-order-dependent first-call behavior, pinned by a
+#: regression test).  Spec discovery doesn't pay the import; the first
+#: call that actually selects the jax backend does.
+_JAX_SPEC: Optional[bool] = None
+
+
+def _jax_importable() -> bool:
+    global _JAX_SPEC
+    if _JAX_SPEC is None:
+        import importlib.util
+        _JAX_SPEC = importlib.util.find_spec("jax") is not None
+    return _JAX_SPEC
+
+
 def _jax_available() -> bool:
-    """True when jax is *already imported* — ``vmap_counts="auto"`` never
-    pays a cold multi-second ``import jax`` just to count integers."""
+    """Deprecated PR-5 probe, kept for backward compatibility; backend
+    resolution now goes through :func:`_jax_importable` so it never
+    depends on import order."""
     return "jax" in sys.modules
+
+
+def _resolve_counts_backend(use_jax) -> bool:
+    """Map a counts-backend option to "use the jax kernel?".  Accepts the
+    historical ``True`` / ``False`` / ``"auto"`` plus the explicit
+    spellings ``"jax"`` / ``"numpy"`` (threadable through ``config()`` and
+    bracket options)."""
+    if use_jax == "auto":
+        return _jax_importable()
+    if use_jax == "numpy":
+        return False
+    if use_jax == "jax":
+        return True
+    return bool(use_jax)
 
 
 def stacked_crossing_counts(grid: CartGrid, stencil: Stencil,
@@ -99,17 +134,23 @@ def stacked_crossing_counts(grid: CartGrid, stencil: Stencil,
     """Integer crossing counts for a stacked (K, p) assignment array:
     ``((K, k) count_off, (K, N, k) count_node)``, bit-equal to what
     :class:`~repro.core.cost_delta.PortfolioCost` builds in its own init
-    loop (integers — exact on every path).
+    loop (integers — exact on every path).  This is the state
+    representation the device-resident engine
+    (:mod:`repro.core.refine.device`) seeds its ladders from and the
+    numpy fallback every backend shares.
 
-    With ``use_jax`` truthy and jax importable the counts come from one
+    ``use_jax`` selects the backend: ``"jax"``/``True`` runs one
     ``jax.vmap``-batched kernel over the stacked assignments (crossing
-    masks + ``segment_sum`` per offset); ``"auto"`` uses jax only when it
-    is already imported.  Falls back to the numpy loop otherwise.
+    masks + ``segment_sum`` per offset, jitted once per shape),
+    ``"numpy"``/``False`` the stacked numpy loop, and ``"auto"`` the jax
+    kernel exactly when jax is *importable* — a property of the
+    environment, never of import order.  Falls back to numpy when jax is
+    selected but missing.
     """
     A = np.asarray(assignments, dtype=np.int64)
     table = _memo_table(grid, stencil)
     N = int(num_nodes)
-    if use_jax and (use_jax != "auto" or _jax_available()):
+    if _resolve_counts_backend(use_jax):
         try:
             return _jax_stacked_counts(table, A, N)
         except ImportError:
@@ -117,23 +158,33 @@ def stacked_crossing_counts(grid: CartGrid, stencil: Stencil,
     return stacked_count_arrays(table, A, N)
 
 
-def _jax_stacked_counts(table: NeighborTable, A: np.ndarray,
-                        N: int) -> Tuple[np.ndarray, np.ndarray]:
+@functools.lru_cache(maxsize=8)
+def _jit_stacked_counts(num_nodes: int):
+    """Build (and cache) the jitted stacked-counts kernel for one node
+    count.  ``num_segments`` must be static under jit; table arrays are
+    traced arguments, so one cached callable serves every grid/stencil —
+    jax's own jit cache keys the shapes."""
     import jax
     import jax.numpy as jnp
-    out_valid = jnp.asarray(table.out_valid)         # (k, p)
-    out_tgt = jnp.asarray(table.out_tgt)             # (k, p)
 
-    def one(a):                                      # a: (p,)
+    def one(a, out_valid, out_tgt):                  # a: (p,)
         crossing = out_valid & (a[None, :] != a[out_tgt])        # (k, p)
         count_off = crossing.sum(axis=1)
         # count_node[j, n] = #{i : crossing[j, i] and a[i] == n}
         count_node = jax.vmap(
             lambda c: jax.ops.segment_sum(c.astype(jnp.int32), a,
-                                          num_segments=N))(crossing)
+                                          num_segments=num_nodes))(crossing)
         return count_off, count_node                 # (k,), (k, N)
 
-    co, cn = jax.jit(jax.vmap(one))(jnp.asarray(A))
+    return jax.jit(jax.vmap(one, in_axes=(0, None, None)))
+
+
+def _jax_stacked_counts(table: NeighborTable, A: np.ndarray,
+                        N: int) -> Tuple[np.ndarray, np.ndarray]:
+    import jax.numpy as jnp
+    co, cn = _jit_stacked_counts(N)(jnp.asarray(A),
+                                    jnp.asarray(table.out_valid),
+                                    jnp.asarray(table.out_tgt))
     return (np.asarray(co, dtype=np.int64),
             np.ascontiguousarray(np.asarray(cn, dtype=np.int64)
                                  .transpose(0, 2, 1)))
@@ -215,11 +266,13 @@ class ShardedPortfolioRefiner:
         picks ``"mp"`` when ``shards > 1`` and the stacked state is large
         enough to amortize IPC.
       workers: process-pool size cap (default: min(shards, cpu count)).
-      vmap_counts: rebuild block cost state via the jax.vmap counts kernel
-        (``"auto"``: only when jax is already imported; ``True`` pays the
-        jax import; plain numpy otherwise — results are bit-identical
-        either way).  Serial backend only: mp workers are numpy-only by
-        design (no jax in forked children), so the flag is inert there.
+      vmap_counts: counts backend for rebuilding block cost state —
+        ``"jax"``/``True`` the jax.vmap kernel, ``"numpy"``/``False`` the
+        stacked numpy loop, ``"auto"`` jax exactly when it is importable
+        (an environment property; never depends on import order — results
+        are bit-identical either way).  Serial backend only: mp workers
+        are numpy-only by design (no jax in forked children), so the flag
+        is inert there.
       Remaining arguments are :class:`PortfolioRefiner`'s, same defaults —
       a bare ``sharded:<base>`` equals a bare ``portfolio:<base>``.
     """
@@ -245,6 +298,9 @@ class ShardedPortfolioRefiner:
             raise ValueError('restarts must be None, "auto", or an int >= 0')
         if backend not in ("auto", "serial", "mp"):
             raise ValueError('backend must be "auto", "serial", or "mp"')
+        if vmap_counts not in (True, False, "auto", "jax", "numpy"):
+            raise ValueError('vmap_counts must be True, False, "auto", '
+                             '"jax", or "numpy"')
         lo, hi = float(accept_band[0]), float(accept_band[1])
         if not (0.0 <= lo <= hi <= 1.0):
             raise ValueError("accept_band must satisfy 0 <= low <= high <= 1")
@@ -272,8 +328,12 @@ class ShardedPortfolioRefiner:
         self.schedule = self.portfolio.schedule
         self.seeds = self.portfolio.seeds
         self.k = self.portfolio.k
-        #: restart ladder j is seeded ``max(seeds) + 1 + j`` — fresh,
-        #: deterministic, and never colliding with an original ladder.
+        #: restart ladder j is seeded ``max(seeds) + 1 + j`` — fresh and
+        #: deterministic; the stream is issued through
+        #: :class:`~repro.core.refine.engine.RestartSeeder`, which guards
+        #: (warn + shift) against ever colliding with a user-supplied
+        #: explicit ``seeds=`` list, so a restart can never replay an
+        #: original ladder's trajectory.
         self._restart_seed_base = max(self.seeds) + 1
         if max_swaps is not None and int(max_swaps) < 0:
             raise ValueError("max_swaps must be >= 0 (or None)")
@@ -311,11 +371,11 @@ class ShardedPortfolioRefiner:
         """Whether the coordinator should precompute block counts with the
         jax kernel.  Precomputing only to fall back to the numpy loop would
         *duplicate* the exact work ``PortfolioCost.__init__`` does anyway,
-        so this is True only when the jax path will really run: ``"auto"``
-        requires jax already imported; explicit ``True`` pays the import."""
-        if self.vmap_counts == "auto":
-            return _jax_available()
-        if not self.vmap_counts:
+        so this is True only when the jax path will really run:
+        :func:`_resolve_counts_backend` must select jax (``"auto"`` =
+        jax importable — an environment property, never import order) and
+        the import must actually succeed."""
+        if not _resolve_counts_backend(self.vmap_counts):
             return False
         try:
             import jax  # noqa: F401
@@ -403,6 +463,7 @@ class ShardedPortfolioRefiner:
             "killed": lad["killed"],
             "restarted": len(restarts),
             "pool_moves_left": lad["pool_moves"],
+            "restart_seeds": [r["seed"] for r in restarts],
             "restart_t_mults": [r["t_mult"] for r in restarts],
             "polished": len(polish_order),
             "restart_polished": restart_polished,
@@ -438,10 +499,17 @@ class ShardedPortfolioRefiner:
                                    weighted=weighted)
         j_sum0, j_max0 = start_ic.j_sum, start_ic.j_max
         eps0 = float(1.0 / (1.0 + np.abs(j_sum0)))
-        alive = np.ones(K, dtype=bool)
-        best_seen = np.broadcast_to(
+        n_temps = len(sched.temperatures)
+        ctrl = BoundaryController(
+            k=K, kill_factor=port.kill_factor,
+            start_keys=np.asarray([j_max0, j_sum0]),
+            restarts=self.restarts, retune=self.retune,
+            accept_band=self.accept_band, retune_bounds=self.retune_bounds,
+            sa_moves=sched.sa_moves, n_temps=n_temps,
+            seeder=RestartSeeder(self.seeds, start=self._restart_seed_base))
+        alive = ctrl.alive
+        cur_keys = np.broadcast_to(
             np.asarray([j_max0, j_sum0]), (K, 2)).copy()
-        cur_keys = best_seen.copy()
 
         idx_blocks = [b for b in np.array_split(np.arange(K), S) if b.size]
         blocks = [{
@@ -456,10 +524,7 @@ class ShardedPortfolioRefiner:
             "sa_moves": sched.sa_moves,
         }
         restarts: List[dict] = []
-        pool_moves = 0
-        killed = 0
         accepted = 0
-        n_temps = len(sched.temperatures)
 
         pool = None
         if backend == "mp" and S > 1:
@@ -575,55 +640,30 @@ class ShardedPortfolioRefiner:
                                      j_max=float(res["j_max"][li]),
                                      j_sum=float(res["j_sum"][li]),
                                      accepted_last=int(res["accepted"][li]))
-                # temperature boundary: the exact single-process rule over
-                # globally merged keys (restarts never feed the kill rule)
-                for i in range(K):
-                    if tuple(cur_keys[i]) < tuple(best_seen[i]):
-                        best_seen[i] = cur_keys[i]
-                newly_killed = 0
-                if port.kill_factor is not None:
-                    lead = best_seen[alive, 0].min()
-                    for i in range(1, K):
-                        if alive[i] \
-                                and best_seen[i, 0] > port.kill_factor * lead:
-                            alive[i] = False
-                            killed += 1
-                            newly_killed += 1
+                # temperature boundary: the shared protocol
+                # (:class:`~repro.core.refine.engine.BoundaryController`)
+                # over globally merged keys — best-seen update, the
+                # single-process kill rule (restarts never feed it), then
                 # adaptive control: killed ladders fund restarts from the
                 # leader; restart temperatures retune from accept rates
-                rem = n_temps - ti - 1
-                if self.restarts is not None and rem > 0:
-                    pool_moves += newly_killed * rem * sched.sa_moves
-                    if self.retune:
-                        lo, hi = self.accept_band
-                        blo, bhi = self.retune_bounds
-                        for r in restarts:
-                            if r["done"]:
-                                continue
-                            rate = r["accepted_last"] / max(1, sched.sa_moves)
-                            if rate < lo:
-                                r["t_mult"] = min(r["t_mult"] * 2.0, bhi)
-                            elif rate > hi:
-                                r["t_mult"] = max(r["t_mult"] * 0.5, blo)
-                    cost = rem * sched.sa_moves
-                    cap = math.inf if self.restarts == "auto" \
-                        else int(self.restarts) - len(restarts)
-                    # cost == 0 (sa_moves=0 schedules) would spawn forever:
-                    # a free restart buys zero proposals, so spawn none
-                    while cost > 0 and pool_moves >= cost and cap > 0:
-                        node, lead_j_sum = leader_state()
-                        restarts.append({
-                            "node": node.copy(),
-                            "rng": np.random.default_rng(
-                                self._restart_seed_base + len(restarts)),
-                            "done": False,
-                            "eps": float(1.0 / (1.0 + abs(lead_j_sum))),
-                            "t_mult": 1.0,
-                            "j_max": math.inf, "j_sum": math.inf,
-                            "accepted_last": 0,
-                        })
-                        pool_moves -= cost
-                        cap -= 1
+                ctrl.update_best(cur_keys)
+                newly_killed = ctrl.kill()
+
+                def spawn(seed: int) -> bool:
+                    node, lead_j_sum = leader_state()
+                    restarts.append({
+                        "node": node.copy(),
+                        "rng": np.random.default_rng(seed),
+                        "seed": seed,
+                        "done": False,
+                        "eps": float(1.0 / (1.0 + abs(lead_j_sum))),
+                        "t_mult": 1.0,
+                        "j_max": math.inf, "j_sum": math.inf,
+                        "accepted_last": 0,
+                    })
+                    return True
+
+                ctrl.adapt(ti, newly_killed, restarts, spawn)
         finally:
             if pool is not None:
                 pool.shutdown(wait=True)
@@ -637,5 +677,5 @@ class ShardedPortfolioRefiner:
         return {"nodes": nodes, "lad_j_max": cur_keys[:, 0].copy(),
                 "lad_j_sum": cur_keys[:, 1].copy(), "alive": alive,
                 "restarts": restarts, "sa_accepted": accepted,
-                "killed": killed, "pool_moves": pool_moves,
+                "killed": ctrl.killed, "pool_moves": ctrl.pool_moves,
                 "shards": S, "backend": backend}

@@ -580,3 +580,73 @@ def test_cart_create_beats_blocked_on_stencil():
                           cache=False)
     mapped = cart_create((8, 8), chips_per_pod=16, cache=False)
     assert (mapped.j_max, mapped.j_sum) <= (blocked.j_max, blocked.j_sum)
+
+
+# ---------------------------------------------------------------------------
+# cross-engine parity matrix: serial / mp / device portfolio spellings
+
+#: one spelling per execution engine, same portfolio configuration.  The
+#: execution backend is part of the cache identity (PR-5 faithfulness
+#: rule), so the keys must be pairwise DISTINCT while every family shows
+#: identical cache *behavior*: canonical key, cacheable, miss-then-hit.
+ENGINE_FAMILIES = {
+    "serial": "portfolio[k=3,sa_moves=30]:hyperplane",
+    "mp": "sharded[k=3,sa_moves=30,shards=2]:hyperplane",
+    "device": "device[k=3,sa_moves=30]:hyperplane",
+}
+
+
+def test_cross_engine_parity_matrix_keys_and_cache_behavior():
+    """Every engine spelling that accepts a backend/engine option behaves
+    identically through the plan layer: the spelled name IS the canonical
+    key (round-trips through parse_plan), the plan is cacheable, and a
+    repeat solve is a cache hit — while the keys stay pairwise distinct so
+    one engine's cached assignment is never served for another's."""
+    problem = _problem((8, 8), (16,) * 4)
+    keys = {}
+    for family, name in ENGINE_FAMILIES.items():
+        plan = parse_plan(name)
+        assert plan.key == name, f"{family}: non-canonical key"
+        assert parse_plan(plan.key).key == plan.key     # round-trip
+        assert plan.cacheable, f"{family}: must be cacheable"
+        assert get_mapper(name).plan_key == name
+        cache = PlanCache()
+        s1 = cache.solve(problem, plan)
+        s2 = cache.solve(problem, plan)
+        assert not s1.from_cache and s2.from_cache, \
+            f"{family}: miss-then-hit broken"
+        np.testing.assert_array_equal(s1.assignment, s2.assignment)
+        keys[family] = plan.key
+    assert len(set(keys.values())) == len(keys), \
+        f"engine keys must be pairwise distinct: {keys}"
+    # one shared cache never crosses engines: three solves, three misses
+    cache = PlanCache()
+    for name in ENGINE_FAMILIES.values():
+        cache.solve(problem, parse_plan(name))
+    assert cache.misses == len(ENGINE_FAMILIES) and cache.hits == 0
+
+
+def test_ad_hoc_device_instances_bypass_the_cache():
+    """A hand-built device refiner carrying an engine_factory has no
+    stable spelling (the factory is an opaque object), so its stage and
+    any plan containing it must be uncacheable — same contract as nested
+    foreign objects in test_unkeyable_plans_bypass_the_cache."""
+    from repro.core import DevicePortfolioRefiner
+    from repro.core.refine.device import DeviceLadderEngine
+    ad_hoc = DevicePortfolioRefiner(k=2, sa_moves=30,
+                                    engine_factory=DeviceLadderEngine)
+    stage = ad_hoc.as_stage()
+    assert not stage.cacheable
+    plan = MappingPlan([BaseStage("hyperplane"), stage])
+    assert not plan.cacheable
+    assert plan.to_mapper().plan_key is None
+    cache = PlanCache()
+    problem = _problem((8, 8), (16,) * 4)
+    s1 = cache.solve(problem, plan)
+    s2 = cache.solve(problem, plan)
+    assert not s1.from_cache and not s2.from_cache
+    assert cache.stats()["puts"] == 0
+    # the factory really is used: identical configuration, same result
+    np.testing.assert_array_equal(s1.assignment, s2.assignment)
+    # the same configuration without the factory is cacheable
+    assert DevicePortfolioRefiner(k=2, sa_moves=30).as_stage().cacheable

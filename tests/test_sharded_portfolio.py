@@ -333,3 +333,107 @@ def test_vmap_counts_refine_is_bit_identical():
         grid, stencil, a, num_nodes=len(KILL_SIZES))
     np.testing.assert_array_equal(off.assignment, on.assignment)
     assert off.stats["ladder_keys"] == on.stats["ladder_keys"]
+
+
+# ---------------------------------------------------------------------------
+# counts backend selection: explicit option, import-order independence
+
+
+def test_counts_backend_explicit_values_bit_equal():
+    """"numpy" and "jax" are explicit backend spellings; both produce the
+    same integer counts, and bogus values are rejected at construction."""
+    rng = np.random.default_rng(13)
+    grid = CartGrid((6, 5))
+    stencil = Stencil.nn_with_hops(2)
+    A = rng.integers(0, 4, size=(3, grid.size))
+    co_n, cn_n = stacked_crossing_counts(grid, stencil, A, 4,
+                                         use_jax="numpy")
+    co_j, cn_j = stacked_crossing_counts(grid, stencil, A, 4, use_jax="jax")
+    np.testing.assert_array_equal(co_n, co_j)
+    np.testing.assert_array_equal(cn_n, cn_j)
+    with pytest.raises(ValueError, match="vmap_counts"):
+        ShardedPortfolioRefiner(vmap_counts="cuda")
+    # the option is part of config(), so it is cache-identity material
+    assert ShardedPortfolioRefiner(
+        vmap_counts="numpy").config()["vmap_counts"] == "numpy"
+
+
+def test_counts_backend_auto_is_importability_not_import_order():
+    """Regression (satellite): "auto" used to consult sys.modules, so the
+    first call's backend depended on whether anything had imported jax
+    yet.  It must key on *importability* (find_spec) — stable for the
+    process regardless of import order."""
+    import importlib.util
+    import sys
+
+    from repro.core.refine import sharded as sh
+
+    assert "jax" in sys.modules        # the suite has long since imported it
+    spec_backup = sh._JAX_SPEC
+    real_find_spec = importlib.util.find_spec
+    try:
+        # simulate a jax-less environment; with jax still in sys.modules,
+        # the old sys.modules probe would (wrongly) say "jax"
+        sh._JAX_SPEC = None
+        importlib.util.find_spec = lambda name, *a: (
+            None if name == "jax" else real_find_spec(name, *a))
+        assert sh._jax_importable() is False
+        assert sh._resolve_counts_backend("auto") is False
+        # and the cached verdict is sticky: restoring find_spec without
+        # resetting the cache does not flip it mid-process
+        importlib.util.find_spec = real_find_spec
+        assert sh._resolve_counts_backend("auto") is False
+    finally:
+        importlib.util.find_spec = real_find_spec
+        sh._JAX_SPEC = spec_backup
+    # back in the real environment: importable, so "auto" means jax
+    sh._JAX_SPEC = None
+    try:
+        assert sh._resolve_counts_backend("auto") is True
+    finally:
+        sh._JAX_SPEC = spec_backup
+    # explicit spellings resolve independently of the probe
+    assert sh._resolve_counts_backend("numpy") is False
+    assert sh._resolve_counts_backend("jax") is True
+    assert sh._resolve_counts_backend(True) is True
+    assert sh._resolve_counts_backend(False) is False
+
+
+# ---------------------------------------------------------------------------
+# restart-ladder seeding: never collide with explicit user seeds
+
+
+def test_restart_seeder_warns_and_shifts_on_collision():
+    """A restart seed landing on an explicit portfolio seed must shift
+    past every colliding value with a warning — a restart ladder may never
+    replay an original trajectory."""
+    from repro.core.refine.engine import RestartSeeder
+    seeder = RestartSeeder((0, 5, 6), start=5)
+    with pytest.warns(UserWarning, match="collides with an explicit"):
+        assert seeder() == 7            # 5 and 6 are both taken
+    assert seeder() == 8                # stream continues past the shift
+    # the default stream (max+1) never collides: no warning expected
+    import warnings as _warnings
+    clean = RestartSeeder((3, 9, 4))
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        assert [clean() for _ in range(3)] == [10, 11, 12]
+    with pytest.raises(ValueError, match="at least one"):
+        RestartSeeder(())
+
+
+def test_restart_seeds_are_fresh_and_reported():
+    """End to end on a kill-heavy run with explicit seeds: the restart
+    seeds reported in stats are unique and disjoint from the originals."""
+    grid, stencil, a = _kill_instance(2)
+    res = ShardedPortfolioRefiner(
+        shards=2, seeds=(11, 3, 7, 5), kill_factor=1.0, restarts="auto",
+        backend="serial", rounds=1, max_passes=2, sa_moves=60,
+        temperatures=(4.0, 2.0, 1.0, 0.5, 0.25)).refine(
+        grid, stencil, a, num_nodes=len(KILL_SIZES))
+    assert res.stats["restarted"] > 0, "instance no longer kill-heavy"
+    restart_seeds = res.stats["restart_seeds"]
+    assert len(restart_seeds) == res.stats["restarted"]
+    assert len(set(restart_seeds)) == len(restart_seeds)
+    assert not set(restart_seeds) & {11, 3, 7, 5}
+    assert min(restart_seeds) > 11      # max(seeds)+1 counting upward
