@@ -608,6 +608,121 @@ def print_device_table(rows, sweep):
               f"{s['proposals_per_s']:10.0f}")
 
 
+# ---------------------------------------------------------------------------
+# hierarchical mapping suite (BENCH_8.json): multilevel quality at a
+# fraction of the flat portfolio's cost on a deep 4096-chip machine, plus
+# the depth sweep against the blocked baseline.
+
+#: claim (a) instance: a 2-level machine of 256 pods x 16 chips (the
+#: V5E_4RACK shape scaled out), 64x64 process grid.
+HIER_BIG = ("2d-64x64-4096chips", (64, 64), [16] * 256, "16x16")
+HIER_FLAT_SPELL = "portfolio[k=8]:hyperplane"
+HIER_BIG_SPELL = "hier[fanouts=16x16]:hyperplane"
+#: claim (a) bars: hier within 5% of the flat portfolio's J_max at <= 25%
+#: of its wall-time.
+HIER_JMAX_RATIO = 1.05
+HIER_TIME_FRAC = 0.25
+#: claim (b) instance + sweep: every tree depth must strictly beat the
+#: blocked baseline on J_sum.
+HIER_SWEEP = ("2d-32x32-1024chips", (32, 32), [16] * 64)
+HIER_SWEEP_DEPTHS = (2, 3, 4)
+HIER_SWEEP_SOLVER = "portfolio[k=4]"
+
+
+def _hier_cold(spell, grid, stencil, sizes):
+    """One cold solve: the subtree cache is cleared first so reported
+    wall-times never ride on hits warmed by a previous variant."""
+    from repro.core.refine import hier_subtree_cache
+    hier_subtree_cache().clear()
+    vm = get_mapper(spell)
+    t0 = time.perf_counter()
+    assign = vm.assignment(grid, stencil, sizes)
+    t = time.perf_counter() - t0
+    cost = evaluate(grid, stencil, assign, num_nodes=len(sizes))
+    return assign, cost, t, vm
+
+
+def run_hier_big():
+    """Claim (a) rows: blocked / flat portfolio / hier on the 4096-chip
+    instance, plus a warm hier re-solve (pure subtree-cache hits) to
+    report the elastic re-mesh latency."""
+    label, dims, sizes, fanouts = HIER_BIG
+    grid = CartGrid(dims)
+    stencil = Stencil.nearest_neighbor(grid.ndim)
+    rows = []
+    for tag, spell in (("blocked", "blocked"),
+                       ("flat", HIER_FLAT_SPELL),
+                       ("hier", HIER_BIG_SPELL)):
+        _, cost, t, vm = _hier_cold(spell, grid, stencil, sizes)
+        row = {"instance": label, "variant": tag, "spelling": spell,
+               "j_max": cost.j_max, "j_sum": cost.j_sum, "t_s": t}
+        if tag == "hier":
+            stats = vm.last_result.stats
+            row["solves"] = stats["solves"]
+            row["fanouts"] = fanouts
+            t0 = time.perf_counter()
+            get_mapper(spell).assignment(grid, stencil, sizes)
+            row["t_warm_s"] = time.perf_counter() - t0
+        rows.append(row)
+    return rows
+
+
+def run_hier_sweep():
+    """Claim (b) rows: ``hier[depth=d,solver=...]:blocked`` vs flat
+    blocked at every tree depth."""
+    label, dims, sizes = HIER_SWEEP
+    grid = CartGrid(dims)
+    stencil = Stencil.nearest_neighbor(grid.ndim)
+    blocked = get_mapper("blocked").assignment(grid, stencil, sizes)
+    ref = evaluate(grid, stencil, blocked, num_nodes=len(sizes))
+    rows = []
+    for depth in HIER_SWEEP_DEPTHS:
+        spell = f"hier[depth={depth},solver={HIER_SWEEP_SOLVER}]:blocked"
+        _, cost, t, _ = _hier_cold(spell, grid, stencil, sizes)
+        rows.append({"instance": label, "depth": depth, "spelling": spell,
+                     "j_max": cost.j_max, "j_sum": cost.j_sum, "t_s": t,
+                     "j_max_blocked": ref.j_max, "j_sum_blocked": ref.j_sum})
+    return rows
+
+
+def validate_hier_claims(big, sweep):
+    claims = []
+    by = {r["variant"]: r for r in big}
+    h, f = by["hier"], by["flat"]
+    r_jmax = h["j_max"] / f["j_max"]
+    r_time = h["t_s"] / f["t_s"]
+    ok = r_jmax <= HIER_JMAX_RATIO and r_time <= HIER_TIME_FRAC
+    claims.append(("PASS" if ok else "FAIL")
+                  + f": {HIER_BIG_SPELL} reaches J_max <= "
+                  f"{HIER_JMAX_RATIO:.2f}x of {HIER_FLAT_SPELL} at <= "
+                  f"{HIER_TIME_FRAC:.0%} of its wall-time on "
+                  f"{HIER_BIG[0]} (J_max ratio {r_jmax:.3f}, "
+                  f"time ratio {r_time:.3f})")
+    bad = [r for r in sweep if not r["j_sum"] < r["j_sum_blocked"]]
+    claims.append(("PASS" if not bad else "FAIL")
+                  + f": hier strictly beats flat blocked on J_sum at every "
+                  f"depth in {list(HIER_SWEEP_DEPTHS)} on {HIER_SWEEP[0]}"
+                  + (f" (violations: {[(r['depth'], r['j_sum']) for r in bad]})"
+                     if bad else ""))
+    return claims
+
+
+def print_hier_table(big, sweep):
+    print(f"{'variant':8s} {'spelling':42s} {'J_max':>6s} {'J_sum':>7s} "
+          f"{'t':>8s} {'t_warm':>8s}")
+    for r in big:
+        warm = f"{r['t_warm_s']:7.2f}s" if "t_warm_s" in r else f"{'-':>8s}"
+        print(f"{r['variant']:8s} {r['spelling']:42s} {r['j_max']:6.0f} "
+              f"{r['j_sum']:7.0f} {r['t_s']:7.2f}s {warm}")
+    print()
+    print(f"{'depth':5s} {'spelling':42s} {'J_max':>6s} {'J_sum':>7s} "
+          f"{'Jsum_blk':>8s} {'t':>8s}")
+    for r in sweep:
+        print(f"{r['depth']:<5d} {r['spelling']:42s} {r['j_max']:6.0f} "
+              f"{r['j_sum']:7.0f} {r['j_sum_blocked']:8.0f} "
+              f"{r['t_s']:7.2f}s")
+
+
 def _portfolio_k(variant):
     m = re.search(r"\bk=(\d+)", variant)
     if m:
@@ -672,8 +787,29 @@ def main():
                          "variant sweep (dominance vs the serial portfolio "
                          "at equal proposal budget + the K-scaling sweep; "
                          "--json emits the BENCH_7.json payload)")
+    ap.add_argument("--hier", action="store_true",
+                    help="run the hierarchical mapping suite instead of the "
+                         "variant sweep (hier-vs-flat-portfolio on a "
+                         "4096-chip 2-level machine + the depth sweep vs "
+                         "blocked; --json emits the BENCH_8.json payload)")
     ap.add_argument("--json", default=None, help="also dump rows as JSON")
     args = ap.parse_args()
+
+    if args.hier:
+        big = run_hier_big()
+        sweep = run_hier_sweep()
+        print_hier_table(big, sweep)
+        print()
+        claims = validate_hier_claims(big, sweep)
+        for c in claims:
+            print("# " + c)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump({"big": big, "depth_sweep": sweep,
+                           "claims": claims}, f, indent=1, default=float)
+        if any(c.startswith("FAIL") for c in claims):
+            raise SystemExit(1)
+        return
 
     if args.device:
         from repro.core.refine import jax_ready

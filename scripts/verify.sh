@@ -24,7 +24,8 @@ python -m pytest -q tests/test_refine_batch.py tests/test_portfolio.py \
     tests/test_sharded_portfolio.py \
     tests/test_run_temperature_props.py tests/test_device_portfolio.py \
     tests/test_elastic_remesh.py tests/test_linksim_replay.py \
-    tests/test_plan.py tests/test_repair.py
+    tests/test_plan.py tests/test_repair.py \
+    tests/test_hier.py tests/test_topology_tree.py
 
 # smoke the whole refinement registry (refined: / refined2: / annealed: /
 # portfolio: / sharded:) incl. the linksim replay columns (ragged rows
@@ -89,6 +90,38 @@ c = evaluate(grid, stencil, a1, num_nodes=4)
 print(f"device smoke OK: backend={stats['backend']} "
       f"J=(max {c.j_max:.0f}, sum {c.j_sum:.0f}) "
       f"proposals={stats['proposals']}")
+EOF
+
+# hierarchical mapping suite: hier-vs-flat-portfolio on the 4096-chip
+# 2-level machine (J_max within 5% at <= 25% of the wall-time) + the
+# depth sweep vs blocked (strict J_sum win at every depth) — exit 1 on
+# any FAIL — and the machine-readable BENCH_8.json perf snapshot
+mkdir -p results
+PYTHONPATH=src python -m benchmarks.refine_suite --hier \
+    --json results/BENCH_8.json
+
+# hier smoke: the hier: grammar spelling end to end — recursive restricted
+# solves, subtree-cache hits on an identical re-mesh, sizes preserved
+PYTHONPATH=src python - <<'EOF'
+import numpy as np
+from repro.core import CartGrid, Stencil, evaluate, get_mapper
+from repro.core.refine import hier_subtree_cache
+
+grid, stencil, sizes = CartGrid((8, 8)), Stencil.nearest_neighbor(2), \
+    [16] * 4
+hier_subtree_cache().clear()
+vm = get_mapper("hier:hyperplane")
+a1 = vm.assignment(grid, stencil, sizes)
+stats = vm.last_result.stats
+assert stats["backend"].startswith("hier["), stats["backend"]
+assert stats["solves"] >= 1 and stats["cache_hits"] == 0
+assert np.bincount(a1, minlength=4).tolist() == sizes
+a2 = get_mapper("hier:hyperplane").assignment(grid, stencil, sizes)
+np.testing.assert_array_equal(a1, a2)      # warm re-mesh: pure cache hits
+c = evaluate(grid, stencil, a1, num_nodes=4)
+print(f"hier smoke OK: backend={stats['backend']} "
+      f"J=(max {c.j_max:.0f}, sum {c.j_sum:.0f}) "
+      f"solves={stats['solves']} cache={hier_subtree_cache().stats()}")
 EOF
 
 # warm-start repair suite: repair-vs-cold on the loss/add/slow churn

@@ -30,7 +30,8 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..topology.machine import MachineSpec, RaggedMachineSpec
+from ..topology.machine import LevelSpec, MachineSpec, RaggedMachineSpec
+
 from .hlo import CollectiveStat
 
 __all__ = ["LinkReport", "simulate", "stencil_collectives",
@@ -44,12 +45,20 @@ class LinkReport:
     dci_pod_egress: np.ndarray          # (num_pods,)
     ici_total: float = 0.0
     dci_total: float = 0.0
+    #: per grouping level (``machine.levels``): egress bytes per level
+    #: node, attributed wherever the two endpoints' ancestors at that
+    #: level differ.  The finest (pod) level always equals
+    #: ``dci_pod_egress`` — the parity invariant the tests pin.
+    level_egress: Dict[str, np.ndarray] = field(default_factory=dict)
 
     def max_ici_link(self) -> float:
         return max(self.ici_link_bytes.values(), default=0.0)
 
     def max_dci_pod(self) -> float:
         return float(self.dci_pod_egress.max(initial=0.0))
+
+    def max_level_egress(self, level: str) -> float:
+        return float(self.level_egress[level].max(initial=0.0))
 
     def times(self, machine: MachineSpec) -> Dict[str, float]:
         t_ici = self.max_ici_link() / machine.ici_bw
@@ -77,6 +86,10 @@ def _route(machine: MachineSpec, report: LinkReport, a: int, b: int, bytes_: flo
         report.dci_pair_bytes[key] += bytes_
         report.dci_pod_egress[pa] += bytes_
         report.dci_total += bytes_
+        for name, of_pod in getattr(report, "_level_of_pod", {}).items():
+            ga, gb = int(of_pod[pa]), int(of_pod[pb])
+            if ga != gb:
+                report.level_egress[name][ga] += bytes_
         return
     path = machine.torus_hop_path(a, b)
     for link in path:
@@ -97,6 +110,17 @@ def simulate(collectives: Iterable[CollectiveStat], layout_flat: np.ndarray,
     report = LinkReport(ici_link_bytes=defaultdict(float),
                         dci_pair_bytes=defaultdict(float),
                         dci_pod_egress=np.zeros(machine.num_pods))
+    if machine.levels:
+        # per-level replay: precompute each pod's ancestor at every
+        # grouping level once (pods are contiguous under every subtree)
+        tree = machine.topology_tree()
+        pods = np.arange(machine.num_pods)
+        report._level_of_pod = {
+            spec.name: pods // tree._pod_stride(lvl)
+            for lvl, spec in enumerate(machine.levels, start=1)}
+        report.level_egress = {
+            spec.name: np.zeros(tree.num_nodes_at(lvl))
+            for lvl, spec in enumerate(machine.levels, start=1)}
     for c in collectives:
         groups = c.groups
         if c.pairs is not None:
@@ -174,35 +198,72 @@ def stencil_collectives(grid, stencil, weighted=True) -> List[CollectiveStat]:
     return colls
 
 
+def _near_square_torus(n: int) -> Tuple[int, ...]:
+    """Factor ``n`` chips into the most-square 2-d torus (largest divisor
+    ``a <= sqrt(n)`` -> ``(n//a, a)``); primes (and 1) stay a 1-d ring.
+    256 -> (16, 16), matching ``V5E_POD``'s real intra-pod topology."""
+    a = 1
+    for d in range(int(math.isqrt(n)), 1, -1):
+        if n % d == 0:
+            a = d
+            break
+    return (n // a, a) if a > 1 else (n,)
+
+
 def machine_for_nodes(node_sizes: Sequence[int],
-                      name: str = "stencil-replay") -> MachineSpec:
-    """Pods-as-nodes machine: ``len(sizes)`` pods of a 1-d ICI ring each.
-    Homogeneous allocations get a uniform :class:`MachineSpec`; ragged
-    ones (per-pod torus sizes — elastic pods after chip loss) get a
-    :class:`~repro.topology.machine.RaggedMachineSpec`, so the elastic
-    path closes the same ``dci_total == J_sum`` / ``max_dci_pod == J_max``
-    loop the homogeneous one does."""
+                      name: str = "stencil-replay",
+                      torus: Optional[Sequence[int]] = None,
+                      levels: Sequence[LevelSpec] = ()) -> MachineSpec:
+    """Pods-as-nodes machine for replaying mapping assignments.
+
+    Homogeneous allocations get a uniform :class:`MachineSpec` whose
+    intra-pod torus is the *near-square* factorization of the pod size
+    (``[256]*k`` -> a (16,16) torus, V5E_POD's real shape — not the 1-d
+    ring the pre-fix code modeled); pass ``torus`` to override the shape
+    explicitly.  Ragged allocations (per-pod torus sizes — elastic pods
+    after chip loss) get a :class:`~repro.topology.machine.RaggedMachineSpec`
+    (1-d per-pod rings; an explicit ``torus`` is rejected there), so the
+    elastic path closes the same ``dci_total == J_sum`` /
+    ``max_dci_pod == J_max`` loop the homogeneous one does.  ``levels``
+    (grouping :class:`~repro.topology.machine.LevelSpec` s, fan-outs
+    multiplying to the pod count) switches on the per-level
+    ``LinkReport.level_egress`` replay."""
     sizes = [int(s) for s in node_sizes]
     if any(s < 1 for s in sizes):
         raise ValueError(f"node sizes must be positive, got {sizes}")
     if len(set(sizes)) == 1:
-        return MachineSpec(name=name, num_pods=len(sizes), torus=(sizes[0],))
-    return RaggedMachineSpec(name=name, pod_sizes=tuple(sizes))
+        shape = _near_square_torus(sizes[0]) if torus is None \
+            else tuple(int(t) for t in torus)
+        if math.prod(shape) != sizes[0]:
+            raise ValueError(f"torus {shape} does not hold a pod of "
+                             f"{sizes[0]} chips")
+        return MachineSpec(name=name, num_pods=len(sizes), torus=shape,
+                           levels=tuple(levels))
+    if torus is not None:
+        raise ValueError("ragged pods route on per-pod 1-d rings; "
+                         "an explicit torus shape only applies to "
+                         "homogeneous allocations")
+    return RaggedMachineSpec(name=name, pod_sizes=tuple(sizes),
+                             levels=tuple(levels))
 
 
 def replay_assignment(grid, stencil, node_of_pos: np.ndarray,
                       node_sizes: Sequence[int], weighted=True,
-                      machine: Optional[MachineSpec] = None) -> LinkReport:
+                      machine: Optional[MachineSpec] = None,
+                      levels: Sequence[LevelSpec] = ()) -> LinkReport:
     """Simulate a mapping's stencil traffic on physical links.
 
     Ranks are assigned blocked (rank r on node r // n) with each node's
     grid positions taken in row-major order — the same convention as
     ``remap.device_layout(intra_order="rowmajor")`` — so the logical
     position -> chip layout is fully determined by the assignment.
+    ``levels`` (when no explicit ``machine`` is given) builds the replay
+    machine with a grouping hierarchy, so the report additionally carries
+    per-level DCI egress (``LinkReport.level_egress``).
     """
     from ..core.cost import rowmajor_rank_layout
     node_of_pos = np.asarray(node_of_pos, dtype=np.int64)
     if machine is None:
-        machine = machine_for_nodes(node_sizes)
+        machine = machine_for_nodes(node_sizes, levels=levels)
     return simulate(stencil_collectives(grid, stencil, weighted=weighted),
                     rowmajor_rank_layout(node_of_pos), machine)

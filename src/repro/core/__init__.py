@@ -4,18 +4,19 @@ from .cost import MappingCost, blocked_assignment, evaluate, node_of_rank_blocke
 from .cost_delta import (BatchSwapDelta, Delta, IncrementalCost,
                          NeighborTable, PortfolioCost, PortfolioSwapDelta)
 from .grid import CartGrid, dims_create
-from .mapping import (ANNEALED_PREFIX, DEVICE_PREFIX, MAPPERS,
+from .mapping import (ANNEALED_PREFIX, DEVICE_PREFIX, HIER_PREFIX, MAPPERS,
                       PORTFOLIO_PREFIX, REFINE_PREFIXES, REFINED_PREFIX,
                       SCHEDULED_PREFIX, SHARDED_PREFIX, BlockedMapper,
                       GraphGreedyMapper, HyperplaneMapper, KDTreeMapper,
                       Mapper, MapperInapplicable, NodecartMapper,
                       RandomMapper, StencilStripsMapper, available_mappers,
                       get_mapper, parse_mapper_options, split_mapper_name)
-from .refine import (BaseStage, DevicePortfolioRefiner, PortfolioRefiner,
+from .refine import (BaseStage, DevicePortfolioRefiner, HierRefiner,
+                     MaskedGrid, PortfolioRefiner,
                      RefinedMapper, RefineResult, RefineStage,
                      ScheduledRefiner, ShardedPortfolioRefiner, Stage,
-                     StageResult, SwapRefiner, refine_assignment,
-                     stacked_crossing_counts)
+                     StageResult, SwapRefiner, hier_subtree_cache,
+                     refine_assignment, stacked_crossing_counts)
 from .plan import (CartResult, MappingPlan, MappingProblem, MappingSolution,
                    PlanCache, cart_create, default_plan_cache, parse_plan)
 from .remap import (device_layout, elastic_portfolio_plan, ensure_refined,
@@ -32,13 +33,15 @@ __all__ = [
     "PortfolioCost", "PortfolioSwapDelta",
     "Mapper", "MapperInapplicable", "MAPPERS", "REFINED_PREFIX",
     "SCHEDULED_PREFIX", "ANNEALED_PREFIX", "PORTFOLIO_PREFIX",
-    "SHARDED_PREFIX", "DEVICE_PREFIX", "REFINE_PREFIXES", "get_mapper",
+    "SHARDED_PREFIX", "DEVICE_PREFIX", "HIER_PREFIX", "REFINE_PREFIXES",
+    "get_mapper",
     "available_mappers",
     "split_mapper_name", "parse_mapper_options",
     "BlockedMapper", "RandomMapper", "NodecartMapper", "HyperplaneMapper",
     "KDTreeMapper", "StencilStripsMapper", "GraphGreedyMapper",
     "SwapRefiner", "ScheduledRefiner", "PortfolioRefiner",
     "ShardedPortfolioRefiner", "DevicePortfolioRefiner",
+    "HierRefiner", "MaskedGrid", "hier_subtree_cache",
     "stacked_crossing_counts", "RefineResult",
     "refine_assignment", "RefinedMapper",
     "Stage", "StageResult", "BaseStage", "RefineStage",

@@ -39,6 +39,14 @@ Names resolve in two layers:
                 crossing-count state, one ``lax.scan`` per
                 temperature); same boundary protocol, scales to
                 K=1024; delegates to ``portfolio:`` without jax
+   hier:        :class:`~repro.core.refine.HierRefiner` — recursive   (J_max, J_sum)
+                multilevel mapping down a topology tree: group the
+                nodes by per-level fan-outs
+                (``hier[fanouts=16x16]:``), solve each level's much
+                smaller restricted problem with any registered
+                refiner (default ``annealed``; per level via
+                ``hier[levels=rack:portfolio[k=8],pod:annealed]:``),
+                recurse into each subtree
    ============ ===================================================== =========
 
 Every spelling accepted here is accepted everywhere a mapper name appears:
@@ -104,14 +112,23 @@ PORTFOLIO_PREFIX = "portfolio:"
 SHARDED_PREFIX = "sharded:"
 #: Prefix for the device-resident (jax) annealing portfolio engine.
 DEVICE_PREFIX = "device:"
+#: Prefix for the recursive multilevel (topology-tree) mapping stage.
+HIER_PREFIX = "hier:"
 
 #: All refinement prefixes, in registry-listing order.
 REFINE_PREFIXES = (REFINED_PREFIX, SCHEDULED_PREFIX, ANNEALED_PREFIX,
-                   PORTFOLIO_PREFIX, SHARDED_PREFIX, DEVICE_PREFIX)
+                   PORTFOLIO_PREFIX, SHARDED_PREFIX, DEVICE_PREFIX,
+                   HIER_PREFIX)
 
-#: ``<prefix>[k=8,...]:<base>`` — the option-bearing prefixed spelling.
-_PREFIXED_NAME_RE = re.compile(
-    r"^(?P<prefix>[a-z][a-z0-9_]*)(?:\[(?P<opts>[^\]]*)\])?:(?P<base>.+)$")
+#: the leading ``<prefix>`` of an option-bearing prefixed spelling; the
+#: bracket body is scanned with balanced-depth counting (not a regex) so
+#: option values may themselves carry brackets
+#: (``hier[levels=rack:portfolio[k=8],pod:annealed]:<base>``).
+_PREFIX_HEAD_RE = re.compile(r"^(?P<prefix>[a-z][a-z0-9_]*)")
+
+#: a plain option key (what may appear left of ``=``); anything else left
+#: of the first ``=`` marks a continuation of the previous option's value.
+_OPTION_KEY_RE = re.compile(r"^[A-Za-z_][A-Za-z0-9_]*$")
 
 
 def _coerce_option(value: str):
@@ -138,20 +155,56 @@ def _spelling(name: Optional[str]) -> str:
     return f" in mapper name {name!r}" if name else ""
 
 
+def _split_depth0(body: str) -> list:
+    """Split on commas at bracket depth 0 only, so option values may carry
+    bracketed sub-spellings (``levels=rack:portfolio[k=8,seed=3]``)."""
+    parts, cur, depth = [], [], 0
+    for ch in body:
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+            continue
+        if ch == "[":
+            depth += 1
+        elif ch == "]":
+            depth = max(0, depth - 1)
+        cur.append(ch)
+    parts.append("".join(cur))
+    return parts
+
+
 def parse_mapper_options(opts: str,
                          name: Optional[str] = None) -> Dict[str, object]:
     """Parse a bracket-option body (``"k=8,seed=-3,tol=1e-9"``) into kwargs.
-    ``name`` (the full spelling the body came from) is quoted in every
-    error message so a failure deep in a chained prefix stays
+
+    Splitting happens on depth-0 commas only, and an item that is *not* a
+    plain ``key=value`` (its text left of the first ``=`` is no identifier,
+    or it has no ``=`` but contains a ``:`` sub-spelling) **continues the
+    previous option's value** — that is how
+    ``hier[levels=rack:portfolio[k=8],pod:annealed]`` keeps
+    ``pod:annealed`` inside ``levels`` while a bare ``annealed[k]`` still
+    raises.  ``name`` (the full spelling the body came from) is quoted in
+    every error message so a failure deep in a chained prefix stays
     attributable."""
     out: Dict[str, object] = {}
-    for item in opts.split(","):
+    last_key: Optional[str] = None
+    for item in _split_depth0(opts):
         item = item.strip()
         if not item:
             continue
         key, sep, value = item.partition("=")
         key = key.strip()
-        if not sep or not key:
+        plain_key = bool(sep) and bool(_OPTION_KEY_RE.match(key))
+        if not plain_key:
+            # continuation of the previous value (a comma inside a nested
+            # spelling, e.g. per-level solver lists) — only recognizable
+            # as such when it carries a `:`-sub-spelling or an `=` deeper
+            # inside; a bare word stays the pinned key=value error.
+            if last_key is not None and (":" in item or sep):
+                prev = out[last_key]
+                out[last_key] = (prev if isinstance(prev, str)
+                                 else str(prev)) + "," + item
+                continue
             raise ValueError(
                 f"bad mapper option {item!r}{_spelling(name)}: "
                 f"expected key=value")
@@ -159,19 +212,30 @@ def parse_mapper_options(opts: str,
             raise ValueError(
                 f"duplicate mapper option {key!r}{_spelling(name)}")
         out[key] = _coerce_option(value.strip())
+        last_key = key
     return out
-
-
-#: comma outside a bracket-option body — the list separator for
-#: "--mappers"/"--variants"-style CLI values.
-_LIST_SEP_RE = re.compile(r",(?![^\[]*\])")
 
 
 def split_mapper_list(spec: str) -> list:
     """Split a comma-separated list of mapper spellings on commas *outside*
     bracket options: ``"blocked,portfolio[k=8,seed=3]:kdtree"`` -> two
-    entries.  The one splitter the CLI drivers share."""
-    return [v for v in _LIST_SEP_RE.split(spec) if v]
+    entries (depth-counted, so nested brackets nest).  The one splitter
+    the CLI drivers share."""
+    parts, cur, depth = [], [], 0
+    for ch in spec:
+        if ch == "," and depth == 0:
+            if cur:
+                parts.append("".join(cur))
+            cur = []
+            continue
+        if ch == "[":
+            depth += 1
+        elif ch == "]":
+            depth = max(0, depth - 1)
+        cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return parts
 
 
 def split_mapper_name(name: str, full_name: Optional[str] = None) \
@@ -179,21 +243,42 @@ def split_mapper_name(name: str, full_name: Optional[str] = None) \
     """Split a refinement-prefixed spelling into ``(prefix, options,
     base_name)``; None if ``name`` is not a refinement spelling.  The
     prefix is returned without the colon (``"portfolio"``), options as a
-    kwargs dict (empty when no bracket is present).  ``full_name`` names
+    kwargs dict (empty when no bracket is present).  The bracket body is
+    scanned with balanced-depth counting, so values may nest brackets
+    (``hier[levels=rack:portfolio[k=8]]:<base>``).  ``full_name`` names
     the enclosing spelling in option-parse errors (chained prefixes hand
     the original spelling down)."""
-    m = _PREFIXED_NAME_RE.match(name)
+    m = _PREFIX_HEAD_RE.match(name)
     if m is None or m.group("prefix") + ":" not in REFINE_PREFIXES:
         return None
-    return (m.group("prefix"),
-            parse_mapper_options(m.group("opts") or "",
-                                 name=full_name or name),
-            m.group("base"))
+    prefix = m.group("prefix")
+    i = m.end()
+    opts = ""
+    if i < len(name) and name[i] == "[":
+        depth = 0
+        j = i
+        for j in range(i, len(name)):
+            if name[j] == "[":
+                depth += 1
+            elif name[j] == "]":
+                depth -= 1
+                if depth == 0:
+                    break
+        if depth != 0:                    # unbalanced bracket: not ours
+            return None
+        opts = name[i + 1:j]
+        i = j + 1
+    if i >= len(name) or name[i] != ":" or i + 1 >= len(name):
+        return None
+    return (prefix,
+            parse_mapper_options(opts, name=full_name or name),
+            name[i + 1:])
 
 
 def _make_refiner(prefix: str, kwargs: Dict[str, object]):
-    from ..refine import (DevicePortfolioRefiner, PortfolioRefiner,
-                          ScheduledRefiner, ShardedPortfolioRefiner)
+    from ..refine import (DevicePortfolioRefiner, HierRefiner,
+                          PortfolioRefiner, ScheduledRefiner,
+                          ShardedPortfolioRefiner)
     if prefix == "refined":
         return None                       # RefinedMapper's default SwapRefiner
     if prefix == "refined2":
@@ -206,6 +291,8 @@ def _make_refiner(prefix: str, kwargs: Dict[str, object]):
         return ShardedPortfolioRefiner(**kwargs)
     if prefix == "device":
         return DevicePortfolioRefiner(**kwargs)
+    if prefix == "hier":
+        return HierRefiner(**kwargs)
     raise KeyError(prefix)  # pragma: no cover - guarded by split_mapper_name
 
 
@@ -243,7 +330,7 @@ __all__ = [
     "BlockedMapper", "RandomMapper", "NodecartMapper", "HyperplaneMapper",
     "KDTreeMapper", "StencilStripsMapper", "GraphGreedyMapper",
     "MAPPERS", "REFINED_PREFIX", "SCHEDULED_PREFIX", "ANNEALED_PREFIX",
-    "PORTFOLIO_PREFIX", "SHARDED_PREFIX", "DEVICE_PREFIX",
+    "PORTFOLIO_PREFIX", "SHARDED_PREFIX", "DEVICE_PREFIX", "HIER_PREFIX",
     "REFINE_PREFIXES", "get_mapper",
     "available_mappers", "split_mapper_name", "split_mapper_list",
     "parse_mapper_options",

@@ -77,7 +77,7 @@ from .refine.stage import BaseStage, RefineStage, Stage
 __all__ = ["MappingProblem", "MappingPlan", "MappingSolution", "parse_plan",
            "PlanCache", "default_plan_cache", "resolve_cache",
            "blocked_node_sizes", "cart_create", "CartResult",
-           "DEFAULT_CART_PLAN", "DEFAULT_CACHE_DIR"]
+           "DEFAULT_CART_PLAN", "DEFAULT_CACHE_DIR", "default_cache_dir"]
 
 
 def blocked_node_sizes(p: int, chips_per_pod: int) -> Tuple[int, ...]:
@@ -93,9 +93,19 @@ def blocked_node_sizes(p: int, chips_per_pod: int) -> Tuple[int, ...]:
 #: stack always tracks the lexicographic pair — but part of the cache key).
 _OBJECTIVES = ("lex", "j_sum", "j_max")
 
-#: default disk-spill location (override with $REPRO_MAPS_CACHE_DIR).
-DEFAULT_CACHE_DIR = Path(os.environ.get("REPRO_MAPS_CACHE_DIR",
-                                        "~/.cache/repro-maps")).expanduser()
+def default_cache_dir() -> Path:
+    """The disk-spill location, resolved *now*: ``$REPRO_MAPS_CACHE_DIR``
+    if set, else ``~/.cache/repro-maps``.  Read at every
+    :class:`PlanCache` construction — never at import time — so tests and
+    embedders that set the env var after importing this module still get
+    their spill where they asked for it."""
+    return Path(os.environ.get("REPRO_MAPS_CACHE_DIR",
+                               "~/.cache/repro-maps")).expanduser()
+
+
+#: import-time snapshot, kept for backwards compatibility only — the spill
+#: path that actually gets used is :func:`default_cache_dir`'s live value.
+DEFAULT_CACHE_DIR = default_cache_dir()
 
 #: the facade's default plan: the annealed schedule is the best
 #: single-ladder quality/latency point for a one-call entry (swap
@@ -418,7 +428,7 @@ class PlanCache:
             raise ValueError("maxsize must be >= 1")
         self.maxsize = int(maxsize)
         if disk_dir is True:
-            disk_dir = DEFAULT_CACHE_DIR
+            disk_dir = default_cache_dir()
         self.disk_dir = None if not disk_dir else Path(disk_dir).expanduser()
         self._mem: "OrderedDict[str, dict]" = OrderedDict()
         self._lock = threading.Lock()

@@ -49,11 +49,13 @@ from .engine import (BoundaryController, BoundaryReport, LadderEngine,
 from .portfolio import PortfolioRefiner, run_temperature
 from .sharded import ShardedPortfolioRefiner, stacked_crossing_counts
 from .device import DeviceLadderEngine, DevicePortfolioRefiner, jax_ready
+from .hier import HierRefiner, MaskedGrid, hier_subtree_cache
 from .stage import BaseStage, RefineStage, Stage, StageResult
 from .mapper import RefinedMapper
 
 __all__ = ["SwapRefiner", "ScheduledRefiner", "PortfolioRefiner",
            "ShardedPortfolioRefiner", "DevicePortfolioRefiner",
+           "HierRefiner", "MaskedGrid", "hier_subtree_cache",
            "run_temperature", "stacked_crossing_counts",
            "LadderEngine", "SerialLadderEngine", "DeviceLadderEngine",
            "BoundaryController", "BoundaryReport", "RestartSeeder",

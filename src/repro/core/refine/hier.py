@@ -1,0 +1,411 @@
+"""Recursive multilevel mapping down a topology tree (``hier:``).
+
+Flat refinement treats the machine as one level of N nodes; real machines
+are trees (rack → pod → chip), and *High-Quality Hierarchical Process
+Mapping* (Faraj et al., 2001.07134) shows the wins come from solving the
+mapping level by level: group the nodes by the topology's per-level
+fan-outs, solve the *much smaller* top-level problem (children as
+"nodes"), then recurse into each child with exactly the grid region it
+was assigned.  :class:`HierRefiner` is that scheme built out of this
+repo's existing refiners:
+
+* the node axis is grouped by ``fanouts`` (e.g. ``16x16`` — 16 groups of
+  16 pods; auto-derived via :func:`~repro.core.grid.dims_create` from
+  ``depth`` when unspecified), matching a
+  :class:`~repro.topology.machine.TopologyTree`'s grouping levels;
+* every restricted subproblem is the *induced subgraph* of the stencil
+  graph on the subtree's grid region, realized by :class:`MaskedGrid` — a
+  :class:`~repro.core.grid.CartGrid` view whose ``shift_ranks`` declares
+  edges valid only when **both** endpoints are inside the region.
+  Positions outside get a zero-degree ghost label, so they carry no load,
+  never enter a boundary/frontier, and are never proposed for a swap —
+  the existing refiners run on subproblems completely unmodified;
+* each level's restricted problem is solved by any registered refine
+  spelling (default ``annealed``; per level via
+  ``hier[levels=rack:portfolio[k=8],pod:annealed]:<base>``), seeded from
+  the incoming assignment with a keep-if-capacity repair so the base
+  mapper's spatial structure survives into every subtree;
+* sub-solutions are individually cached (content-keyed over the region,
+  capacities, seed, stencil, and solver), so an elastic re-mesh that
+  churns one subtree re-solves only that subtree — every untouched
+  sibling is a cache hit;
+* an optional bounded global polish pass (``polish=<swap budget>``) runs
+  the deterministic scheduled refiner on the composed assignment to fix
+  cross-subtree J_max.
+
+Usage::
+
+    get_mapper("hier:hyperplane")                       # auto 2-level
+    get_mapper("hier[fanouts=16x16]:hyperplane")        # explicit tree
+    get_mapper("hier[levels=rack:portfolio[k=8],pod:annealed]:kdtree")
+    HierRefiner(fanouts="4x4", polish=64).refine(grid, stencil, a, n)
+"""
+from __future__ import annotations
+
+import copy
+import hashlib
+import math
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..cost import evaluate
+from ..grid import CartGrid, dims_create
+from ..stencil import Stencil
+from .swap import RefineResult, SwapRefiner
+
+__all__ = ["MaskedGrid", "HierRefiner", "hier_subtree_cache"]
+
+
+class MaskedGrid(CartGrid):
+    """A grid view restricted to an ``active`` position subset: the
+    induced subgraph of the stencil graph.
+
+    ``shift_ranks`` ANDs edge validity with membership of *both*
+    endpoints, so inactive positions have zero valid edges — zero load,
+    never boundary, never swapped — which is what lets every flat refiner
+    solve a subtree's restricted problem unchanged.  Geometry
+    (``dims``/``size``/coords) is the base grid's, so position indices
+    stay global.  NB: dataclass equality compares ``dims``/``periodic``
+    only — treat masked grids as identity objects, not value objects.
+    """
+
+    def __init__(self, base: CartGrid, active: np.ndarray):
+        super().__init__(dims=base.dims, periodic=base.periodic)
+        active = np.asarray(active, dtype=bool)
+        if active.shape != (base.size,):
+            raise ValueError(f"active mask must be ({base.size},), "
+                             f"got {active.shape}")
+        object.__setattr__(self, "active", active.copy())
+
+    def shift_ranks(self, offset: Sequence[int]) -> Tuple[np.ndarray, np.ndarray]:
+        valid, tr = super().shift_ranks(offset)
+        return valid & self.active & self.active[tr], tr
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (f"MaskedGrid(dims={self.dims}, "
+                f"active={int(self.active.sum())}/{self.size})")
+
+
+# ---------------------------------------------------------------------------
+# option parsing
+
+
+def _parse_fanouts(fanouts, num_nodes: int, depth: int) -> Tuple[int, ...]:
+    """``"16x16"`` / ``16`` / None -> per-level fan-outs multiplying to
+    ``num_nodes`` (None: balanced ``dims_create`` split of ``depth``
+    levels)."""
+    if fanouts is None:
+        return dims_create(num_nodes, max(1, int(depth)))
+    if isinstance(fanouts, int):
+        fo: Tuple[int, ...] = (fanouts,)
+    else:
+        try:
+            fo = tuple(int(t) for t in str(fanouts).split("x"))
+        except ValueError:
+            raise ValueError(f"bad hier fanouts {fanouts!r}: expected "
+                             "'<f1>x<f2>x...' (e.g. fanouts=16x16)")
+    if any(f < 1 for f in fo) or math.prod(fo) != num_nodes:
+        raise ValueError(f"hier fanouts {fo} must be positive and multiply "
+                         f"to the node count {num_nodes}")
+    return fo
+
+
+def _parse_levels(levels: Optional[str], n_levels: int) \
+        -> List[Tuple[str, Optional[str]]]:
+    """``"rack:portfolio[k=8],pod:annealed"`` -> positional
+    ``(name, solver-or-None)`` pairs, one per grouping level."""
+    if not levels:
+        return [(f"l{i + 1}", None) for i in range(n_levels)]
+    from ..mapping import split_mapper_list
+    entries = split_mapper_list(str(levels))
+    if len(entries) != n_levels:
+        raise ValueError(f"hier levels= names {len(entries)} levels "
+                         f"({levels!r}) but the tree has {n_levels}")
+    out = []
+    for e in entries:
+        name, sep, solver = e.partition(":")
+        name = name.strip()
+        if not name:
+            raise ValueError(f"bad hier level entry {e!r} in {levels!r}")
+        out.append((name, solver.strip() if sep and solver.strip() else None))
+    return out
+
+
+def _solver_refiners(spelling: str, context: str):
+    """A per-level solver spelling — a refine-prefix chain *without* a
+    base (``"annealed"``, ``"portfolio[k=8]"``,
+    ``"annealed[sa_moves=50]:refined"``) — as refiner instances,
+    inner-first."""
+    from ..mapping import REFINE_PREFIXES, _make_refiner, split_mapper_name
+    sentinel = "__hier_base__"
+    chain, rest = [], f"{spelling}:{sentinel}"
+    while True:
+        parsed = split_mapper_name(rest, full_name=context)
+        if parsed is None:
+            break
+        prefix, opts, rest = parsed
+        if prefix == "hier":
+            raise ValueError(f"hier level solvers cannot nest hier: "
+                             f"({context!r})")
+        chain.append((prefix, opts))
+    if rest != sentinel or not chain:
+        raise ValueError(
+            f"bad hier level solver {spelling!r}{' in ' + context if context else ''}: "
+            f"expected a refine-prefix chain from "
+            f"{[p[:-1] for p in REFINE_PREFIXES if p != 'hier:']}")
+    refiners = []
+    for prefix, opts in reversed(chain):       # inner-first
+        r = _make_refiner(prefix, opts)
+        refiners.append(SwapRefiner(**opts) if r is None else r)
+    return refiners
+
+
+# ---------------------------------------------------------------------------
+# the per-subtree solution cache
+
+_subtree_cache = None
+
+
+def hier_subtree_cache():
+    """The process-wide cache of restricted subtree solutions, keyed by
+    full subproblem content (region, capacities, seed labels, stencil,
+    solver).  Elastic re-meshes that leave a subtree's inputs unchanged
+    hit here and skip its re-solve entirely."""
+    global _subtree_cache
+    if _subtree_cache is None:
+        from ..plan import PlanCache
+        _subtree_cache = PlanCache(maxsize=2048)
+    return _subtree_cache
+
+
+def _subtree_key(grid: CartGrid, stencil: Stencil, active_idx: np.ndarray,
+                 seed_labels: np.ndarray, caps: np.ndarray,
+                 solver: str) -> str:
+    h = hashlib.sha256()
+    h.update(repr((grid.dims, grid.periodic,
+                   tuple(tuple(o) for o in stencil.offsets),
+                   tuple(float(w) for w in stencil.weights),
+                   tuple(int(c) for c in caps), solver)).encode())
+    h.update(active_idx.astype(np.int64).tobytes())
+    h.update(seed_labels.astype(np.int64).tobytes())
+    return "hier:" + h.hexdigest()[:40]
+
+
+# ---------------------------------------------------------------------------
+# the refiner
+
+
+class HierRefiner:
+    """Recursive multilevel refinement (see module docstring).
+
+    Args:
+      fanouts: per-level fan-outs as ``"<f1>x<f2>..."`` (product must equal
+        the node count); None derives a balanced ``depth``-level split.
+      depth: number of grouping levels when ``fanouts`` is None.
+      levels: per-level names/solvers,
+        ``"rack:portfolio[k=8],pod:annealed"`` (positional; solver falls
+        back to ``solver`` when omitted).
+      solver: default restricted-problem solver — any refine-prefix chain
+        without a base (``"annealed"``, ``"portfolio[k=8]"``).
+      polish: accepted-swap budget for a final deterministic global polish
+        pass over the composed assignment (0 = off).
+      cache: reuse per-subtree solutions from :func:`hier_subtree_cache`
+        (bypassed automatically while a stage ``budget`` caps swaps, so
+        replayed swap counts can never evade the cap).
+      max_swaps: total accepted-swap cap across all restricted solves and
+        the polish pass (the plan layer's ``budget=`` threads in here).
+    """
+
+    def __init__(self, fanouts: Optional[str] = None, depth: int = 2,
+                 levels: Optional[str] = None, solver: str = "annealed",
+                 polish: int = 0, cache: bool = True,
+                 max_swaps: Optional[int] = None):
+        if int(depth) < 1:
+            raise ValueError("hier depth must be >= 1")
+        if int(polish) < 0:
+            raise ValueError("hier polish budget must be >= 0")
+        self.fanouts = fanouts
+        self.depth = int(depth)
+        self.levels = levels
+        self.solver = str(solver)
+        self.polish = int(polish)
+        self.cache = bool(cache)
+        self.max_swaps = max_swaps
+        self.last_result: Optional[RefineResult] = None
+
+    # -- plan-layer adapters -------------------------------------------------
+    def as_stage(self, budget: Optional[int] = None):
+        """Uniform :class:`~repro.core.refine.stage.RefineStage` adapter
+        (``budget`` caps this stage's accepted swaps)."""
+        from .stage import RefineStage
+        return RefineStage(self, budget=budget, prefix="hier")
+
+    def config(self) -> dict:
+        """Full constructor configuration — the stage layer's canonical
+        cache identity for hand-built refiners."""
+        return {"fanouts": self.fanouts, "depth": self.depth,
+                "levels": self.levels, "solver": self.solver,
+                "polish": self.polish, "cache": self.cache,
+                "max_swaps": self.max_swaps}
+
+    # -- seeding -------------------------------------------------------------
+    @staticmethod
+    def _seed_labels(desired: np.ndarray, caps: np.ndarray) -> np.ndarray:
+        """Child labels for a restricted solve: keep each position's
+        desired child while capacity lasts (positions in row-major order),
+        then fill the leftovers blocked — deterministic, and exactly
+        realizes ``caps``."""
+        f = len(caps)
+        labels = np.full(desired.shape[0], -1, dtype=np.int64)
+        for c in range(f):
+            want = np.nonzero(desired == c)[0]
+            labels[want[:caps[c]]] = c
+        placed = np.bincount(labels[labels >= 0], minlength=f)
+        fill = np.repeat(np.arange(f, dtype=np.int64), caps - placed)
+        labels[labels < 0] = fill
+        return labels
+
+    # -- restricted solve ----------------------------------------------------
+    def _solve_restricted(self, grid: CartGrid, stencil: Stencil,
+                          active_idx: np.ndarray, seed_labels: np.ndarray,
+                          caps: np.ndarray, solver: str, refiners,
+                          budget: List, stats: Dict) -> Tuple[np.ndarray, int]:
+        """Solve one subtree's induced-subgraph problem; returns
+        ``(labels over active_idx, accepted swaps)``."""
+        f = len(caps)
+        use_cache = self.cache and self.max_swaps is None
+        key = None
+        if use_cache:
+            key = _subtree_key(grid, stencil, active_idx, seed_labels, caps,
+                               solver)
+            hit = hier_subtree_cache().get(key)
+            if hit is not None:
+                stats["cache_hits"] += 1
+                return (np.asarray(hit["labels"], dtype=np.int64),
+                        int(hit["swaps"]))
+            stats["cache_misses"] += 1
+        p = grid.size
+        m = active_idx.shape[0]
+        full = np.full(p, f, dtype=np.int64)      # ghost label: zero edges
+        full[active_idx] = seed_labels
+        num = f + (1 if m < p else 0)
+        if m < p:
+            mask = np.zeros(p, dtype=bool)
+            mask[active_idx] = True
+            sub_grid: CartGrid = MaskedGrid(grid, mask)
+        else:
+            sub_grid = grid
+        swaps = 0
+        for refiner in refiners:
+            if budget[0] is not None and budget[0] <= 0:
+                break
+            r = refiner
+            if budget[0] is not None and hasattr(refiner, "max_swaps"):
+                r = copy.copy(refiner)
+                cur = getattr(r, "max_swaps", None)
+                r.max_swaps = budget[0] if cur is None \
+                    else min(int(cur), budget[0])
+            res = r.refine(sub_grid, stencil, full, num_nodes=num)
+            full = np.asarray(res.assignment, dtype=np.int64)
+            swaps += int(res.swaps)
+            if budget[0] is not None:
+                budget[0] -= int(res.swaps)
+        out = full[active_idx]
+        if not np.array_equal(np.bincount(out, minlength=f), caps):
+            raise AssertionError(
+                "restricted solve changed subtree child capacities")
+        if use_cache:
+            hier_subtree_cache().put(key, {"labels": out, "swaps": swaps})
+        stats["solves"] += 1
+        return out, swaps
+
+    # -- the recursion -------------------------------------------------------
+    def refine(self, grid: CartGrid, stencil: Stencil,
+               node_of_pos: np.ndarray,
+               num_nodes: Optional[int] = None) -> RefineResult:
+        t0 = time.perf_counter()
+        a = np.asarray(node_of_pos, dtype=np.int64).copy()
+        n = int(num_nodes) if num_nodes is not None else int(a.max()) + 1
+        node_sizes = np.bincount(a, minlength=n).astype(np.int64)
+        initial = evaluate(grid, stencil, a, num_nodes=n, weighted="auto")
+
+        fanouts = _parse_fanouts(self.fanouts, n, self.depth)
+        level_specs = _parse_levels(self.levels, len(fanouts))
+        context = f"hier[fanouts={'x'.join(map(str, fanouts))}]"
+        per_level = [(name, sp or self.solver,
+                      _solver_refiners(sp or self.solver, context))
+                     for name, sp in level_specs]
+
+        # cumulative chip offsets per pod; child c of a node covering pods
+        # [lo, hi) with stride s covers pods [lo + c*s, lo + (c+1)*s)
+        chip_starts = np.concatenate(([0], np.cumsum(node_sizes)))
+        budget = [None if self.max_swaps is None else int(self.max_swaps)]
+        stats: Dict[str, object] = {
+            "backend": context, "solver": self.solver,
+            "levels": [{"name": name, "fanout": f, "solver": sp}
+                       for (name, sp, _), f in zip(per_level, fanouts)],
+            "solves": 0, "cache_hits": 0, "cache_misses": 0,
+            "polish_swaps": 0,
+        }
+        final = np.empty(grid.size, dtype=np.int64)
+        total_swaps = 0
+
+        def solve_node(level: int, lo_pod: int, hi_pod: int,
+                       active_idx: np.ndarray, orig_pods: np.ndarray):
+            nonlocal total_swaps
+            if active_idx.size == 0:
+                return
+            if hi_pod - lo_pod == 1:
+                final[active_idx] = lo_pod
+                return
+            name, solver, refiners = per_level[level]
+            f = fanouts[level]
+            stride = math.prod(fanouts[level + 1:])
+            caps = np.asarray(
+                [int(chip_starts[lo_pod + (c + 1) * stride]
+                     - chip_starts[lo_pod + c * stride]) for c in range(f)],
+                dtype=np.int64)
+            inside = (orig_pods >= lo_pod) & (orig_pods < hi_pod)
+            desired = np.where(inside, (orig_pods - lo_pod) // stride, -1)
+            seed = self._seed_labels(desired, caps)
+            labels, swaps = self._solve_restricted(
+                grid, stencil, active_idx, seed, caps, solver, refiners,
+                budget, stats)
+            total_swaps += swaps
+            for c in range(f):
+                sel = labels == c
+                solve_node(level + 1, lo_pod + c * stride,
+                           lo_pod + (c + 1) * stride,
+                           active_idx[sel], orig_pods[sel])
+
+        solve_node(0, 0, n, np.arange(grid.size, dtype=np.int64), a)
+
+        if not np.array_equal(np.bincount(final, minlength=n), node_sizes):
+            raise AssertionError("hier composition broke node cardinalities")
+
+        if self.polish > 0 and (budget[0] is None or budget[0] > 0):
+            from .schedule import ScheduledRefiner
+            cap = self.polish if budget[0] is None \
+                else min(self.polish, budget[0])
+            pol = ScheduledRefiner(anneal=False, rounds=1, max_swaps=cap)
+            res = pol.refine(grid, stencil, final, num_nodes=n)
+            final = np.asarray(res.assignment, dtype=np.int64)
+            stats["polish_swaps"] = int(res.swaps)
+            total_swaps += int(res.swaps)
+
+        cost = evaluate(grid, stencil, final, num_nodes=n, weighted="auto")
+        stats["composed"] = (float(cost.j_max), float(cost.j_sum))
+        # never worse than the input: the seed composition realizes the
+        # input's structure where possible, but a coarse top split can
+        # regress a pathological case — keep the lexicographic best
+        if (cost.j_max, cost.j_sum) > (initial.j_max, initial.j_sum):
+            final, cost = a, initial
+            stats["kept_input"] = True
+        result = RefineResult(
+            assignment=final, initial=initial, final=cost,
+            swaps=total_swaps, passes=int(stats["solves"]),
+            wall_time_s=time.perf_counter() - t0, stats=stats)
+        self.last_result = result
+        return result

@@ -6,6 +6,16 @@ chips; within a pod chips sit on a 2-d ICI torus with per-link bandwidth
 ``ici_bw``; pods are connected by DCI with per-chip bandwidth ``dci_bw``
 (slower, the analog of the inter-node network).
 
+Deep machines additionally carry a ``levels`` description — the grouping
+hierarchy *from the root down to the pods* (e.g. rack → pod), each level a
+:class:`LevelSpec` with a fan-out (children per parent) and a per-chip
+bandwidth across that level's boundary.  The fan-outs must multiply to
+``num_pods``; chips are the implicit leaf level below pods.
+:meth:`MachineSpec.topology_tree` materializes the hierarchy as a
+:class:`TopologyTree`, the navigation object the hierarchical mapper
+(``hier:`` — :mod:`repro.core.refine.hier`) and the per-level linksim
+replay (:mod:`repro.analysis.linksim`) share.
+
 Default constants are TPU v5e (the assignment's roofline constants):
 197 TFLOP/s bf16, 819 GB/s HBM, 16 GiB HBM, ~50 GB/s per ICI link.
 """
@@ -13,11 +23,29 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Sequence, Tuple
+from typing import List, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["MachineSpec", "RaggedMachineSpec", "V5E_POD", "V5E_2POD"]
+__all__ = ["LevelSpec", "MachineSpec", "RaggedMachineSpec", "TopologyTree",
+           "V5E_POD", "V5E_2POD", "V5E_4RACK"]
+
+
+@dataclass(frozen=True)
+class LevelSpec:
+    """One grouping level of a machine hierarchy: every node of the level
+    above splits into ``fanout`` children; ``bw`` is the per-chip bandwidth
+    (bytes/s) across this level's boundary (0.0 = unspecified)."""
+
+    name: str
+    fanout: int
+    bw: float = 0.0
+
+    def __post_init__(self):
+        if int(self.fanout) < 1:
+            raise ValueError(f"level {self.name!r} fanout must be >= 1, "
+                             f"got {self.fanout}")
+        object.__setattr__(self, "fanout", int(self.fanout))
 
 
 @dataclass(frozen=True)
@@ -31,6 +59,9 @@ class MachineSpec:
     ici_bw: float = 50e9                     # bytes/s per ICI link (per dir)
     dci_bw: float = 6.25e9                   # bytes/s per chip across pods
     vmem_bytes: float = 128 * 2**20          # VMEM per chip (v5e ~128MB)
+    #: grouping hierarchy root -> pods (fan-outs multiply to ``num_pods``);
+    #: empty = the flat machine (one implicit "pod" level).
+    levels: Tuple[LevelSpec, ...] = ()
 
     @property
     def chips_per_pod(self) -> int:
@@ -41,16 +72,28 @@ class MachineSpec:
         return self.num_pods * self.chips_per_pod
 
     # -- chip addressing ----------------------------------------------------
+    def _check_chip(self, chip: int) -> int:
+        chip = int(chip)
+        if not 0 <= chip < self.num_chips:
+            raise ValueError(f"chip id {chip} out of range for "
+                             f"{self.name!r} with {self.num_chips} chips")
+        return chip
+
     def pod_of(self, chip: int) -> int:
-        return chip // self.chips_per_pod
+        return self._check_chip(chip) // self.chips_per_pod
 
     def torus_coord(self, chip: int) -> Tuple[int, ...]:
+        chip = self._check_chip(chip)
         return tuple(int(c) for c in
                      np.unravel_index(chip % self.chips_per_pod, self.torus))
 
     def node_sizes(self) -> list[int]:
         """The paper's N x n allocation: pods as nodes."""
         return [self.chips_per_pod] * self.num_pods
+
+    def topology_tree(self) -> "TopologyTree":
+        """The machine's grouping hierarchy as a navigable tree."""
+        return TopologyTree(self.node_sizes(), self.levels)
 
     def torus_hop_path(self, a: int, b: int) -> list[Tuple[int, Tuple[int, ...], int]]:
         """Dimension-ordered shortest-path routing between two chips in the
@@ -71,6 +114,13 @@ class MachineSpec:
     def __post_init__(self):
         if self.num_pods < 1 or self.chips_per_pod < 1:
             raise ValueError("machine must have at least one pod and one chip")
+        if self.levels:
+            object.__setattr__(self, "levels", tuple(self.levels))
+            fan = math.prod(l.fanout for l in self.levels)
+            if fan != self.num_pods:
+                raise ValueError(
+                    f"level fan-outs {[l.fanout for l in self.levels]} "
+                    f"multiply to {fan}, machine has {self.num_pods} pods")
 
 
 @dataclass(frozen=True)
@@ -104,6 +154,7 @@ class RaggedMachineSpec(MachineSpec):
         return list(self.pod_sizes)
 
     def pod_of(self, chip: int) -> int:
+        chip = self._check_chip(chip)
         return int(np.searchsorted(np.asarray(self._starts), chip,
                                    side="right")) - 1
 
@@ -125,5 +176,120 @@ class RaggedMachineSpec(MachineSpec):
         return links
 
 
+class TopologyTree:
+    """Rooted tree over a machine's chips: root → grouping levels
+    (``levels``, root-to-pods) → pods → chip leaves.
+
+    Nodes are addressed ``(level, index)``: level 0 is the root (one node),
+    level ``depth`` holds the pods (``num_pods`` nodes), and node
+    ``(l, j)``'s children are the level-``l+1`` nodes
+    ``j*fanout .. (j+1)*fanout - 1`` — pods stay contiguous under every
+    subtree, so a subtree is fully described by a pod range.  Ragged pod
+    sizes are first-class: per-subtree chip counts are sums of
+    ``pod_sizes`` slices.
+    """
+
+    def __init__(self, pod_sizes: Sequence[int],
+                 levels: Sequence[LevelSpec] = ()):
+        sizes = tuple(int(s) for s in pod_sizes)
+        if not sizes or any(s < 1 for s in sizes):
+            raise ValueError(f"pod_sizes must be positive, got {pod_sizes}")
+        if not levels:
+            levels = (LevelSpec("pod", len(sizes)),)
+        levels = tuple(levels)
+        fan = math.prod(l.fanout for l in levels)
+        if fan != len(sizes):
+            raise ValueError(
+                f"level fan-outs {[l.fanout for l in levels]} multiply to "
+                f"{fan}, tree has {len(sizes)} pods")
+        self.pod_sizes = sizes
+        self.levels = levels
+        self._chip_starts = np.concatenate(
+            ([0], np.cumsum(np.asarray(sizes, dtype=np.int64))))
+
+    # -- shape ---------------------------------------------------------------
+    @property
+    def depth(self) -> int:
+        """Number of grouping levels (pods live at level ``depth``)."""
+        return len(self.levels)
+
+    @property
+    def num_pods(self) -> int:
+        return len(self.pod_sizes)
+
+    @property
+    def num_chips(self) -> int:
+        return int(self._chip_starts[-1])
+
+    def leaf_count(self) -> int:
+        return self.num_chips
+
+    def node_sizes(self) -> List[int]:
+        """Round-trips ``machine.node_sizes()`` (pods as nodes)."""
+        return list(self.pod_sizes)
+
+    def num_nodes_at(self, level: int) -> int:
+        """Node count at ``level`` (0 = root, ``depth`` = pods)."""
+        if not 0 <= level <= self.depth:
+            raise ValueError(f"level {level} out of range 0..{self.depth}")
+        return math.prod(l.fanout for l in self.levels[:level])
+
+    def fanout_at(self, level: int) -> int:
+        """Children per node of a level-``level`` node (chips below pods)."""
+        if level == self.depth:
+            raise ValueError("pods have per-pod chip counts, not one fanout")
+        return self.levels[level].fanout
+
+    # -- navigation ----------------------------------------------------------
+    def _pod_stride(self, level: int) -> int:
+        return math.prod(l.fanout for l in self.levels[level:])
+
+    def pod_range(self, level: int, index: int) -> Tuple[int, int]:
+        """Contiguous pod ids ``[lo, hi)`` under node ``(level, index)``."""
+        n = self.num_nodes_at(level)
+        if not 0 <= index < n:
+            raise ValueError(f"node index {index} out of range for level "
+                             f"{level} with {n} nodes")
+        stride = self._pod_stride(level)
+        return index * stride, (index + 1) * stride
+
+    def chip_range(self, level: int, index: int) -> Tuple[int, int]:
+        """Contiguous chip ids ``[lo, hi)`` under node ``(level, index)``."""
+        lo, hi = self.pod_range(level, index)
+        return int(self._chip_starts[lo]), int(self._chip_starts[hi])
+
+    def chip_count(self, level: int, index: int) -> int:
+        lo, hi = self.chip_range(level, index)
+        return hi - lo
+
+    def child_sizes(self, level: int, index: int) -> List[int]:
+        """Chip counts of the children of node ``(level, index)`` — the
+        restricted problem's "node sizes" for the hierarchical mapper."""
+        if level == self.depth:                  # a pod: children are chips
+            return [1] * self.chip_count(level, index)
+        lo, _ = self.pod_range(level, index)
+        f = self.levels[level].fanout
+        stride = self._pod_stride(level + 1)
+        return [int(self._chip_starts[lo + (c + 1) * stride]
+                    - self._chip_starts[lo + c * stride]) for c in range(f)]
+
+    def level_node_of_pod(self, pod: int, level: int) -> int:
+        """The level-``level`` ancestor of ``pod``."""
+        if not 0 <= int(pod) < self.num_pods:
+            raise ValueError(f"pod id {pod} out of range for "
+                             f"{self.num_pods} pods")
+        return int(pod) // self._pod_stride(level)
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        shape = "x".join(str(l.fanout) for l in self.levels)
+        return (f"TopologyTree(levels={shape}, pods={self.num_pods}, "
+                f"chips={self.num_chips})")
+
+
 V5E_POD = MachineSpec(name="tpu-v5e-256", num_pods=1, torus=(16, 16))
 V5E_2POD = MachineSpec(name="tpu-v5e-2x256", num_pods=2, torus=(16, 16))
+#: a deep machine: 4 racks x 4 pods of 256 chips, with per-level bandwidth
+#: (DCI within a rack, thinner spine across racks).
+V5E_4RACK = MachineSpec(name="tpu-v5e-4x4x256", num_pods=16, torus=(16, 16),
+                        levels=(LevelSpec("rack", 4, bw=3.125e9),
+                                LevelSpec("pod", 4, bw=6.25e9)))

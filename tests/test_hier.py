@@ -1,0 +1,265 @@
+"""Contract of the hierarchical multilevel mapping stage (``hier:`` —
+:mod:`repro.core.refine.hier`).
+
+Pinned invariants:
+
+* grammar — nested per-level solver spellings
+  (``hier[levels=rack:portfolio[k=8],pod:annealed]:<base>``) round-trip
+  through ``split_mapper_name`` / ``parse_plan`` with a stable canonical
+  key, while the pre-existing option-grammar errors
+  (``annealed[k]:hyperplane``) stay pinned;
+* MaskedGrid — restricted problems are *induced subgraphs*: an edge is
+  valid only when both endpoints are active, so inactive positions carry
+  zero load and flat refiners run on them unmodified;
+* parity — ``parse_plan("hier...").solve`` equals
+  ``get_mapper("hier...")`` bit-exactly, and the composed assignment
+  always realizes the node sizes, never lexicographically worse than its
+  input;
+* subtree cache — per-level sub-solutions are individually content-keyed,
+  so an elastic re-mesh that churns ONE subtree re-solves only that
+  subtree (siblings and the top split are cache hits), and the cache is
+  bypassed whenever a stage ``budget=`` caps swaps (replayed counts must
+  not evade the cap);
+* budgets — ``hier[budget=N]`` obeys the plan layer's accepted-swap
+  contract: total reported swaps <= N.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (CartGrid, MappingProblem, Stencil, available_mappers,
+                        evaluate, get_mapper, parse_plan)
+from repro.core.mapping import split_mapper_name
+from repro.core.refine import (HierRefiner, MaskedGrid, RefineStage,
+                               hier_subtree_cache)
+
+NESTED = "hier[levels=rack:portfolio[k=8],pod:annealed]:hyperplane"
+
+
+@pytest.fixture(autouse=True)
+def _fresh_subtree_cache():
+    hier_subtree_cache().clear()
+    yield
+    hier_subtree_cache().clear()
+
+
+# ---------------------------------------------------------------------------
+# grammar
+
+
+def test_split_mapper_name_hier_nested_options():
+    prefix, opts, base = split_mapper_name(NESTED)
+    assert prefix == "hier"
+    assert opts == {"levels": "rack:portfolio[k=8],pod:annealed"}
+    assert base == "hyperplane"
+    # brackets inside the option value keep the base scan balanced
+    prefix, opts, base = split_mapper_name(
+        "hier[fanouts=4x2,solver=annealed[sa_moves=50]]:kdtree")
+    assert opts == {"fanouts": "4x2", "solver": "annealed[sa_moves=50]"}
+    assert base == "kdtree"
+    # chaining: hier composes with other prefixes
+    prefix, opts, rest = split_mapper_name("hier:annealed:blocked")
+    assert (prefix, rest) == ("hier", "annealed:blocked")
+
+
+def test_hier_spellings_listed_and_keys_canonical():
+    assert any(n.startswith("hier") for n in available_mappers())
+    assert parse_plan(NESTED).key == NESTED            # already canonical
+    assert parse_plan("hier[solver=annealed,depth=2]:blocked").key \
+        == "hier[depth=2,solver=annealed]:blocked"     # options sorted
+    assert get_mapper(NESTED).plan_key == NESTED
+    assert parse_plan(NESTED).cacheable
+
+
+def test_pinned_option_errors_survive_the_hier_grammar():
+    """The continuation rule that lets level-solver spellings ride inside
+    option values must not swallow the pinned bad-option errors."""
+    with pytest.raises(ValueError, match=r"'annealed\[k\]:hyperplane'"):
+        split_mapper_name("annealed[k]:hyperplane")
+    with pytest.raises(ValueError, match="expected key=value"):
+        split_mapper_name("hier[bare]:blocked")
+    assert split_mapper_name("hier[levels=rack:annealed]:blocked") is not None
+
+
+def test_hier_rejects_bad_trees_and_solvers():
+    grid, st_ = CartGrid((4, 4)), Stencil.nearest_neighbor(2)
+    a = np.repeat(np.arange(4), 4)
+    with pytest.raises(ValueError, match="multiply"):
+        HierRefiner(fanouts="3x2").refine(grid, st_, a, num_nodes=4)
+    with pytest.raises(ValueError, match="fanouts"):
+        HierRefiner(fanouts="2xq").refine(grid, st_, a, num_nodes=4)
+    with pytest.raises(ValueError, match="names 1 levels"):
+        HierRefiner(fanouts="2x2", levels="only_one").refine(
+            grid, st_, a, num_nodes=4)
+    with pytest.raises(ValueError, match="cannot nest"):
+        HierRefiner(fanouts="2x2", solver="hier").refine(
+            grid, st_, a, num_nodes=4)
+    with pytest.raises(ValueError, match="refine-prefix chain"):
+        HierRefiner(fanouts="2x2", solver="blocked").refine(
+            grid, st_, a, num_nodes=4)
+    with pytest.raises(ValueError, match="depth"):
+        HierRefiner(depth=0)
+    with pytest.raises(ValueError, match="polish"):
+        HierRefiner(polish=-1)
+
+
+# ---------------------------------------------------------------------------
+# MaskedGrid semantics
+
+
+def test_masked_grid_is_induced_subgraph():
+    base = CartGrid((4, 4))
+    active = np.zeros(16, dtype=bool)
+    active[[0, 1, 2, 4, 5, 6]] = True                  # a 2x3 corner block
+    mg = MaskedGrid(base, active)
+    valid, tr = mg.shift_ranks((0, 1))                 # east neighbor
+    # inside-to-inside edges survive, anything touching outside is cut
+    assert valid[0] and tr[0] == 1
+    assert valid[5] and tr[5] == 6
+    assert not valid[2]                                # 2 -> 3 leaves mask
+    assert not valid[3]                                # source inactive
+    full_valid, _ = base.shift_ranks((0, 1))
+    assert np.array_equal(valid, full_valid & active & active[tr])
+    # geometry is untouched: indices stay global
+    assert mg.size == 16 and mg.dims == (4, 4)
+    with pytest.raises(ValueError, match="active mask"):
+        MaskedGrid(base, np.ones(8, dtype=bool))
+
+
+def test_masked_grid_inactive_positions_carry_zero_load():
+    base = CartGrid((4, 4))
+    active = np.zeros(16, dtype=bool)
+    active[:8] = True
+    mg = MaskedGrid(base, active)
+    st_ = Stencil.nearest_neighbor(2)
+    # all inactive positions on one ghost label: they contribute nothing
+    a = np.where(active, np.arange(16) // 4, 2)        # labels 0,1 + ghost 2
+    cost = evaluate(mg, st_, a, num_nodes=3)
+    assert cost.per_node[2] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# parity + composition
+
+
+TINY = [((8, 8), (16,) * 4), ((6, 8), (16, 16, 10, 6)),
+        ((4, 4, 4), (16,) * 4)]
+
+
+@pytest.mark.parametrize("dims,sizes", TINY)
+def test_hier_plan_mapper_parity(dims, sizes):
+    grid = CartGrid(dims)
+    st_ = Stencil.nearest_neighbor(len(dims))
+    problem = MappingProblem(dims, st_, sizes)
+    for name in ("hier:hyperplane", "hier[solver=refined]:blocked",
+                 "hier[fanouts=2x2,polish=16]:kdtree"):
+        hier_subtree_cache().clear()
+        sol = parse_plan(name).solve(problem)
+        hier_subtree_cache().clear()
+        via_mapper = get_mapper(name).assignment(grid, st_, list(sizes))
+        np.testing.assert_array_equal(sol.assignment, via_mapper,
+                                      err_msg=f"{name} on {dims}")
+        np.testing.assert_array_equal(
+            np.bincount(sol.assignment, minlength=len(sizes)), sizes)
+
+
+def test_hier_never_worse_and_stats_shape():
+    grid, st_ = CartGrid((8, 8)), Stencil.nearest_neighbor(2)
+    sizes = [16] * 4
+    base = get_mapper("random").assignment(grid, st_, sizes)
+    res = HierRefiner(fanouts="2x2").refine(grid, st_, base, num_nodes=4)
+    assert (res.final.j_max, res.final.j_sum) \
+        <= (res.initial.j_max, res.initial.j_sum)
+    s = res.stats
+    assert s["solves"] >= 1 and len(s["levels"]) == 2
+    assert [l["fanout"] for l in s["levels"]] == [2, 2]
+    assert "composed" in s and "polish_swaps" in s
+
+
+def test_hier_per_level_solvers_apply():
+    grid, st_ = CartGrid((8, 8)), Stencil.nearest_neighbor(2)
+    sizes = [16] * 4
+    base = get_mapper("blocked").assignment(grid, st_, sizes)
+    r = HierRefiner(fanouts="2x2", levels="rack:refined,pod:annealed")
+    res = r.refine(grid, st_, base, num_nodes=4)
+    assert [l["name"] for l in res.stats["levels"]] == ["rack", "pod"]
+    assert [l["solver"] for l in res.stats["levels"]] \
+        == ["refined", "annealed"]
+    np.testing.assert_array_equal(
+        np.bincount(res.assignment, minlength=4), sizes)
+
+
+# ---------------------------------------------------------------------------
+# the subtree cache: churn re-solves only the churned subtree
+
+
+def test_subtree_cache_elastic_churn_resolves_only_churned_subtree():
+    """Re-meshing with one subtree's pod sizes permuted ([4,4,3,5] ->
+    [4,4,5,3]: group totals unchanged) must hit the cache for the top
+    split and the untouched sibling, and re-solve ONLY subtree 1."""
+    grid, st_ = CartGrid((4, 4)), Stencil.nearest_neighbor(2)
+    r = HierRefiner(fanouts="2x2")
+    a1 = get_mapper("blocked").assignment(grid, st_, [4, 4, 3, 5])
+    res1 = r.refine(grid, st_, a1, num_nodes=4)
+    assert res1.stats["cache_hits"] == 0
+    cold_solves = res1.stats["cache_misses"]
+    assert cold_solves == res1.stats["solves"] == 3    # top + 2 subtrees
+
+    a2 = get_mapper("blocked").assignment(grid, st_, [4, 4, 5, 3])
+    res2 = r.refine(grid, st_, a2, num_nodes=4)
+    assert res2.stats["cache_hits"] == 2               # top + subtree 0
+    assert res2.stats["cache_misses"] == 1             # only subtree 1
+    assert res2.stats["solves"] == 1
+
+    # identical re-mesh: pure hits, zero solves, identical labels
+    res3 = r.refine(grid, st_, a1, num_nodes=4)
+    assert res3.stats["solves"] == 0
+    assert res3.stats["cache_hits"] == 3
+    np.testing.assert_array_equal(res3.assignment, res1.assignment)
+
+
+def test_subtree_cache_disabled_and_content_keyed():
+    grid, st_ = CartGrid((4, 4)), Stencil.nearest_neighbor(2)
+    a = get_mapper("blocked").assignment(grid, st_, [4] * 4)
+    r = HierRefiner(fanouts="2x2", cache=False)
+    r.refine(grid, st_, a, num_nodes=4)
+    assert hier_subtree_cache().stats()["puts"] == 0
+    # stencil weights are part of the key: heavier weights must re-solve
+    r2 = HierRefiner(fanouts="2x2")
+    r2.refine(grid, st_, a, num_nodes=4)
+    heavy = Stencil(st_.offsets, (8.0,) + (1.0,) * (st_.k - 1))
+    res = r2.refine(grid, heavy, a, num_nodes=4)
+    assert res.stats["cache_hits"] == 0
+
+
+# ---------------------------------------------------------------------------
+# budgets: the stage swap cap holds, and caching never evades it
+
+
+def test_hier_budget_caps_swaps_and_bypasses_cache():
+    dims, sizes = (8, 8), (16,) * 4
+    grid, st_ = CartGrid(dims), Stencil.nearest_neighbor(2)
+    problem = MappingProblem(dims, st_, sizes)
+    # warm the subtree cache with an unbudgeted run of the same config
+    parse_plan("hier[fanouts=2x2]:random").solve(problem)
+    warm_puts = hier_subtree_cache().stats()["puts"]
+    assert warm_puts >= 1
+    for budget in (0, 2, 5):
+        plan = parse_plan(f"hier[fanouts=2x2,budget={budget}]:random")
+        stage = plan.stages[1]
+        assert isinstance(stage, RefineStage) and stage.budget == budget
+        sol = plan.solve(problem)
+        assert sum(s.get("swaps", 0) for s in sol.stage_stats) <= budget
+        k_in = parse_plan("random").solve(problem)
+        assert (sol.j_max, sol.j_sum) <= (k_in.j_max, k_in.j_sum)
+    # budgeted runs neither read nor wrote the subtree cache
+    assert hier_subtree_cache().stats()["puts"] == warm_puts
+    assert hier_subtree_cache().hits == 0
+
+
+def test_hier_polish_budget_counts_toward_cap():
+    grid, st_ = CartGrid((8, 8)), Stencil.nearest_neighbor(2)
+    sizes = [16] * 4
+    base = get_mapper("random").assignment(grid, st_, sizes)
+    r = HierRefiner(fanouts="2x2", polish=64, max_swaps=4)
+    res = r.refine(grid, st_, base, num_nodes=4)
+    assert res.swaps <= 4

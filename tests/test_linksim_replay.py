@@ -16,6 +16,7 @@ except ImportError:  # offline: deterministic shim
 from repro.analysis.linksim import (machine_for_nodes, replay_assignment,
                                     simulate, stencil_collectives)
 from repro.core import CartGrid, Stencil, evaluate, get_mapper
+from repro.topology.machine import LevelSpec, V5E_POD
 
 STENCILS = {
     "nn": Stencil.nearest_neighbor,
@@ -103,6 +104,64 @@ def test_machine_for_nodes_homogeneous_and_ragged():
     assert len(path) == 1 and path[0][2] == +1        # wraps 11 -> 0
     with pytest.raises(ValueError):
         machine_for_nodes([8, 0])
+
+
+def test_machine_for_nodes_near_square_torus_matches_v5e():
+    """Regression: a 256-chip pod must model as V5E_POD's real (16, 16)
+    ICI torus, not the pre-fix 1-d 256-ring, and the replay must be
+    ICI-identical to the hand-built V5E_POD spec.  An explicit ``torus=``
+    still overrides."""
+    m = machine_for_nodes([256])
+    assert m.torus == (16, 16) == V5E_POD.torus
+    grid, stencil = CartGrid((16, 16)), Stencil.nearest_neighbor(2)
+    colls = stencil_collectives(grid, stencil)
+    layout = np.arange(256)
+    auto = simulate(colls, layout, m)
+    ref = simulate(colls, layout, V5E_POD)
+    assert auto.ici_total == ref.ici_total
+    assert auto.max_ici_link() == ref.max_ici_link()
+    # the old 1-d model inflated hop counts: the ring walks up to 128
+    # hops where the square torus needs at most 16
+    ring = simulate(colls, layout, machine_for_nodes([256], torus=(256,)))
+    assert ring.ici_total > auto.ici_total
+    # factorization corner cases
+    assert machine_for_nodes([12] * 2).torus == (4, 3)
+    assert machine_for_nodes([7] * 3).torus == (7,)        # prime: 1-d ring
+    assert machine_for_nodes([1]).torus == (1,)
+    # explicit override must hold the pod exactly
+    assert machine_for_nodes([16] * 4, torus=(4, 4)).torus == (4, 4)
+    with pytest.raises(ValueError, match="does not hold"):
+        machine_for_nodes([16] * 4, torus=(4, 2))
+    with pytest.raises(ValueError, match="ragged"):
+        machine_for_nodes([16, 12], torus=(4, 4))
+
+
+def test_replay_per_level_egress_parity():
+    """Deep-machine replay: per-level DCI egress at the finest (pod)
+    level equals the flat dci_pod_egress exactly (the parity invariant),
+    and coarser levels only aggregate — total rack-crossing bytes can
+    never exceed total pod-crossing bytes."""
+    grid, stencil = CartGrid((8, 8)), Stencil.nearest_neighbor(2)
+    sizes = [4] * 16
+    levels = (LevelSpec("rack", 4), LevelSpec("pod", 4))
+    a = get_mapper("hyperplane").assignment(grid, stencil, sizes)
+    rep = replay_assignment(grid, stencil, a, sizes, levels=levels)
+    cost = evaluate(grid, stencil, a, num_nodes=16)
+    assert rep.dci_total == cost.j_sum
+    assert rep.max_dci_pod() == cost.j_max
+    np.testing.assert_array_equal(rep.level_egress["pod"],
+                                  rep.dci_pod_egress)
+    assert rep.max_level_egress("pod") == rep.max_dci_pod()
+    assert rep.level_egress["rack"].shape == (4,)
+    assert rep.level_egress["rack"].sum() <= rep.dci_total
+    # rack egress is exactly the cross-rack slice of the pair traffic
+    rack_of = {p: p // 4 for p in range(16)}
+    cross_rack = sum(b for (pa, pb), b in rep.dci_pair_bytes.items()
+                     if rack_of[pa] != rack_of[pb])
+    assert rep.level_egress["rack"].sum() == cross_rack
+    # a flat machine reports no level counters
+    flat = replay_assignment(grid, stencil, a, sizes)
+    assert flat.level_egress == {}
 
 
 @given(st.integers(0, 10_000))

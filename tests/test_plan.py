@@ -368,6 +368,30 @@ def test_plan_cache_disk_spill_roundtrip(tmp_path):
     assert warm.key() == sol.key()
 
 
+def test_plan_cache_env_dir_read_at_construction(tmp_path, monkeypatch):
+    """Regression: ``$REPRO_MAPS_CACHE_DIR`` set *after* import must still
+    direct ``PlanCache(disk_dir=True)`` spills — the pre-fix code froze
+    the path into ``DEFAULT_CACHE_DIR`` at import time, so late env
+    changes (pytest monkeypatching, embedders configuring before first
+    use) were silently ignored."""
+    from repro.core.plan import default_cache_dir
+    target = tmp_path / "late-env"
+    monkeypatch.setenv("REPRO_MAPS_CACHE_DIR", str(target))
+    assert default_cache_dir() == target
+    cache = PlanCache(disk_dir=True)
+    assert cache.disk_dir == target
+    cache.put("k", {"v": 1})
+    assert list(target.glob("*.json"))
+    # a second late change moves the NEXT construction, not existing ones
+    other = tmp_path / "other"
+    monkeypatch.setenv("REPRO_MAPS_CACHE_DIR", str(other))
+    assert cache.disk_dir == target
+    assert PlanCache(disk_dir=True).disk_dir == other
+    # unset: falls back to the documented default
+    monkeypatch.delenv("REPRO_MAPS_CACHE_DIR")
+    assert default_cache_dir().name == "repro-maps"
+
+
 def test_plan_cache_corrupt_spill_is_miss_and_dropped(tmp_path):
     """A truncated/corrupt spill file is a *miss*, never an exception, and
     the bad file is deleted so it cannot poison every future read."""
