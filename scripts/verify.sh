@@ -25,7 +25,7 @@ python -m pytest -q tests/test_refine_batch.py tests/test_portfolio.py \
     tests/test_run_temperature_props.py tests/test_device_portfolio.py \
     tests/test_elastic_remesh.py tests/test_linksim_replay.py \
     tests/test_plan.py tests/test_repair.py \
-    tests/test_hier.py tests/test_topology_tree.py
+    tests/test_hier.py tests/test_topology_tree.py tests/test_serving.py
 
 # smoke the whole refinement registry (refined: / refined2: / annealed: /
 # portfolio: / sharded:) incl. the linksim replay columns (ragged rows
@@ -154,6 +154,49 @@ again = repair_layout(prev, dw, cache=cache)
 assert again.from_cache and again.key() == rep.key()
 print(f"repair smoke OK: J=(max {rep.j_max:.0f}, sum {rep.j_sum:.0f}) "
       f"pinned={st['pinned']} swaps={st['swaps']} cache={cache.stats()}")
+EOF
+
+# serving suite: resident persistent-worker engine bit-identical to the
+# stateless sharded engine, measured per-boundary IPC >= 10x smaller,
+# warm served cart_create p50 <= 0.1x cold, anytime valid within deadline
+# at J_max <= 1.2x (exit 1 on any FAIL) — and the machine-readable
+# BENCH_9.json perf snapshot
+mkdir -p results
+PYTHONPATH=src python -m benchmarks.serve_suite --json results/BENCH_9.json
+
+# serve smoke: start server -> warm-up sweep over the topology registry ->
+# concurrent submits (mixed warm/cold) -> anytime deadline hit on a fresh
+# problem -> clean shutdown with no orphaned worker processes
+PYTHONPATH=src python - <<'EOF'
+import multiprocessing as mp
+import numpy as np
+from repro.core.plan import MappingProblem
+from repro.core.stencil import Stencil
+from repro.serving import PlanClient, PlanServer
+
+plan = "sharded[shards=2,k=4,restarts=auto]:hyperplane"
+with PlanServer(threads=2, shard_workers=2, default_plan=plan) as srv:
+    warm = srv.warm_up()
+    assert warm["swept"] >= 2, warm
+    cli = PlanClient(srv)
+    tickets = [cli.cart_create_async((6, 8), node_sizes=(16, 16, 10, 6))
+               for _ in range(6)]
+    results = [t.result(timeout=300) for t in tickets]
+    for r in results[1:]:
+        np.testing.assert_array_equal(r.layout, results[0].layout)
+    fresh = MappingProblem((10, 12), Stencil.nearest_neighbor(2),
+                           (32, 32, 32, 24))
+    a = srv.submit(fresh, deadline_ms=200)
+    sol = a.result(timeout=300)
+    counts = np.bincount(sol.assignment, minlength=4)
+    assert sorted(counts) == sorted((32, 32, 32, 24))
+    st = srv.stats()
+    assert st["errors"] == 0 and st["completed"] == 7, st
+    assert st["warmed"] == warm["swept"], st
+assert mp.active_children() == [], mp.active_children()
+print(f"serve smoke OK: warm={warm} anytime_cut={a.anytime_cut} "
+      f"latency={a.latency_s * 1e3:.0f}ms p50={st['latency_p50_ms']:.1f}ms "
+      f"hit_rate={st['cache_hit_rate']:.2f}")
 EOF
 
 # cart_create smoke: cold solve -> warm cache hit, asserted via counters

@@ -410,6 +410,11 @@ def _dir_lock(disk_dir: Path):
             fcntl.flock(lf.fileno(), fcntl.LOCK_UN)
 
 
+#: sentinel distinguishing "no ttl_s argument" from an explicit ``None``
+#: (= never expire) in :meth:`PlanCache.put`.
+_TTL_DEFAULT = object()
+
+
 class PlanCache:
     """LRU cache of solved plans (and derived device layouts).
 
@@ -419,18 +424,41 @@ class PlanCache:
     JSON spill: entries evicted from (or missing in) memory are read back
     from ``<disk_dir>/<sha>.json`` and count as ``disk_hits``.  All
     counters are plain attributes (``hits`` / ``misses`` / ``disk_hits``
-    / ``puts`` / ``evictions``); access is thread-safe.
+    / ``puts`` / ``evictions`` / ``expired`` / ``invalidations`` /
+    ``disk_evictions``); access is thread-safe.
+
+    Serving extensions (the :class:`repro.serving.PlanServer` owns one of
+    these as its shared cache):
+
+    * ``ttl_s`` — default time-to-live for new entries; :meth:`put` takes
+      a per-entry override.  Expired entries are dropped lazily on
+      :meth:`get` (memory and spill file both) and count as ``expired``.
+    * :meth:`invalidate` — explicit drop of every entry derived from one
+      ``problem.content_hash()`` (topology changed, machine re-ranked).
+    * ``max_disk_bytes`` — budget for the disk spill; exceeding it LRU
+      sweeps spill files oldest-access first (disk hits refresh the file
+      mtime, so recency is *access* recency, not write recency).
     """
 
     def __init__(self, maxsize: int = 256,
-                 disk_dir: Union[None, bool, str, Path] = None):
+                 disk_dir: Union[None, bool, str, Path] = None,
+                 ttl_s: Optional[float] = None,
+                 max_disk_bytes: Optional[int] = None):
         if maxsize < 1:
             raise ValueError("maxsize must be >= 1")
+        if ttl_s is not None and not float(ttl_s) > 0:
+            raise ValueError("ttl_s must be > 0 (or None for no expiry)")
+        if max_disk_bytes is not None and int(max_disk_bytes) < 1:
+            raise ValueError("max_disk_bytes must be >= 1 (or None)")
         self.maxsize = int(maxsize)
+        self.ttl_s = None if ttl_s is None else float(ttl_s)
+        self.max_disk_bytes = (None if max_disk_bytes is None
+                               else int(max_disk_bytes))
         if disk_dir is True:
             disk_dir = default_cache_dir()
         self.disk_dir = None if not disk_dir else Path(disk_dir).expanduser()
         self._mem: "OrderedDict[str, dict]" = OrderedDict()
+        self._exp: Dict[str, float] = {}   # key -> expiry epoch (if any)
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
@@ -438,6 +466,9 @@ class PlanCache:
         self.puts = 0
         self.evictions = 0
         self.corrupt_drops = 0
+        self.expired = 0
+        self.invalidations = 0
+        self.disk_evictions = 0
         self._tmp_swept_at = 0.0
 
     # -- raw key/value store ------------------------------------------------
@@ -448,21 +479,39 @@ class PlanCache:
     def get(self, key: str) -> Optional[dict]:
         with self._lock:
             if key in self._mem:
-                self._mem.move_to_end(key)
-                self.hits += 1
-                return dict(self._mem[key])
-        value = self._disk_get(key)
-        if value is not None:
+                exp = self._exp.get(key)
+                if exp is not None and time.time() >= exp:
+                    del self._mem[key]          # lazy TTL drop; the spill
+                    self._exp.pop(key, None)    # copy (same expiry) falls
+                    self.expired += 1           # through to _disk_get
+                else:
+                    self._mem.move_to_end(key)
+                    self.hits += 1
+                    return dict(self._mem[key])
+        found = self._disk_get(key)
+        if found is not None:
+            value, expires_at = found
             with self._lock:
                 self.hits += 1
                 self.disk_hits += 1
-            self._mem_put(key, value)
+            self._mem_put(key, value, expires_at)
             return dict(value)
         with self._lock:
             self.misses += 1
         return None
 
-    def _disk_get(self, key: str) -> Optional[dict]:
+    def _drop_spill(self, path: Path, text: str) -> None:
+        """Unlink a spill file, revalidating under the writers' lock: a
+        concurrent put may have just replaced it with a valid (or fresher)
+        entry, which must survive."""
+        try:
+            with _dir_lock(self.disk_dir):
+                if path.read_text() == text:
+                    path.unlink()
+        except OSError:
+            pass
+
+    def _disk_get(self, key: str) -> Optional[Tuple[dict, Optional[float]]]:
         if self.disk_dir is None:
             return None
         path = self._disk_path(key)
@@ -480,26 +529,36 @@ class PlanCache:
         except (ValueError, KeyError, AttributeError, TypeError):
             # truncated/corrupt spill (crashed or interleaved writer): it
             # is a miss, and the bad file must not poison every future
-            # read of this key — drop it.  The unlink revalidates under
-            # the writers' lock: a concurrent put may have just replaced
-            # the corrupt file with a valid entry, which must survive.
+            # read of this key — drop it.
             with self._lock:
                 self.corrupt_drops += 1
-            try:
-                with _dir_lock(self.disk_dir):
-                    if path.read_text() == text:
-                        path.unlink()
-            except OSError:
-                pass
+            self._drop_spill(path, text)
             return None
-        return value
+        expires_at = blob.get("expires_at")
+        expires_at = None if expires_at is None else float(expires_at)
+        if expires_at is not None and time.time() >= expires_at:
+            with self._lock:
+                self.expired += 1
+            self._drop_spill(path, text)
+            return None
+        try:                              # refresh access recency for the
+            os.utime(path)                # max_disk_bytes LRU sweep
+        except OSError:
+            pass
+        return value, expires_at
 
-    def _mem_put(self, key: str, value: dict) -> None:
+    def _mem_put(self, key: str, value: dict,
+                 expires_at: Optional[float] = None) -> None:
         with self._lock:
             self._mem[key] = dict(value)
             self._mem.move_to_end(key)
+            if expires_at is None:
+                self._exp.pop(key, None)
+            else:
+                self._exp[key] = float(expires_at)
             while len(self._mem) > self.maxsize:
-                self._mem.popitem(last=False)
+                k, _ = self._mem.popitem(last=False)
+                self._exp.pop(k, None)
                 self.evictions += 1
 
     #: a ``*.tmp`` older than this is a crashed writer's leftover — with
@@ -526,17 +585,24 @@ class PlanCache:
         except OSError:                   # pragma: no cover - racing rmdir
             pass
 
-    def put(self, key: str, value: dict) -> None:
+    def put(self, key: str, value: dict, ttl_s=_TTL_DEFAULT) -> None:
         """Store a JSON-able value dict under ``key`` (memory + disk).
 
-        The disk spill is crash- and concurrency-safe: each writer stages
-        into its own ``<sha>.<pid>.<uuid>.tmp`` (two processes spilling the
-        same key can never interleave bytes in a shared staging file), the
-        publish is an atomic ``os.replace`` under an advisory ``flock``
+        ``ttl_s`` overrides the cache-wide default time-to-live for this
+        entry (``None`` = never expire).  The disk spill is crash- and
+        concurrency-safe: each writer stages into its own
+        ``<sha>.<pid>.<uuid>.tmp`` (two processes spilling the same key can
+        never interleave bytes in a shared staging file), the publish is an
+        atomic ``os.replace`` under an advisory ``flock``
         (:func:`_dir_lock`), and stale ``.tmp`` leftovers from crashed
         writers are swept so they cannot accumulate and poison the dir.
+        When ``max_disk_bytes`` is set, the spill dir is LRU-swept back
+        under budget after every publish.
         """
-        self._mem_put(key, value)
+        if ttl_s is _TTL_DEFAULT:
+            ttl_s = self.ttl_s
+        expires_at = None if ttl_s is None else time.time() + float(ttl_s)
+        self._mem_put(key, value, expires_at)
         with self._lock:
             self.puts += 1
         if self.disk_dir is None:
@@ -548,8 +614,10 @@ class PlanCache:
             path = self._disk_path(key)
             tmp = path.with_name(f"{path.stem}.{os.getpid()}."
                                  f"{uuid.uuid4().hex[:8]}.tmp")
-            tmp.write_text(json.dumps({"key": key, "value": value},
-                                      default=_jsonable))
+            blob = {"key": key, "value": value}
+            if expires_at is not None:
+                blob["expires_at"] = expires_at
+            tmp.write_text(json.dumps(blob, default=_jsonable))
             with _dir_lock(self.disk_dir):
                 os.replace(tmp, path)
         except OSError:
@@ -558,20 +626,109 @@ class PlanCache:
                     tmp.unlink()
                 except OSError:
                     pass
+        self._enforce_disk_budget()
+
+    def _enforce_disk_budget(self) -> None:
+        """Sweep spill files oldest-``st_mtime``-first until the dir is
+        back under ``max_disk_bytes``.  Disk hits refresh mtime
+        (:meth:`_disk_get`), so the sweep order is LRU by *access*."""
+        if self.max_disk_bytes is None or self.disk_dir is None:
+            return
+        try:
+            with _dir_lock(self.disk_dir):
+                entries = []
+                total = 0
+                for p in self.disk_dir.glob("*.json"):
+                    try:
+                        st = p.stat()
+                    except OSError:
+                        continue
+                    entries.append((st.st_mtime, st.st_size, p))
+                    total += st.st_size
+                entries.sort(key=lambda e: (e[0], e[2].name))
+                for _, size, p in entries:
+                    if total <= self.max_disk_bytes:
+                        break
+                    try:
+                        p.unlink()
+                    except OSError:
+                        continue
+                    total -= size
+                    with self._lock:
+                        self.disk_evictions += 1
+        except OSError:                   # pragma: no cover - racing rmdir
+            pass
+
+    def invalidate(self, problem_hash: str) -> int:
+        """Explicitly drop every entry derived from one
+        ``problem.content_hash()`` — memory and disk spill both (the
+        ``sol:`` solution *and* every ``lay:`` layout keyed to it).  Use
+        when a topology's ground truth changed out from under its hash
+        inputs (e.g. the machine was re-ranked) or a served plan must be
+        force-recomputed.  Returns the number of distinct keys dropped (a
+        key present both in memory and on disk counts once)."""
+        h = str(problem_hash)
+
+        def _match(key: str) -> bool:
+            parts = key.split(":", 2)
+            return len(parts) >= 3 and parts[1] == h
+
+        doomed = set()
+        with self._lock:
+            for k in [k for k in self._mem if _match(k)]:
+                del self._mem[k]
+                self._exp.pop(k, None)
+                doomed.add(k)
+        if self.disk_dir is not None:
+            try:
+                with _dir_lock(self.disk_dir):
+                    for p in self.disk_dir.glob("*.json"):
+                        try:
+                            blob = json.loads(p.read_text())
+                            key = str(blob.get("key", ""))
+                            if _match(key):
+                                p.unlink()
+                                doomed.add(key)
+                        except (OSError, ValueError):
+                            continue
+            except OSError:               # pragma: no cover - racing rmdir
+                pass
+        with self._lock:
+            self.invalidations += len(doomed)
+        return len(doomed)
 
     def clear(self) -> None:
         """Drop the in-memory entries and reset counters (disk files stay)."""
         with self._lock:
             self._mem.clear()
+            self._exp.clear()
             self.hits = self.misses = self.disk_hits = 0
             self.puts = self.evictions = self.corrupt_drops = 0
+            self.expired = self.invalidations = self.disk_evictions = 0
 
     def stats(self) -> Dict[str, int]:
         with self._lock:
-            return {"size": len(self._mem), "hits": self.hits,
-                    "misses": self.misses, "disk_hits": self.disk_hits,
-                    "puts": self.puts, "evictions": self.evictions,
-                    "corrupt_drops": self.corrupt_drops}
+            out = {"size": len(self._mem), "hits": self.hits,
+                   "misses": self.misses, "disk_hits": self.disk_hits,
+                   "puts": self.puts, "evictions": self.evictions,
+                   "corrupt_drops": self.corrupt_drops,
+                   "expired": self.expired,
+                   "invalidations": self.invalidations,
+                   "disk_evictions": self.disk_evictions}
+        if self.disk_dir is not None:
+            files = n_bytes = 0
+            try:
+                for p in self.disk_dir.glob("*.json"):
+                    try:
+                        n_bytes += p.stat().st_size
+                        files += 1
+                    except OSError:
+                        continue
+            except OSError:               # pragma: no cover - racing rmdir
+                pass
+            out["disk_files"] = files
+            out["disk_bytes"] = n_bytes
+        return out
 
     # -- typed entry points ---------------------------------------------------
     # Hit paths hand back fresh copies (np.array copies; stats go through a

@@ -92,12 +92,20 @@ class MaskedGrid(CartGrid):
 # option parsing
 
 
-def _parse_fanouts(fanouts, num_nodes: int, depth: int) -> Tuple[int, ...]:
+def _parse_fanouts(fanouts, num_nodes: int, depth: int,
+                   node_sizes=None) -> Tuple[int, ...]:
     """``"16x16"`` / ``16`` / None -> per-level fan-outs multiplying to
-    ``num_nodes`` (None: balanced ``dims_create`` split of ``depth``
-    levels)."""
+    ``num_nodes``.  None derives the split: balanced ``dims_create`` over
+    ``depth`` levels for uniform pods, and the ragged-aware
+    :func:`repro.topology.machine.derive_fanouts` grouping when
+    ``node_sizes`` are uneven (subtree chip counts stay balanced instead
+    of lumping the large pods under one parent)."""
     if fanouts is None:
-        return dims_create(num_nodes, max(1, int(depth)))
+        depth = max(1, int(depth))
+        if node_sizes is not None and len(set(map(int, node_sizes))) > 1:
+            from repro.topology.machine import derive_fanouts
+            return derive_fanouts(node_sizes, depth)
+        return dims_create(num_nodes, depth)
     if isinstance(fanouts, int):
         fo: Tuple[int, ...] = (fanouts,)
     else:
@@ -331,7 +339,7 @@ class HierRefiner:
         node_sizes = np.bincount(a, minlength=n).astype(np.int64)
         initial = evaluate(grid, stencil, a, num_nodes=n, weighted="auto")
 
-        fanouts = _parse_fanouts(self.fanouts, n, self.depth)
+        fanouts = _parse_fanouts(self.fanouts, n, self.depth, node_sizes)
         level_specs = _parse_levels(self.levels, len(fanouts))
         context = f"hier[fanouts={'x'.join(map(str, fanouts))}]"
         per_level = [(name, sp or self.solver,

@@ -65,9 +65,11 @@ import functools
 import math
 import multiprocessing
 import os
+import pickle
 import sys
 import time
 from collections import OrderedDict
+from contextlib import contextmanager
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -80,12 +82,65 @@ from .engine import BoundaryController, RestartSeeder
 from .portfolio import PortfolioRefiner, run_temperature
 from .swap import RefineResult
 
-__all__ = ["ShardedPortfolioRefiner", "stacked_crossing_counts"]
+__all__ = ["ShardedPortfolioRefiner", "stacked_crossing_counts",
+           "IpcMeter", "measure_ipc"]
 
 #: auto backend: fork+pickle round-trips per temperature only pay off once
 #: the per-temperature batched numpy work dominates the IPC (measured
 #: crossover on the 16x28 ragged suite instance at K in the tens).
 _MP_AUTO_MIN_ELEMS = 1 << 14
+
+_PICKLE_PROTO = pickle.HIGHEST_PROTOCOL
+
+#: active :class:`IpcMeter` (coordinator-thread scoped via
+#: :func:`measure_ipc`); ``None`` = no accounting on the dispatch path.
+_IPC_METER: Optional["IpcMeter"] = None
+
+
+class IpcMeter:
+    """Measured IPC byte accounting for the stateless sharded protocol.
+
+    Records ``len(pickle.dumps(...))`` of the *actual* ``_block_step``
+    payload and result objects each dispatch ships — the bytes the mp
+    backend pays per block per temperature (full assignment + rng state
+    both directions), measured rather than estimated.  The serial backend
+    builds byte-identical task objects, so metering works regardless of
+    which backend executed.  ``benchmarks/serve_suite.py`` pins the
+    resident-worker serving claim (per-boundary IPC reduction) against
+    this baseline.
+    """
+
+    def __init__(self):
+        self.bytes_out = 0      # coordinator -> worker (payloads)
+        self.bytes_in = 0       # worker -> coordinator (results)
+        self.messages = 0       # block payloads shipped
+        self.dispatches = 0     # step() calls (one per temperature)
+
+    def record(self, payloads, results) -> None:
+        self.bytes_out += sum(len(pickle.dumps(p, _PICKLE_PROTO))
+                              for p in payloads)
+        self.bytes_in += sum(len(pickle.dumps(r, _PICKLE_PROTO))
+                             for r in results)
+        self.messages += len(payloads)
+        self.dispatches += 1
+
+    @property
+    def bytes_total(self) -> int:
+        return self.bytes_out + self.bytes_in
+
+
+@contextmanager
+def measure_ipc():
+    """Meter the stateless protocol's IPC bytes for every sharded refine
+    run inside the ``with`` body (single coordinator thread; nesting
+    restores the outer meter on exit)."""
+    global _IPC_METER
+    meter = IpcMeter()
+    prev, _IPC_METER = _IPC_METER, meter
+    try:
+        yield meter
+    finally:
+        _IPC_METER = prev
 
 
 #: memoized "is jax importable" verdict (``None`` = undecided).  Resolved
@@ -526,7 +581,7 @@ class ShardedPortfolioRefiner:
         restarts: List[dict] = []
         accepted = 0
 
-        pool = None
+        executor = None
         if backend == "mp" and S > 1:
             # fork keeps the workers cheap (no re-import; the tasks are
             # numpy-only, so jax's forked threadpools are never touched);
@@ -543,24 +598,32 @@ class ShardedPortfolioRefiner:
             if self.workers is not None:
                 n_proc = max(1, min(n_proc, self.workers))
             try:
-                pool = ProcessPoolExecutor(max_workers=n_proc,
-                                           mp_context=ctx)
+                executor = ProcessPoolExecutor(max_workers=n_proc,
+                                               mp_context=ctx)
             except (OSError, ValueError):    # pragma: no cover - no procs
-                pool = None
+                executor = None
+        pool_ok = executor is not None
 
         def step(payloads):
-            nonlocal pool, backend
-            if pool is not None and len(payloads) > 1:
+            nonlocal pool_ok, backend
+            results = None
+            if pool_ok and len(payloads) > 1:
                 try:
-                    return list(pool.map(_block_step, payloads))
+                    results = list(executor.map(_block_step, payloads))
                 except Exception:
-                    # dead workers (broken spawn main, OOM-killed child):
-                    # results are bit-identical either way, so finish the
-                    # run inline rather than failing the mapping
-                    pool.shutdown(wait=False)
-                    pool = None
+                    # dead workers (broken spawn main, OOM-killed child, a
+                    # task that raised): results are bit-identical either
+                    # way, so finish the run inline rather than failing the
+                    # mapping.  The executor itself is NOT torn down here —
+                    # the enclosing try/finally joins it exactly once,
+                    # crash or not, so worker processes are never orphaned.
+                    pool_ok = False
                     backend = "serial-fallback"
-            return [_block_step(p) for p in payloads]
+            if results is None:
+                results = [_block_step(p) for p in payloads]
+            if _IPC_METER is not None and payloads:
+                _IPC_METER.record(payloads, results)
+            return results
 
         def leader_state() -> Tuple[np.ndarray, float]:
             """Current portfolio leader (lexicographic best current key,
@@ -606,7 +669,7 @@ class ShardedPortfolioRefiner:
                     # blocking only buys parallel dispatch; ladder
                     # trajectories are blocking-invariant, so the serial
                     # backend batches all restarts into one kernel call
-                    n_chunks = min(S, len(active)) if pool is not None else 1
+                    n_chunks = min(S, len(active)) if pool_ok else 1
                     for chunk in np.array_split(np.arange(len(active)),
                                                 n_chunks):
                         if not chunk.size:
@@ -665,8 +728,12 @@ class ShardedPortfolioRefiner:
 
                 ctrl.adapt(ti, newly_killed, restarts, spawn)
         finally:
-            if pool is not None:
-                pool.shutdown(wait=True)
+            if executor is not None:
+                # wait=True even on the crash path: shutdown(wait=False)
+                # there would leave the worker processes unjoined (orphaned
+                # children outliving the refine — the satellite regression
+                # pinned by test_sharded_crash_leaves_no_orphans)
+                executor.shutdown(wait=True, cancel_futures=True)
 
         nodes = np.empty((K, grid.size), dtype=np.int64)
         for b, blk in zip(idx_blocks, blocks):

@@ -188,6 +188,7 @@ def repair_layout(previous, node_sizes: Sequence[int], *,
                   node_map: Optional[Sequence[Optional[int]]] = None,
                   fallback: Union[bool, str, None] = True,
                   cache: Union[None, bool, PlanCache] = None,
+                  server=None,
                   **repair_options):
     """Warm-start re-solve after churn: repair ``previous`` (the pre-churn
     :class:`~repro.core.plan.MappingSolution` / ``CartResult``) onto the
@@ -222,6 +223,10 @@ def repair_layout(previous, node_sizes: Sequence[int], *,
         survivor ``node_sizes`` are part of the content hash), so
         pre-churn entries stay intact and a repeated re-mesh onto the
         same survivors is served without re-annealing.
+      server: a running :class:`~repro.serving.PlanServer` — the repair is
+        admission-controlled through its bounded queue and solved against
+        its shared cache (``cache`` must then be left unset).  This is how
+        the runtime churn path rides the serving layer.
       repair_options: :class:`~repro.core.repair.RepairStage` knobs
         (``k``, ``sa_moves``, ``temperatures``, ``pin``, ``max_swaps``).
 
@@ -229,6 +234,13 @@ def repair_layout(previous, node_sizes: Sequence[int], *,
     (``solution.layout()`` gives the device layout;
     :func:`~repro.launch.mesh.repair_mapped_mesh` builds the jax Mesh).
     """
+    if server is not None:
+        if cache is not None:
+            raise ValueError("pass cache or server, not both: a served "
+                             "repair always uses the server's shared cache")
+        return server.submit_repair(
+            previous, node_sizes, mesh_shape=mesh_shape, stencil=stencil,
+            node_map=node_map, fallback=fallback, **repair_options).result()
     from .plan import MappingSolution
     from .repair import repair_plan
     if hasattr(previous, "solution"):               # CartResult

@@ -1,0 +1,32 @@
+"""Mapping-as-a-service: the resident plan server.
+
+The serving layer turns the one-shot ``cart_create`` facade into a
+long-lived service: a :class:`PlanServer` owns the shared plan cache
+(TTL, invalidation, size-bounded disk spill, warm-up sweeps), admits
+requests through a bounded queue with per-request deadlines, and runs
+``sharded[...]`` plans on persistent shard workers
+(:class:`ShardWorkerPool` / :class:`ResidentShardedRefiner`) that keep
+block state resident across temperatures — only leader keys and
+kill/restart masks cross the wire per boundary, and the result is
+bit-identical to the stateless engine.  :class:`PlanClient` is the
+caller-facing front (``submit`` / ``cart_create_async`` / ``stats``).
+"""
+from .client import CartTicket, PlanClient
+from .server import (AdmissionError, DEFAULT_SERVE_PLAN, PlanServer,
+                     PlanTicket, known_topologies, register_topology)
+from .workers import (ResidentShardedRefiner, ShardWorkerPool,
+                      WorkerPoolError)
+
+__all__ = [
+    "AdmissionError",
+    "CartTicket",
+    "DEFAULT_SERVE_PLAN",
+    "PlanClient",
+    "PlanServer",
+    "PlanTicket",
+    "ResidentShardedRefiner",
+    "ShardWorkerPool",
+    "WorkerPoolError",
+    "known_topologies",
+    "register_topology",
+]

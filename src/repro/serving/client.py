@@ -1,0 +1,141 @@
+"""Client front for the resident plan server.
+
+:class:`PlanClient` wraps a :class:`~repro.serving.server.PlanServer`
+with the shapes callers already know: ``cart_create_async`` mirrors
+:func:`repro.core.plan.cart_create` argument-for-argument but returns a
+:class:`CartTicket` immediately — the mapping solve proceeds on the
+server's persistent shard workers while the caller overlaps other work
+(allocating buffers, compiling) and collects the
+:class:`~repro.core.plan.CartResult` when it needs the mesh.  ``submit``
+is the lower-level form returning raw
+:class:`~repro.core.plan.MappingSolution` tickets; ``repair_async``
+routes the churn path; ``stats`` scrapes the server's health counters.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Union
+
+from ..core.plan import (CartResult, MappingPlan, MappingProblem,
+                         MappingSolution, Stencil)
+from .server import PlanServer, PlanTicket
+
+__all__ = ["PlanClient", "CartTicket"]
+
+
+class CartTicket:
+    """A :class:`PlanTicket` that resolves to a
+    :class:`~repro.core.plan.CartResult` (problem + layout), the shape
+    ``cart_create`` callers expect."""
+
+    def __init__(self, ticket: PlanTicket, problem: MappingProblem):
+        self._ticket = ticket
+        self._problem = problem
+        self._result: Optional[CartResult] = None
+
+    @property
+    def done(self) -> bool:
+        return self._ticket.done
+
+    @property
+    def deadline_missed(self) -> bool:
+        return self._ticket.deadline_missed
+
+    @property
+    def anytime_cut(self) -> bool:
+        return self._ticket.anytime_cut
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        return self._ticket.latency_s
+
+    def result(self, timeout: Optional[float] = None) -> CartResult:
+        if self._result is None:
+            sol: MappingSolution = self._ticket.result(timeout)
+            self._result = CartResult(problem=self._problem,
+                                      plan_key=sol.plan_key, solution=sol,
+                                      layout=sol.layout())
+        return self._result
+
+
+class PlanClient:
+    """Ergonomic facade over a running :class:`PlanServer`."""
+
+    def __init__(self, server: PlanServer):
+        self.server = server
+
+    # -- raw solution tickets ------------------------------------------------
+    def submit(self, problem: MappingProblem, *,
+               plan: Union[None, str, MappingPlan] = None,
+               deadline_ms: Optional[float] = None) -> PlanTicket:
+        """Enqueue a built problem; the ticket resolves to a
+        :class:`MappingSolution`."""
+        return self.server.submit(problem, plan=plan,
+                                  deadline_ms=deadline_ms)
+
+    # -- the cart_create mirror ----------------------------------------------
+    def cart_create_async(self, mesh_shape: Sequence[int],
+                          stencil: Optional[Stencil] = None, *,
+                          node_sizes: Optional[Sequence[int]] = None,
+                          chips_per_pod: Optional[int] = None,
+                          periodic: Optional[Sequence[bool]] = None,
+                          objective: str = "lex",
+                          plan: Union[None, str, MappingPlan] = None,
+                          deadline_ms: Optional[float] = None) -> CartTicket:
+        """:func:`~repro.core.plan.cart_create`, served: same arguments
+        (``plan=None`` means the server's default plan), returns
+        immediately with a :class:`CartTicket`.  ``deadline_ms`` makes the
+        request anytime — the best valid layout within the deadline."""
+        ticket = self.server.submit(
+            mesh_shape=mesh_shape, stencil=stencil, node_sizes=node_sizes,
+            chips_per_pod=chips_per_pod, periodic=periodic,
+            objective=objective, plan=plan, deadline_ms=deadline_ms)
+        # rebuild the problem the server solved (same normalization path)
+        # so the CartTicket can shape the CartResult without a round-trip
+        problem = self._problem_of(mesh_shape, stencil, node_sizes,
+                                   chips_per_pod, periodic, objective)
+        return CartTicket(ticket, problem)
+
+    def cart_create(self, mesh_shape: Sequence[int],
+                    stencil: Optional[Stencil] = None,
+                    timeout: Optional[float] = None,
+                    **kwargs) -> CartResult:
+        """Synchronous convenience: ``cart_create_async(...).result()``."""
+        return self.cart_create_async(mesh_shape, stencil,
+                                      **kwargs).result(timeout)
+
+    # -- the churn path ------------------------------------------------------
+    def repair_async(self, previous, node_sizes: Sequence[int], *,
+                     deadline_ms: Optional[float] = None,
+                     **repair_options) -> PlanTicket:
+        """Route a warm-start repair (``remap.repair_layout``) through the
+        server's admission queue and shared cache."""
+        return self.server.submit_repair(previous, node_sizes,
+                                         deadline_ms=deadline_ms,
+                                         **repair_options)
+
+    # -- observability -------------------------------------------------------
+    def stats(self) -> dict:
+        """Server health: queue depth, per-request latency percentiles,
+        cache hit rate, deadline misses — see :meth:`PlanServer.stats`."""
+        return self.server.stats()
+
+    def invalidate(self, problem: Union[str, MappingProblem]) -> int:
+        return self.server.invalidate(problem)
+
+    @staticmethod
+    def _problem_of(mesh_shape, stencil, node_sizes, chips_per_pod,
+                    periodic, objective) -> MappingProblem:
+        import math
+        from ..core.plan import blocked_node_sizes
+        mesh_shape = tuple(int(d) for d in mesh_shape)
+        if stencil is None:
+            stencil = Stencil.nearest_neighbor(len(mesh_shape))
+        if node_sizes is not None:
+            node_sizes = tuple(int(n) for n in node_sizes)
+        else:
+            node_sizes = blocked_node_sizes(math.prod(mesh_shape),
+                                            chips_per_pod)
+        return MappingProblem(mesh_shape, stencil, node_sizes,
+                              objective=objective,
+                              periodic=None if periodic is None
+                              else tuple(periodic))

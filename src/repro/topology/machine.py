@@ -23,12 +23,64 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 __all__ = ["LevelSpec", "MachineSpec", "RaggedMachineSpec", "TopologyTree",
-           "V5E_POD", "V5E_2POD", "V5E_4RACK"]
+           "derive_fanouts", "V5E_POD", "V5E_2POD", "V5E_4RACK"]
+
+
+def _ordered_factorizations(n: int, depth: int):
+    """All ordered ``depth``-tuples of positive ints multiplying to ``n``
+    (fan-outs of 1 allowed: a level may be trivial, e.g. a prime pod
+    count at depth 2)."""
+    if depth == 1:
+        yield (n,)
+        return
+    for f in range(1, n + 1):
+        if n % f == 0:
+            for rest in _ordered_factorizations(n // f, depth - 1):
+                yield (f,) + rest
+
+
+def derive_fanouts(node_sizes: Sequence[int], depth: int = 2) \
+        -> Tuple[int, ...]:
+    """Per-level fan-outs grouping ``len(node_sizes)`` pods into a
+    ``depth``-level hierarchy, derived from the *actual* per-pod chip
+    counts instead of assuming contiguous equal pod groups.
+
+    The balanced pod-count split (``dims_create`` on ``len(node_sizes)``)
+    is only right for uniform pods: on a ragged allocation it can lump
+    every large pod under one parent, so subtree chip counts — the
+    restricted problems the hierarchical mapper solves — end up wildly
+    skewed.  This derivation scores every ordered factorization of the pod
+    count by the total chip imbalance of the contiguous groups it induces
+    (sum over grouping levels of ``max - min`` subtree chips) and returns
+    the most balanced one; ties prefer the balanced ``dims_create`` split,
+    then squarer factors.  Uniform pods score 0 for every candidate, so
+    uniform machines keep the exact ``dims_create`` fan-outs.
+    """
+    sizes = [int(s) for s in node_sizes]
+    if not sizes or any(s < 1 for s in sizes):
+        raise ValueError(f"node_sizes must be positive, got {node_sizes!r}")
+    n, depth = len(sizes), max(1, int(depth))
+    starts = np.concatenate(([0], np.cumsum(np.asarray(sizes,
+                                                       dtype=np.int64))))
+
+    def score(fo: Tuple[int, ...]) -> int:
+        total = 0
+        for level in range(1, len(fo)):      # grouping cuts above the pods
+            stride = math.prod(fo[level:])
+            groups = np.diff(starts[::stride])
+            total += int(groups.max() - groups.min())
+        return total
+
+    from repro.core.grid import dims_create   # lazy: keeps topology light
+    balanced = tuple(dims_create(n, depth))
+    best = min(_ordered_factorizations(n, depth),
+               key=lambda fo: (score(fo), max(fo), fo))
+    return balanced if score(balanced) == score(best) else best
 
 
 @dataclass(frozen=True)
@@ -91,8 +143,22 @@ class MachineSpec:
         """The paper's N x n allocation: pods as nodes."""
         return [self.chips_per_pod] * self.num_pods
 
-    def topology_tree(self) -> "TopologyTree":
-        """The machine's grouping hierarchy as a navigable tree."""
+    def topology_tree(self, depth: Optional[int] = None) -> "TopologyTree":
+        """The machine's grouping hierarchy as a navigable tree.
+
+        Machines without an explicit ``levels`` description can request a
+        ``depth``-level hierarchy derived from the actual per-pod chip
+        counts (:func:`derive_fanouts`) — ragged allocations get balanced
+        subtree chip counts instead of the contiguous-equal-groups
+        assumption."""
+        if self.levels:
+            if depth is not None and depth != len(self.levels):
+                raise ValueError(
+                    f"{self.name!r} declares {len(self.levels)} levels; "
+                    f"cannot re-derive at depth {depth}")
+            return TopologyTree(self.node_sizes(), self.levels)
+        if depth is not None and int(depth) >= 1:
+            return TopologyTree.derive(self.node_sizes(), int(depth))
         return TopologyTree(self.node_sizes(), self.levels)
 
     def torus_hop_path(self, a: int, b: int) -> list[Tuple[int, Tuple[int, ...], int]]:
@@ -206,6 +272,22 @@ class TopologyTree:
         self.levels = levels
         self._chip_starts = np.concatenate(
             ([0], np.cumsum(np.asarray(sizes, dtype=np.int64))))
+
+    @classmethod
+    def derive(cls, pod_sizes: Sequence[int], depth: int = 2,
+               level_names: Sequence[str] = ()) -> "TopologyTree":
+        """Build a ``depth``-level tree whose fan-outs are derived from
+        the actual ``pod_sizes`` grouping (:func:`derive_fanouts`) —
+        the ragged-aware counterpart of assuming equal contiguous pod
+        groups."""
+        fanouts = derive_fanouts(pod_sizes, depth)
+        names = (list(level_names) or
+                 [f"l{i + 1}" for i in range(len(fanouts))])
+        if len(names) != len(fanouts):
+            raise ValueError(f"{len(names)} level names for "
+                             f"{len(fanouts)} levels")
+        return cls(pod_sizes,
+                   tuple(LevelSpec(nm, f) for nm, f in zip(names, fanouts)))
 
     # -- shape ---------------------------------------------------------------
     @property

@@ -351,7 +351,8 @@ def test_plan_cache_lru_eviction_and_clear():
     cache.clear()
     assert cache.stats() == {"size": 0, "hits": 0, "misses": 0,
                              "disk_hits": 0, "puts": 0, "evictions": 0,
-                             "corrupt_drops": 0}
+                             "corrupt_drops": 0, "expired": 0,
+                             "invalidations": 0, "disk_evictions": 0}
 
 
 def test_plan_cache_disk_spill_roundtrip(tmp_path):
@@ -674,3 +675,114 @@ def test_ad_hoc_device_instances_bypass_the_cache():
     np.testing.assert_array_equal(s1.assignment, s2.assignment)
     # the same configuration without the factory is cacheable
     assert DevicePortfolioRefiner(k=2, sa_moves=30).as_stage().cacheable
+
+
+# ---------------------------------------------------------------------------
+# serving-cache extensions: TTL, invalidation, disk budget, concurrency
+
+
+def test_plan_cache_ttl_expiry_mem_and_disk(tmp_path):
+    """A TTL'd entry serves until its deadline then reads as a miss — in
+    memory AND through the disk spill (the expiry rides inside the blob,
+    so a fresh cache over the same directory honors it too)."""
+    cache = PlanCache(disk_dir=tmp_path, ttl_s=0.05)
+    cache.put("sol:h1:planA", {"v": 1})
+    assert cache.get("sol:h1:planA")["v"] == 1
+    time.sleep(0.08)
+    assert cache.get("sol:h1:planA") is None
+    assert cache.expired >= 1
+    # the expired spill file was dropped on read, not left to rot
+    c2 = PlanCache(disk_dir=tmp_path)
+    assert c2.get("sol:h1:planA") is None
+    # per-put override: ttl_s=None pins the entry forever
+    cache.put("sol:h1:planB", {"v": 2}, ttl_s=None)
+    time.sleep(0.08)
+    assert cache.get("sol:h1:planB")["v"] == 2
+
+
+def test_plan_cache_invalidate_by_problem_hash(tmp_path):
+    """invalidate(problem_hash) drops every entry of that problem —
+    solutions and layouts, memory and disk — and leaves other problems'
+    entries untouched."""
+    cache = PlanCache(disk_dir=tmp_path)
+    cache.put("sol:aaa:planA", {"v": 1})
+    cache.put("lay:aaa:planA:rowmajor", {"v": 2})
+    cache.put("sol:bbb:planA", {"v": 3})
+    assert cache.invalidate("aaa") == 2
+    assert cache.invalidations == 2
+    assert cache.get("sol:aaa:planA") is None
+    assert cache.get("lay:aaa:planA:rowmajor") is None
+    assert cache.get("sol:bbb:planA")["v"] == 3
+    # disk spills of the invalidated problem are gone for fresh readers
+    c2 = PlanCache(disk_dir=tmp_path)
+    assert c2.get("sol:aaa:planA") is None
+    assert c2.get("sol:bbb:planA")["v"] == 3
+    assert cache.invalidate("zzz") == 0
+
+
+def test_plan_cache_disk_budget_evicts_lru_order(tmp_path):
+    """Regression for the disk-budget sweep's eviction ORDER: the sweep
+    must drop oldest-mtime spills first, and a disk *read* refreshes the
+    entry's mtime — so a recently-read entry survives a newer-but-unread
+    one."""
+    pad = "x" * 200
+    cache = PlanCache(maxsize=1, disk_dir=tmp_path, max_disk_bytes=600)
+    cache.put("sol:h1:k0", {"v": 0, "pad": pad})
+    time.sleep(0.05)
+    cache.put("sol:h2:k1", {"v": 1, "pad": pad})      # k0 falls out of mem
+    time.sleep(0.05)
+    assert cache.get("sol:h1:k0")["v"] == 0           # disk hit -> mtime now
+    assert cache.disk_hits == 1
+    cache.put("sol:h3:k2", {"v": 2, "pad": pad})      # budget forces a sweep
+    assert cache.disk_evictions >= 1
+    # k1 (oldest mtime) was evicted; the freshly-read k0 survived
+    c2 = PlanCache(disk_dir=tmp_path)
+    assert c2.get("sol:h2:k1") is None
+    assert c2.get("sol:h1:k0")["v"] == 0
+    assert c2.get("sol:h3:k2")["v"] == 2
+    st = cache.stats()
+    assert st["disk_bytes"] <= 600 and st["disk_files"] == 2
+
+
+def test_plan_cache_concurrent_ttl_and_invalidate(tmp_path):
+    """Satellite: multi-threaded get/put with TTL expiry racing
+    invalidation — no exceptions, and the counters stay consistent (every
+    lookup is exactly one hit, one disk hit, or one miss)."""
+    import threading
+    cache = PlanCache(maxsize=16, disk_dir=tmp_path, ttl_s=0.02)
+    stop = threading.Event()
+    errors = []
+    lookups = [0] * 4
+
+    def worker(i):
+        k = 0
+        try:
+            while not stop.is_set():
+                key = f"sol:h{i}:k{k % 8}"
+                cache.put(key, {"v": k}, ttl_s=0.01 if k % 3 else None)
+                got = cache.get(key)
+                assert got is None or isinstance(got["v"], int)
+                lookups[i] += 1
+                k += 1
+        except BaseException as e:          # surfaced to the main thread
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    t_end = time.perf_counter() + 0.6
+    while time.perf_counter() < t_end:
+        for i in range(4):
+            cache.invalidate(f"h{i}")
+        time.sleep(0.01)
+    stop.set()
+    for t in threads:
+        t.join(timeout=10)
+    assert not errors
+    st = cache.stats()
+    # every lookup is exactly one hit or one miss (disk hits count as
+    # hits — the entry was served — plus the disk_hits sub-counter)
+    assert st["hits"] + st["misses"] == sum(lookups)
+    assert st["disk_hits"] <= st["hits"]
+    assert st["size"] <= 16
+    assert all(isinstance(v, int) and v >= 0 for v in st.values())

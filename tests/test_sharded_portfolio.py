@@ -437,3 +437,40 @@ def test_restart_seeds_are_fresh_and_reported():
     assert len(set(restart_seeds)) == len(restart_seeds)
     assert not set(restart_seeds) & {11, 3, 7, 5}
     assert min(restart_seeds) > 11      # max(seeds)+1 counting upward
+
+
+# ---------------------------------------------------------------------------
+# crash injection: a worker raising mid-run must not orphan the pool
+
+
+def test_sharded_crash_leaves_no_orphans(monkeypatch):
+    """Regression for the ProcessPoolExecutor leak: when a worker task
+    raises mid-run, the engine must fall back to the serial path (same
+    result — the coordinator state is untouched) AND still shut the
+    executor down (the try/finally), leaving no orphaned children."""
+    import multiprocessing as mp
+    import os
+    import repro.core.refine.sharded as sh
+    grid, stencil, a = _kill_instance(3)
+    kw = dict(shards=2, k=4, seed=3, rounds=1, max_passes=2, sa_moves=40)
+    want = ShardedPortfolioRefiner(backend="serial", **kw).refine(
+        grid, stencil, a, num_nodes=len(KILL_SIZES))
+
+    before = set(p.pid for p in mp.active_children())
+    parent = os.getpid()
+    real = sh._block_step
+
+    def boom(payload):
+        if os.getpid() != parent:     # fork children inherit the patch
+            raise RuntimeError("injected worker crash")
+        return real(payload)
+
+    monkeypatch.setattr(sh, "_block_step", boom)
+    res = ShardedPortfolioRefiner(backend="mp", **kw).refine(
+        grid, stencil, a, num_nodes=len(KILL_SIZES))
+    assert res.stats["backend"] == "serial-fallback"
+    np.testing.assert_array_equal(res.assignment, want.assignment)
+    assert res.stats["ladder_keys"] == want.stats["ladder_keys"]
+    # the finally-shutdown joined every pool process: nothing new survives
+    after = set(p.pid for p in mp.active_children())
+    assert after <= before

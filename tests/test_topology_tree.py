@@ -201,3 +201,64 @@ def test_hier_assignment_bijection(seed):
     # and never lexicographically worse than its input
     assert (res.final.j_max, res.final.j_sum) \
         <= (res.initial.j_max, res.initial.j_sum)
+
+
+# ---------------------------------------------------------------------------
+# ragged-aware fan-out derivation (derive_fanouts / TopologyTree.derive /
+# MachineSpec.topology_tree(depth=...))
+
+
+def test_derive_fanouts_ragged_round_trip():
+    """A ragged allocation derives fan-outs from the actual chip counts:
+    the tree round-trips node_sizes exactly, and its level-1 subtree chip
+    totals are no more skewed than the pod-count-only dims_create split
+    (here: perfectly balanced 16/16 vs dims_create's 8..12 spread)."""
+    from repro.core.grid import dims_create
+    from repro.topology.machine import derive_fanouts
+    sizes = (4, 4, 4, 4, 2, 2, 6, 6)
+
+    def spread(fanouts):
+        starts = np.concatenate(([0], np.cumsum(sizes)))
+        groups = np.diff(starts[::math.prod(fanouts[1:])])
+        return int(groups.max() - groups.min())
+
+    fo = derive_fanouts(sizes, depth=2)
+    assert math.prod(fo) == len(sizes)
+    assert spread(fo) <= spread(tuple(dims_create(len(sizes), 2)))
+    assert spread(fo) == 0                      # this instance balances
+
+    tree = TopologyTree.derive(sizes, depth=2)
+    assert tree.depth == 2
+    assert tree.node_sizes() == list(sizes)     # exact round-trip
+    assert tree.num_chips == sum(sizes)
+    # sibling subtrees at level 1 carry equal chip counts
+    totals = [tree.chip_range(1, i)[1] - tree.chip_range(1, i)[0]
+              for i in range(tree.num_nodes_at(1))]
+    assert len(set(totals)) == 1
+
+
+def test_derive_fanouts_uniform_keeps_dims_create():
+    """Uniform pods score 0 imbalance for every factorization, so the
+    derivation must return exactly the dims_create fan-outs (bit-compat
+    with the pre-derivation contiguous-equal-groups assumption)."""
+    from repro.core.grid import dims_create
+    from repro.topology.machine import derive_fanouts
+    for n, depth in ((8, 2), (12, 2), (16, 3), (7, 2)):
+        assert derive_fanouts([16] * n, depth) == tuple(dims_create(n, depth))
+
+
+def test_machine_topology_tree_depth_derivation():
+    """MachineSpec.topology_tree(depth=) derives for level-less machines,
+    ragged specs use their true sizes, and machines with declared levels
+    reject a conflicting re-derivation."""
+    ragged = RaggedMachineSpec(pod_sizes=(4, 4, 4, 4, 2, 2, 6, 6))
+    tree = ragged.topology_tree(depth=2)
+    assert tree.node_sizes() == list(ragged.pod_sizes)
+    assert tree.depth == 2
+    flat = MachineSpec(num_pods=6, torus=(2, 2)).topology_tree(depth=2)
+    assert flat.depth == 2 and flat.num_pods == 6
+    with pytest.raises(ValueError):
+        V5E_4RACK.topology_tree(depth=3)     # declares 2 levels
+    # depth matching the declaration is a no-op passthrough
+    assert V5E_4RACK.topology_tree(depth=len(V5E_4RACK.levels)).depth \
+        == len(V5E_4RACK.levels)
