@@ -25,7 +25,9 @@ python -m pytest -q tests/test_refine_batch.py tests/test_portfolio.py \
     tests/test_run_temperature_props.py tests/test_device_portfolio.py \
     tests/test_elastic_remesh.py tests/test_linksim_replay.py \
     tests/test_plan.py tests/test_repair.py \
-    tests/test_hier.py tests/test_topology_tree.py tests/test_serving.py
+    tests/test_hier.py tests/test_topology_tree.py tests/test_serving.py \
+    tests/test_graph.py tests/test_graph_plan.py \
+    tests/test_cost_weight_parity.py tests/test_single_flight.py
 
 # smoke the whole refinement registry (refined: / refined2: / annealed: /
 # portfolio: / sharded:) incl. the linksim replay columns (ragged rows
@@ -197,6 +199,40 @@ assert mp.active_children() == [], mp.active_children()
 print(f"serve smoke OK: warm={warm} anytime_cut={a.anytime_cut} "
       f"latency={a.latency_s * 1e3:.0f}ms p50={st['latency_p50_ms']:.1f}ms "
       f"hit_rate={st['cache_hit_rate']:.2f}")
+EOF
+
+# graph-layer suite: every available_mappers() spelling bit-identical
+# between the grid and graph: paths with independent cache keys, plus
+# mapped-vs-blocked DCI on every registry arch with exact linksim replay
+# agreement (exit 1 on any FAIL) — the --tiny smoke first (in-process
+# spellings, 3 archs), then the full run emitting the machine-readable
+# BENCH_10.json perf snapshot
+mkdir -p results
+PYTHONPATH=src python -m benchmarks.graph_suite --tiny
+JAX_PLATFORM_NAME=cpu PYTHONPATH=src python -m benchmarks.graph_suite \
+    --json results/BENCH_10.json
+
+# graph smoke: extract a real arch comm graph -> map it through the graph:
+# plan flavor -> replay the mapped traffic exactly, warm hit on re-solve
+PYTHONPATH=src python - <<'EOF'
+import numpy as np
+from repro.analysis import replay_graph
+from repro.core import PlanCache, arch_comm_graph, graph_create
+
+cache = PlanCache()
+g = arch_comm_graph("mixtral-8x7b", 64)
+sizes = (8,) * 8
+cold = graph_create(g, node_sizes=sizes, cache=cache)
+assert cold.plan_key.startswith("graph:") and not cold.from_cache
+rep = replay_graph(g, cold.solution.assignment, sizes)
+assert rep.dci_total == cold.j_sum and rep.max_dci_pod() == cold.j_max
+warm = graph_create(g, node_sizes=sizes, cache=cache)
+assert warm.from_cache
+np.testing.assert_array_equal(cold.layout, warm.layout)
+blocked = graph_create(g, node_sizes=sizes, reorder=False, cache=False)
+print(f"graph smoke OK: plan={cold.plan_key} edges={len(g.indices)} "
+      f"Jsum {blocked.j_sum / cold.j_sum:.2f}x better than blocked "
+      f"cache={cache.stats()}")
 EOF
 
 # cart_create smoke: cold solve -> warm cache hit, asserted via counters

@@ -1,6 +1,8 @@
 from .hlo import CollectiveStat, HloModule, parse_hlo
-from .linksim import LinkReport, simulate
+from .linksim import (LinkReport, graph_collectives, replay_assignment,
+                      replay_graph, simulate)
 from .roofline import RooflineReport, roofline_from_module
 
 __all__ = ["CollectiveStat", "HloModule", "parse_hlo", "LinkReport",
-           "simulate", "RooflineReport", "roofline_from_module"]
+           "simulate", "graph_collectives", "replay_assignment",
+           "replay_graph", "RooflineReport", "roofline_from_module"]

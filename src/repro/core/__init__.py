@@ -3,6 +3,7 @@ mapping for Cartesian grids (Hunold et al., CS.DC 2020)."""
 from .cost import MappingCost, blocked_assignment, evaluate, node_of_rank_blocked
 from .cost_delta import (BatchSwapDelta, Delta, IncrementalCost,
                          NeighborTable, PortfolioCost, PortfolioSwapDelta)
+from .graph import CommGraph, GraphGrid, MaskedGraphGrid, arch_comm_graph
 from .grid import CartGrid, dims_create
 from .mapping import (ANNEALED_PREFIX, DEVICE_PREFIX, HIER_PREFIX, MAPPERS,
                       PORTFOLIO_PREFIX, REFINE_PREFIXES, REFINED_PREFIX,
@@ -18,7 +19,8 @@ from .refine import (BaseStage, DevicePortfolioRefiner, HierRefiner,
                      StageResult, SwapRefiner, hier_subtree_cache,
                      refine_assignment, stacked_crossing_counts)
 from .plan import (CartResult, MappingPlan, MappingProblem, MappingSolution,
-                   PlanCache, cart_create, default_plan_cache, parse_plan)
+                   PlanCache, cart_create, default_plan_cache, graph_create,
+                   parse_plan)
 from .remap import (device_layout, elastic_portfolio_plan, ensure_refined,
                     layout_cost, mapped_device_array, repair_layout)
 from .repair import (RepairInapplicable, RepairSeed, RepairStage,
@@ -27,6 +29,7 @@ from .repair import (RepairInapplicable, RepairSeed, RepairStage,
 from .stencil import Stencil, resolve_weighted
 
 __all__ = [
+    "CommGraph", "GraphGrid", "MaskedGraphGrid", "arch_comm_graph",
     "CartGrid", "dims_create", "Stencil", "resolve_weighted", "MappingCost",
     "evaluate", "blocked_assignment", "node_of_rank_blocked",
     "BatchSwapDelta", "Delta", "IncrementalCost", "NeighborTable",
@@ -46,7 +49,8 @@ __all__ = [
     "refine_assignment", "RefinedMapper",
     "Stage", "StageResult", "BaseStage", "RefineStage",
     "MappingProblem", "MappingPlan", "MappingSolution", "parse_plan",
-    "PlanCache", "default_plan_cache", "cart_create", "CartResult",
+    "PlanCache", "default_plan_cache", "cart_create", "graph_create",
+    "CartResult",
     "device_layout", "layout_cost", "mapped_device_array", "ensure_refined",
     "elastic_portfolio_plan", "repair_layout",
     "RepairInapplicable", "RepairSeed", "RepairStage", "repair_seed",

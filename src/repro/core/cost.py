@@ -89,7 +89,13 @@ def evaluate(grid: CartGrid, stencil: Stencil, node_of_pos: np.ndarray,
         src_nodes = node_of_pos
         crossing = valid & (src_nodes != node_of_pos[tgt])
         total += w * float(crossing.sum())
-        np.add.at(per_node, src_nodes[crossing], w)
+        # w * count (not count repeated additions of w): the exact
+        # accumulation IncrementalCost._per_node uses, so the two paths
+        # are bit-identical for arbitrary float weights (w=0.1 over six
+        # edges differs in the last ulp between the two orders —
+        # tests/test_cost_weight_parity.py pins this).
+        per_node += w * np.bincount(src_nodes[crossing],
+                                    minlength=n_nodes).astype(np.float64)
     bottleneck = int(per_node.argmax()) if n_nodes else 0
     return MappingCost(j_sum=total, j_max=float(per_node.max(initial=0.0)),
                        per_node=per_node, bottleneck=bottleneck)

@@ -20,9 +20,11 @@ Two query paths share the same integer-count core:
 State is kept as *integer* crossing counts per (node, offset), so the
 reconstructed ``j_sum`` matches a full recomputation bit-for-bit (same
 ``total += w * count`` accumulation order as ``evaluate``), as does
-``per_node`` for unit weights.  For arbitrary float weights ``per_node``
-computes ``w * count`` where ``evaluate`` adds ``w`` count times — equal
-for dyadic/integer weights, otherwise within an ulp.  The batch path
+``per_node`` for **arbitrary float weights**: both sides accumulate
+``w * count`` per offset in ascending-offset order (``evaluate`` used to
+add ``w`` count times instead, which differs in the last ulp for weights
+like 0.1 — fixed, and pinned by ``tests/test_cost_weight_parity.py``).
+The batch path
 accumulates per-offset counts in the same ascending-``j`` order, so its
 ``d_j_sum`` / ``new_per_node`` are bit-exact with the scalar
 :meth:`~IncrementalCost.delta_swap` / :meth:`~IncrementalCost.peek_per_node`
@@ -116,6 +118,16 @@ class NeighborTable:
             in_src[j][tgt[src]] = src
         return NeighborTable(out_valid, out_tgt, in_valid, in_src)
 
+    @staticmethod
+    def from_graph(graph) -> "NeighborTable":
+        """The table of a :class:`~repro.core.graph.CommGraph`: one row
+        per slot of its partial-permutation decomposition (each slot is
+        injective on its valid domain by construction, which is exactly
+        what keeps the single-valued inverse above sound).  For
+        stencil-extracted graphs this returns arrays bit-identical to
+        ``build(grid, stencil)`` on the original grid."""
+        return NeighborTable.build(graph.grid(), graph.slot_stencil())
+
 
 @dataclass(frozen=True)
 class Delta:
@@ -188,6 +200,18 @@ class IncrementalCost:
             self._count_off[j] = int(crossing.sum())
             np.add.at(self._count_node[:, j], self.node_of_pos[crossing], 1)
         self._per_node_cache: Optional[np.ndarray] = None
+
+    @classmethod
+    def from_graph(cls, graph, node_of_pos: np.ndarray,
+                   num_nodes: Optional[int] = None,
+                   weighted="auto") -> "IncrementalCost":
+        """Cost state over a :class:`~repro.core.graph.CommGraph`: the
+        graph's slot decomposition plays the stencil (offset ``(j+1,)`` =
+        slot ``j``), so every delta query below works unchanged.  For
+        stencil-extracted graphs the state — table, weights, counts — is
+        bit-identical to the grid-path constructor."""
+        return cls(graph.grid(), graph.slot_stencil(), node_of_pos,
+                   num_nodes=num_nodes, weighted=weighted)
 
     # -- read-only views ----------------------------------------------------
     @property
@@ -475,9 +499,8 @@ class PortfolioCost:
     (K, N, k), and the cached per-node loads (K, N) are rebuilt from counts
     with the same ascending-offset accumulation — so every row of every
     quantity is bit-exact with a scalar ``IncrementalCost`` tracking the
-    same assignment (for unit/dyadic weights; within an ulp otherwise,
-    same caveat as the scalar class).  The neighbour table is built once
-    and shared by all K states.
+    same assignment, for arbitrary float weights.  The neighbour table is
+    built once and shared by all K states.
 
     Usage::
 
@@ -527,6 +550,18 @@ class PortfolioCost:
         self._per_node = np.zeros((self.n_starts, self.n_nodes),
                                   dtype=np.float64)
         self._rebuild_rows(np.arange(self.n_starts))
+
+    @classmethod
+    def from_graph(cls, graph, assignments: np.ndarray,
+                   num_nodes: Optional[int] = None, weighted="auto",
+                   table: Optional[NeighborTable] = None,
+                   counts=None) -> "PortfolioCost":
+        """K stacked cost states over a
+        :class:`~repro.core.graph.CommGraph` (slot decomposition as the
+        stencil — see :meth:`IncrementalCost.from_graph`)."""
+        return cls(graph.grid(), graph.slot_stencil(), assignments,
+                   num_nodes=num_nodes, weighted=weighted, table=table,
+                   counts=counts)
 
     def _rebuild_rows(self, rows: np.ndarray) -> None:
         # same ascending-offset `per_node += w * count` accumulation as the

@@ -1,0 +1,585 @@
+"""Arbitrary sparse communication graphs as first-class mapping problems.
+
+The paper's machinery exploits Cartesian stencil structure, but *Better
+Process Mapping and Sparse Quadratic Assignment* (1702.04164) shows the
+same local search applies to mapping as sparse QAP over any communication
+graph — and this repo already *generates* those graphs: MoE all-to-all
+dispatch (``models/moe.py``), traced collectives
+(:class:`~repro.analysis.hlo.CollectiveStat`).  This module is the bridge:
+
+* :class:`CommGraph` — a directed weighted graph in CSR form with a
+  stable content hash, plus extractors:
+  :meth:`CommGraph.from_stencil` (exact stencil round-trip),
+  :meth:`CommGraph.from_hlo` (replica-group edges weighted by
+  :meth:`~repro.analysis.hlo.CollectiveStat.wire_bytes_per_device`),
+  :meth:`CommGraph.from_moe` (expert-parallel all-to-all from an
+  :class:`~repro.configs.ArchConfig`), and :func:`arch_comm_graph`
+  (a full-arch TP/DP/MoE composite).
+* :class:`GraphGrid` — the graph re-expressed in the *grid protocol*
+  (``dims`` / ``periodic`` / ``coords()`` / ``shift_ranks()``), so the
+  entire refine stack — ``NeighborTable`` / ``IncrementalCost`` /
+  ``PortfolioCost``, every registered refiner, ``evaluate``, linksim
+  replay — runs on graphs **unmodified**.
+* :class:`MaskedGraphGrid` — the induced-subgraph analog of
+  :class:`~repro.core.refine.hier.MaskedGrid`, so the hierarchical
+  ``hier:`` stage recurses into graph subproblems too.
+
+The trick: ``shift_ranks(offset)`` returns one *partial permutation* of
+positions (≤1 out-edge per source, ≤1 in-edge per target — what makes
+``NeighborTable``'s single-valued inverse sound).  A ``CommGraph``
+therefore decomposes its edge set into **slots**: partial permutations of
+uniform weight.  Slot ``j`` answers ``shift_ranks((j + 1,))``; the slot
+weights form a synthetic 1-D :class:`~repro.core.stencil.Stencil` with
+offsets ``((1,), (2,), ...)``.  For :meth:`from_stencil` graphs the slots
+*are* the original per-offset ``shift_ranks`` arrays (stored, not
+re-derived), which is what makes the stencil round-trip bit-exact: the
+graph path builds the very same ``NeighborTable`` arrays, weights, and
+crossing counts as the grid path, so J_sum / J_max / per-node loads and
+every scalar and batched swap delta agree to the last bit (pinned by
+``tests/test_graph.py``).  General graphs derive slots by a deterministic
+greedy coloring per weight class.
+
+Usage::
+
+    from repro.core import CommGraph, MappingProblem, parse_plan
+
+    g = CommGraph.from_stencil(grid, stencil)        # exact round-trip
+    g = CommGraph.from_hlo(hlo_module, num_devices=8)
+    g = CommGraph.from_moe("mixtral_8x7b", num_devices=64)
+
+    problem = MappingProblem.from_graph(g, node_sizes=(8,) * 8)
+    sol = parse_plan("annealed:graphgreedy").solve(problem)
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .stencil import Stencil
+
+__all__ = ["CommGraph", "GraphGrid", "MaskedGraphGrid", "arch_comm_graph"]
+
+
+# ---------------------------------------------------------------------------
+# the graph
+
+
+class CommGraph:
+    """A directed, weighted communication graph in CSR form.
+
+    ``indptr``/``indices``/``weights`` are the usual CSR triplet over
+    ``n`` vertices (MPI ranks / devices): vertex ``u``'s out-edges are
+    ``indices[indptr[u]:indptr[u+1]]`` with byte weights
+    ``weights[...]``.  Edges are coalesced (one entry per ``(src, dst)``,
+    duplicate weights summed), sorted by ``(src, dst)``, strictly
+    positive, and never self-loops — construction canonicalizes, so two
+    graphs built from the same edge multiset in any order are
+    array-identical and share a :meth:`content_hash`.
+
+    ``slots`` is the partial-permutation decomposition the cost core
+    consumes (see the module docstring).  Stencil-extracted graphs carry
+    their slots *and* provenance (mesh shape, periodicity, offsets,
+    weights) explicitly, so the round trip back to the grid path is
+    structural, not reconstructed.
+    """
+
+    def __init__(self, n: int, indptr: np.ndarray, indices: np.ndarray,
+                 weights: np.ndarray, name: str = "graph",
+                 provenance: Optional[dict] = None,
+                 slots: Optional[List[Tuple[float, np.ndarray,
+                                            np.ndarray]]] = None):
+        self.n = int(n)
+        self.indptr = np.ascontiguousarray(indptr, dtype=np.int64)
+        self.indices = np.ascontiguousarray(indices, dtype=np.int64)
+        self.weights = np.ascontiguousarray(weights, dtype=np.float64)
+        self.name = str(name)
+        self.provenance = provenance
+        self._slots = slots
+        self._hash: Optional[str] = None
+        if self.n <= 0:
+            raise ValueError("CommGraph needs at least one vertex")
+        if self.indptr.shape != (self.n + 1,):
+            raise ValueError(f"indptr must have shape ({self.n + 1},)")
+        if self.indptr[0] != 0 or self.indptr[-1] != len(self.indices):
+            raise ValueError("malformed indptr")
+        if np.any(np.diff(self.indptr) < 0):
+            raise ValueError("indptr must be non-decreasing")
+        if len(self.indices) != len(self.weights):
+            raise ValueError("indices/weights length mismatch")
+        if len(self.indices) == 0:
+            raise ValueError("CommGraph needs at least one edge (an "
+                             "edgeless graph has nothing to map for)")
+        if np.any((self.indices < 0) | (self.indices >= self.n)):
+            raise ValueError("edge target out of range")
+        if np.any(self.weights <= 0):
+            raise ValueError("edge weights must be > 0 (drop zero-weight "
+                             "edges at construction)")
+        for a in (self.indptr, self.indices, self.weights):
+            a.setflags(write=False)
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_edges(cls, n: int, src: Sequence[int], dst: Sequence[int],
+                   weights: Union[float, Sequence[float]] = 1.0,
+                   name: str = "graph",
+                   provenance: Optional[dict] = None,
+                   slots=None) -> "CommGraph":
+        """Build from parallel edge arrays; duplicates coalesce (weights
+        sum), zero/negative-weight edges and self-loops are dropped."""
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        w = np.broadcast_to(np.asarray(weights, dtype=np.float64),
+                            src.shape).copy()
+        if src.shape != dst.shape:
+            raise ValueError("src/dst length mismatch")
+        n = int(n)
+        if len(src) and (src.min() < 0 or dst.min() < 0
+                         or max(src.max(), dst.max()) >= n):
+            raise ValueError("edge endpoint out of range")
+        keep = (src != dst) & (w > 0)
+        src, dst, w = src[keep], dst[keep], w[keep]
+        # coalesce on (src, dst): sort, then segment-sum the weights
+        order = np.lexsort((dst, src))
+        src, dst, w = src[order], dst[order], w[order]
+        if len(src):
+            new = np.ones(len(src), dtype=bool)
+            new[1:] = (src[1:] != src[:-1]) | (dst[1:] != dst[:-1])
+            seg = np.cumsum(new) - 1
+            usrc, udst = src[new], dst[new]
+            uw = np.bincount(seg, weights=w, minlength=int(seg[-1]) + 1)
+        else:
+            usrc = udst = np.empty(0, dtype=np.int64)
+            uw = np.empty(0, dtype=np.float64)
+        indptr = np.zeros(n + 1, dtype=np.int64)
+        np.add.at(indptr, usrc + 1, 1)
+        indptr = np.cumsum(indptr)
+        return cls(n, indptr, udst, uw, name=name,
+                   provenance=provenance, slots=slots)
+
+    @classmethod
+    def from_stencil(cls, grid, stencil: Stencil,
+                     name: Optional[str] = None) -> "CommGraph":
+        """The exact graph of a stencil on a grid: one slot per offset,
+        holding that offset's ``shift_ranks`` arrays verbatim.  The slot
+        weights are the stencil weights in offset order (duplicates kept —
+        never regrouped), so the graph path reproduces the grid path's
+        arithmetic bit-for-bit."""
+        slots = []
+        src_all, dst_all, w_all = [], [], []
+        for j, off in enumerate(stencil.offsets):
+            valid, tgt = grid.shift_ranks(off)
+            valid = np.ascontiguousarray(valid, dtype=bool)
+            tgt = np.ascontiguousarray(tgt, dtype=np.int64)
+            w = float(stencil.weights[j])
+            slots.append((w, valid, tgt))
+            s = np.nonzero(valid)[0]
+            src_all.append(s)
+            dst_all.append(tgt[s])
+            w_all.append(np.full(len(s), w))
+        prov = {
+            "mesh_shape": tuple(int(d) for d in grid.dims),
+            "periodic": tuple(bool(b) for b in grid.periodic),
+            "offsets": stencil.offsets,
+            "weights": stencil.weights,
+        }
+        return cls.from_edges(
+            grid.size, np.concatenate(src_all), np.concatenate(dst_all),
+            np.concatenate(w_all),
+            name=name or f"stencil:{stencil.name or 'custom'}",
+            provenance=prov, slots=slots)
+
+    @classmethod
+    def from_hlo(cls, module, num_devices: Optional[int] = None,
+                 name: Optional[str] = None) -> "CommGraph":
+        """Extract the device communication graph from traced HLO.
+
+        ``module`` is an :class:`~repro.analysis.hlo.HloModule` (or HLO
+        text, parsed here).  Per collective, per participant, out-edge
+        weights follow the same ring/pairwise wire model as linksim:
+
+        * ring collectives (all-reduce / all-gather / reduce-scatter) —
+          one edge to the next group member in device-id ring order,
+          weighted exactly
+          :meth:`~repro.analysis.hlo.CollectiveStat.wire_bytes_per_device`
+          (the whole per-device wire volume traverses one ring hop);
+        * all-to-all — ``g - 1`` edges to every other member, each
+          ``wire_bytes_per_device / (g - 1)``;
+        * collective-permute — one edge per ``(src, dst)`` pair at
+          ``payload_bytes * multiplier``.
+
+        ``replica_groups={}`` (all devices) needs ``num_devices``; with
+        explicit groups it is inferred from the largest id.  Duplicate
+        ``(src, dst)`` edges across collectives coalesce by summing.
+        """
+        from ..analysis.hlo import parse_hlo
+        import dataclasses
+        if isinstance(module, str):
+            module = parse_hlo(module)
+        stats = list(module.collectives())
+        if not stats:
+            raise ValueError("HLO module has no collectives to extract")
+        if num_devices is None:
+            seen = -1
+            for c in stats:
+                for grp in (c.groups or []):
+                    seen = max(seen, max(int(x) for x in grp))
+                for s, d in (c.pairs or []):
+                    seen = max(seen, int(s), int(d))
+            if seen < 0:
+                raise ValueError("num_devices required: module only has "
+                                 "replica_groups={} collectives")
+            num_devices = seen + 1
+        n = int(num_devices)
+        src, dst, w = [], [], []
+        for c in stats:
+            if c.pairs is not None:
+                for s, d in c.pairs:
+                    src.append(int(s))
+                    dst.append(int(d))
+                    w.append(c.payload_bytes * c.multiplier)
+                continue
+            groups = c.groups if c.groups else [list(range(n))]
+            # wire_bytes_per_device reads group_size off the stat; pin the
+            # resolved groups on a copy so the weights match it exactly
+            # (the satellite property tests check this equality).
+            cc = dataclasses.replace(c, groups=groups)
+            wire = cc.wire_bytes_per_device()
+            for grp in groups:
+                members = sorted(int(x) for x in grp)
+                g = len(members)
+                if g <= 1:
+                    continue
+                if c.opcode.startswith(("all-to-all", "ragged")):
+                    per_pair = wire / (g - 1)
+                    for i, s in enumerate(members):
+                        for d in members:
+                            if d != s:
+                                src.append(s)
+                                dst.append(d)
+                                w.append(per_pair)
+                else:                         # ring in device-id order
+                    for i, s in enumerate(members):
+                        src.append(s)
+                        dst.append(members[(i + 1) % g])
+                        w.append(wire)
+        return cls.from_edges(
+            n, src, dst, w,
+            name=name or f"hlo:{getattr(module, 'entry', 'module')}")
+
+    @classmethod
+    def from_moe(cls, arch, num_devices: int, *,
+                 tokens_per_device: int = 4096,
+                 dtype_bytes: Optional[int] = None,
+                 name: Optional[str] = None) -> "CommGraph":
+        """Expert-parallel all-to-all graph of an MoE arch.
+
+        Devices split into contiguous EP groups of
+        ``g = min(n_experts, num_devices)``; each MoE layer dispatches
+        ``tokens_per_device * top_k`` activations of ``d_model`` and
+        combines them back, so every directed pair inside a group carries
+        ``round(2 * tokens * top_k * d_model * dtype_bytes * n_moe_layers
+        / g)`` bytes.  Weights are rounded to whole bytes so linksim
+        replay of the mapped graph agrees with the graph objective
+        *exactly* (float64 edge sums of integers are exact below 2**53).
+        """
+        arch = _resolve_arch(arch)
+        if arch.n_experts <= 0:
+            raise ValueError(f"{arch.name!r} has no experts; from_moe needs "
+                             "an MoE arch (n_experts > 0)")
+        n = int(num_devices)
+        g = min(arch.n_experts, n)
+        if g < 2:
+            raise ValueError("expert-parallel groups need >= 2 devices")
+        if n % g:
+            raise ValueError(f"num_devices={n} not divisible by EP group "
+                             f"size {g}")
+        if dtype_bytes is None:
+            from ..analysis.hlo import DTYPE_BYTES
+            dtype_bytes = DTYPE_BYTES.get(arch.compute_dtype, 2)
+        n_moe_layers = arch.n_layers - arch.n_dense_layers
+        payload = (2.0 * tokens_per_device * arch.top_k * arch.d_model
+                   * dtype_bytes * n_moe_layers)
+        per_pair = max(1.0, round(payload / g))
+        src, dst = [], []
+        for base in range(0, n, g):
+            for s in range(base, base + g):
+                for d in range(base, base + g):
+                    if d != s:
+                        src.append(s)
+                        dst.append(d)
+        return cls.from_edges(n, src, dst, per_pair,
+                              name=name or f"moe:{arch.name}")
+
+    # -- the grid protocol --------------------------------------------------
+
+    def slots(self) -> List[Tuple[float, np.ndarray, np.ndarray]]:
+        """The partial-permutation decomposition: ``[(weight, valid,
+        tgt), ...]`` where each slot has ≤1 out-edge per source and ≤1
+        in-edge per target (sound ``NeighborTable`` inverse).  Stored
+        verbatim for stencil-extracted graphs; otherwise derived once by
+        deterministic greedy coloring — weight classes descending, edges
+        in CSR ``(src, dst)`` order, first slot with a free source *and*
+        free target."""
+        if self._slots is None:
+            self._slots = self._greedy_slots()
+        return self._slots
+
+    def _greedy_slots(self):
+        n = self.n
+        src_of = np.repeat(np.arange(n, dtype=np.int64),
+                           np.diff(self.indptr))
+        slots = []
+        for wval in np.unique(self.weights)[::-1]:
+            sel = np.nonzero(self.weights == wval)[0]
+            class_slots = []          # (valid, tgt, in_used)
+            for e in sel:
+                s, d = int(src_of[e]), int(self.indices[e])
+                for valid, tgt, in_used in class_slots:
+                    if not valid[s] and not in_used[d]:
+                        valid[s] = True
+                        tgt[s] = d
+                        in_used[d] = True
+                        break
+                else:
+                    valid = np.zeros(n, dtype=bool)
+                    tgt = np.arange(n, dtype=np.int64)
+                    in_used = np.zeros(n, dtype=bool)
+                    valid[s] = True
+                    tgt[s] = d
+                    in_used[d] = True
+                    class_slots.append((valid, tgt, in_used))
+            slots += [(float(wval), valid, tgt)
+                      for valid, tgt, _ in class_slots]
+        for _, valid, tgt in slots:
+            valid.setflags(write=False)
+            tgt.setflags(write=False)
+        return slots
+
+    def slot_stencil(self) -> Stencil:
+        """The synthetic 1-D stencil whose offset ``(j + 1,)`` selects slot
+        ``j`` of :meth:`slots` (weights = slot weights, duplicates kept)."""
+        slots = self.slots()
+        return Stencil(tuple((j + 1,) for j in range(len(slots))),
+                       weights=tuple(s[0] for s in slots),
+                       name=f"slots:{self.name}")
+
+    def grid(self) -> "GraphGrid":
+        """This graph in the grid protocol (see :class:`GraphGrid`)."""
+        return GraphGrid(self)
+
+    # -- identity -----------------------------------------------------------
+
+    @property
+    def num_edges(self) -> int:
+        return len(self.indices)
+
+    def total_weight(self) -> float:
+        return float(self.weights.sum())
+
+    def content_hash(self) -> str:
+        """Stable identity over the canonical CSR content (construction
+        order never matters) plus stencil provenance when present — two
+        differently-shaped grids with the same flattened edges must not
+        collide, since base mappers see the provenance geometry."""
+        if self._hash is None:
+            h = hashlib.sha256()
+            h.update(f"n={self.n};".encode())
+            h.update(self.indptr.tobytes())
+            h.update(self.indices.tobytes())
+            h.update(self.weights.tobytes())
+            if self.provenance is not None:
+                p = self.provenance
+                h.update(repr((tuple(p["mesh_shape"]), tuple(p["periodic"]),
+                               tuple(p["offsets"]),
+                               tuple(p["weights"]))).encode())
+            self._hash = h.hexdigest()[:32]
+        return self._hash
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (f"CommGraph({self.name!r}, n={self.n}, "
+                f"edges={self.num_edges}, slots={len(self.slots())})")
+
+
+# ---------------------------------------------------------------------------
+# the grid protocol over a graph
+
+
+class GraphGrid:
+    """A :class:`CommGraph` wearing the grid protocol.
+
+    Duck-types everything the cost/refine stack reads off a
+    :class:`~repro.core.grid.CartGrid`: ``dims`` (``(n,)``), ``periodic``,
+    ``ndim`` / ``size``, ``coords()`` and ``shift_ranks(offset)`` — where
+    offset ``(j + 1,)`` answers with slot ``j``'s ``(valid, tgt)`` arrays.
+    ``NeighborTable.build`` / ``evaluate`` / every refiner /
+    ``stencil_collectives`` consume it unchanged.  Picklable (the sharded
+    engine ships it to worker processes whole).
+    """
+
+    def __init__(self, graph: CommGraph):
+        self.graph = graph
+
+    # grid protocol ---------------------------------------------------------
+
+    @property
+    def dims(self) -> Tuple[int, ...]:
+        return (self.graph.n,)
+
+    @property
+    def periodic(self) -> Tuple[bool, ...]:
+        return (False,)
+
+    @property
+    def ndim(self) -> int:
+        return 1
+
+    @property
+    def size(self) -> int:
+        return self.graph.n
+
+    def coords(self) -> np.ndarray:
+        return np.arange(self.graph.n, dtype=np.int64)[:, None]
+
+    def shift_ranks(self, offset) -> Tuple[np.ndarray, np.ndarray]:
+        j = int(offset[0]) - 1
+        slots = self.graph.slots()
+        if not (0 <= j < len(slots)):
+            raise ValueError(f"offset {tuple(offset)!r} names no slot of "
+                             f"{self.graph!r} (use the slot_stencil)")
+        _, valid, tgt = slots[j]
+        return valid, tgt
+
+    # extensions ------------------------------------------------------------
+
+    def masked(self, active: np.ndarray) -> "MaskedGraphGrid":
+        """The induced subgraph on ``active`` positions, in the same
+        protocol — the graph analog of
+        :class:`~repro.core.refine.hier.MaskedGrid` (``hier:`` calls this
+        when the grid offers it)."""
+        return MaskedGraphGrid(self, active)
+
+    @property
+    def cache_token(self) -> str:
+        """Content identity for subproblem cache keys (two graphs with
+        equal size and slot count must never share a hier subtree key)."""
+        return self.graph.content_hash()
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"GraphGrid({self.graph!r})"
+
+
+class MaskedGraphGrid(GraphGrid):
+    """A :class:`GraphGrid` restricted to its ``active`` positions: slot
+    edges survive only when *both* endpoints are active (the induced
+    subgraph — exactly :class:`~repro.core.refine.hier.MaskedGrid`'s
+    semantics on a Cartesian grid)."""
+
+    def __init__(self, base: GraphGrid, active: np.ndarray):
+        super().__init__(base.graph)
+        active = np.asarray(active, dtype=bool)
+        if active.shape != (base.size,):
+            raise ValueError(f"active mask must have shape ({base.size},)")
+        if isinstance(base, MaskedGraphGrid):
+            active = active & base.active
+        self.active = active
+        self.active.setflags(write=False)
+
+    def shift_ranks(self, offset) -> Tuple[np.ndarray, np.ndarray]:
+        valid, tgt = super().shift_ranks(offset)
+        return valid & self.active & self.active[tgt], tgt
+
+    @property
+    def cache_token(self) -> str:
+        return (self.graph.content_hash() + ":masked:"
+                + hashlib.sha256(self.active.tobytes()).hexdigest()[:16])
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (f"MaskedGraphGrid({self.graph!r}, "
+                f"active={int(self.active.sum())}/{self.size})")
+
+
+# ---------------------------------------------------------------------------
+# full-arch composite builder
+
+
+def _resolve_arch(arch):
+    if isinstance(arch, str):
+        from ..configs import get_arch
+        return get_arch(arch)
+    return arch
+
+
+def arch_comm_graph(arch, num_devices: int, *,
+                    model_parallel: Optional[int] = None,
+                    tokens_per_device: int = 1024,
+                    grad_accum: int = 64,
+                    permute_seed: Optional[int] = 0,
+                    name: Optional[str] = None) -> CommGraph:
+    """The composite training communication graph of one arch on
+    ``num_devices`` devices: tensor-parallel activation all-reduce rings
+    (two per layer) inside each model group, data-parallel gradient
+    all-reduce rings across groups (amortized by ``grad_accum``), and —
+    for MoE archs — the expert-parallel all-to-all of
+    :meth:`CommGraph.from_moe` over the model groups.
+
+    ``permute_seed`` applies a deterministic device-id permutation to the
+    finished graph — modeling a scheduler that hands out ranks in
+    arbitrary order, which is precisely the situation where mapping beats
+    the blocked identity (the graph benchmark's claim).  ``None`` keeps
+    the natural model-major order.  All weights are whole bytes, so
+    linksim replay is exact.
+    """
+    arch = _resolve_arch(arch)
+    n = int(num_devices)
+    if model_parallel is None:
+        model_parallel = max(d for d in range(1, min(8, n) + 1) if n % d == 0)
+    mp = int(model_parallel)
+    if n % mp:
+        raise ValueError(f"num_devices={n} not divisible by "
+                         f"model_parallel={mp}")
+    dp = n // mp
+    from ..analysis.hlo import DTYPE_BYTES
+    act_bytes = DTYPE_BYTES.get(arch.compute_dtype, 2)
+    src, dst, w = [], [], []
+
+    def ring(members, weight):
+        g = len(members)
+        if g < 2 or weight <= 0:
+            return
+        for i, s in enumerate(members):
+            src.append(s)
+            dst.append(members[(i + 1) % g])
+            w.append(weight)
+
+    # TP: 2 activation all-reduces per layer per step, ring inside each
+    # model group (ranks d*mp + m for fixed d)
+    b_tp = float(tokens_per_device) * arch.d_model * act_bytes
+    w_tp = round(2.0 * b_tp * (mp - 1) / mp * 2 * arch.n_layers)
+    for d in range(dp):
+        ring([d * mp + m for m in range(mp)], w_tp)
+    # DP: one gradient all-reduce per grad_accum micro-steps, sharded over
+    # the mp-way model split, ring across each data group (fixed m)
+    b_dp = arch.param_count() * act_bytes / mp / max(1, grad_accum)
+    w_dp = round(2.0 * b_dp * (dp - 1) / dp)
+    for m in range(mp):
+        ring([d * mp + m for d in range(dp)], w_dp)
+    # EP: MoE all-to-all over the model groups
+    if arch.n_experts > 0 and mp >= 2:
+        moe = CommGraph.from_moe(arch, mp,
+                                 tokens_per_device=tokens_per_device)
+        msrc = np.repeat(np.arange(mp, dtype=np.int64), np.diff(moe.indptr))
+        for d in range(dp):
+            base = d * mp
+            src.extend((base + msrc).tolist())
+            dst.extend((base + moe.indices).tolist())
+            w.extend(moe.weights.tolist())
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    if permute_seed is not None:
+        perm = np.random.default_rng(int(permute_seed)).permutation(n)
+        src, dst = perm[src], perm[dst]
+    return CommGraph.from_edges(n, src, dst, np.asarray(w, dtype=np.float64),
+                                name=name or f"arch:{arch.name}")

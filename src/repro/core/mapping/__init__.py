@@ -9,7 +9,11 @@ Names resolve in two layers:
 1. **Base algorithms** — exact keys of :data:`MAPPERS` (``"blocked"``,
    ``"random"``, ``"nodecart"``, ``"hyperplane"``, ``"kdtree"``,
    ``"stencil_strips"``, ``"graphgreedy"``).  ``kwargs`` go to the
-   algorithm's constructor.
+   algorithm's constructor.  Bases take bracket options too —
+   ``"graphgreedy[seed=3,max_passes=2]"`` — same ``key=value`` syntax
+   and coercion as refinement prefixes, merged over ``kwargs`` (bracket
+   wins), rendered canonically in the plan key
+   (``graphgreedy{max_passes=2,seed=3}``).
 2. **Refinement prefixes** — ``"<prefix>[<options>]:<base>"`` recursively
    resolves ``<base>`` (so a base's own name rules apply unchanged) and
    wraps it in a :class:`~repro.core.refine.RefinedMapper`.  Refiner

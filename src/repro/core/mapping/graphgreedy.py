@@ -14,6 +14,14 @@ the *explicit* communication graph.  We reproduce that role natively:
 
 Intentionally general and slow — it plays VieM's part in the runtime
 comparison (Fig. 9) and the quality comparison (Fig. 8).
+
+Because it only ever walks ``shift_ranks`` adjacency, it is also the
+natural base for arbitrary sparse graphs: under the ``graph:`` plan
+flavor it runs on a :class:`~repro.core.graph.CommGraph`'s slot
+decomposition unchanged, and ``annealed:graphgreedy`` is the default
+graph plan (:data:`~repro.core.plan.DEFAULT_GRAPH_PLAN`).  Bracket
+options configure it by name — ``graphgreedy[seed=3,max_passes=2]`` —
+with a canonical plan key (``graphgreedy{max_passes=2,seed=3}``).
 """
 from __future__ import annotations
 

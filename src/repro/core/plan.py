@@ -53,6 +53,7 @@ import hashlib
 import json
 import math
 import os
+import re
 import threading
 import time
 import uuid
@@ -76,8 +77,9 @@ from .refine.stage import BaseStage, RefineStage, Stage
 
 __all__ = ["MappingProblem", "MappingPlan", "MappingSolution", "parse_plan",
            "PlanCache", "default_plan_cache", "resolve_cache",
-           "blocked_node_sizes", "cart_create", "CartResult",
-           "DEFAULT_CART_PLAN", "DEFAULT_CACHE_DIR", "default_cache_dir"]
+           "blocked_node_sizes", "cart_create", "graph_create", "CartResult",
+           "DEFAULT_CART_PLAN", "DEFAULT_GRAPH_PLAN", "DEFAULT_CACHE_DIR",
+           "default_cache_dir"]
 
 
 def blocked_node_sizes(p: int, chips_per_pod: int) -> Tuple[int, ...]:
@@ -112,6 +114,10 @@ DEFAULT_CACHE_DIR = default_cache_dir()
 #: ``plan="portfolio:hyperplane"`` in for more quality per cold solve).
 DEFAULT_CART_PLAN = "annealed:hyperplane"
 
+#: the graph facade's default plan: greedy BFS-ish packing seeded by the
+#: heaviest edges, then the annealed schedule on the graph objective.
+DEFAULT_GRAPH_PLAN = "annealed:graphgreedy"
+
 
 # ---------------------------------------------------------------------------
 # problem + solution
@@ -126,6 +132,15 @@ class MappingProblem:
     AND per-offset byte weights (weight changes must miss), node sizes,
     and the declared objective.  The stencil's cosmetic ``name`` is
     excluded.
+
+    ``graph`` optionally attaches a :class:`~repro.core.graph.CommGraph`
+    payload (build with :meth:`from_graph`).  A graph extracted from a
+    stencil carries its provenance, so the problem keeps the original
+    Cartesian signature — and the original content hash, so the cache
+    serves it unchanged.  A general graph (HLO/MoE extractors) has no
+    geometry: ``mesh_shape`` is ``(n,)``, ``grid()`` is the graph's
+    :class:`~repro.core.graph.GraphGrid`, the stencil is the graph's slot
+    stencil, and the hash covers the graph's canonical CSR content.
     """
 
     mesh_shape: Tuple[int, ...]
@@ -133,6 +148,7 @@ class MappingProblem:
     node_sizes: Tuple[int, ...]
     objective: str = "lex"
     periodic: Optional[Tuple[bool, ...]] = None
+    graph: Optional[object] = field(default=None, compare=False, repr=False)
 
     def __post_init__(self):
         shape = tuple(int(d) for d in self.mesh_shape)
@@ -147,10 +163,50 @@ class MappingProblem:
         if sum(sizes) != math.prod(shape):
             raise ValueError(f"sum(node_sizes)={sum(sizes)} != mesh size "
                              f"{math.prod(shape)}")
+        if self.graph is not None and self.graph.n != math.prod(shape):
+            raise ValueError(f"graph has {self.graph.n} vertices but the "
+                             f"mesh has {math.prod(shape)} positions")
         self.grid()   # validates shape/periodic eagerly
 
+    @classmethod
+    def from_graph(cls, graph, node_sizes: Sequence[int],
+                   objective: str = "lex") -> "MappingProblem":
+        """Problem over a :class:`~repro.core.graph.CommGraph`.  A
+        stencil-extracted graph round-trips to its original Cartesian
+        signature (identical :meth:`content_hash` to the plain stencil
+        problem — provenance is structural); a general graph becomes a
+        1-D problem over the graph's own grid/slot-stencil forms."""
+        prov = graph.provenance
+        if prov is not None:
+            return cls(prov["mesh_shape"],
+                       Stencil(prov["offsets"], weights=prov["weights"],
+                               name=graph.name),
+                       node_sizes, objective=objective,
+                       periodic=prov["periodic"], graph=graph)
+        return cls((graph.n,), graph.slot_stencil(), node_sizes,
+                   objective=objective, graph=graph)
+
     def grid(self) -> CartGrid:
+        if self.graph is not None and self.graph.provenance is None:
+            return self.graph.grid()
         return CartGrid(self.mesh_shape, periodic=self.periodic)
+
+    def as_graph(self):
+        """This problem's :class:`~repro.core.graph.CommGraph`: the
+        attached payload, or (for plain stencil problems) the exact
+        stencil extraction built on the fly."""
+        if self.graph is not None:
+            return self.graph
+        from .graph import CommGraph
+        return CommGraph.from_stencil(self.grid(), self.stencil)
+
+    def graph_form(self) -> Tuple[object, Stencil]:
+        """``(grid, stencil)`` of the graph realization — what ``graph:``
+        flavored plans run their refine stages and final evaluation on.
+        For stencil problems the forms are the exact round-trip, so costs
+        and deltas match the geometric forms bit-for-bit."""
+        g = self.as_graph()
+        return g.grid(), g.slot_stencil()
 
     @property
     def num_nodes(self) -> int:
@@ -161,6 +217,15 @@ class MappingProblem:
         return len(set(self.node_sizes)) > 1
 
     def content_hash(self) -> str:
+        if self.graph is not None and self.graph.provenance is None:
+            payload = {
+                "graph": self.graph.content_hash(),
+                "node_sizes": list(self.node_sizes),
+                "objective": self.objective,
+            }
+            blob = json.dumps(payload, sort_keys=True,
+                              separators=(",", ":"))
+            return hashlib.sha256(blob.encode()).hexdigest()[:32]
         payload = {
             "mesh_shape": list(self.mesh_shape),
             "periodic": list(self.grid().periodic),
@@ -209,9 +274,20 @@ class MappingPlan:
     :class:`~repro.core.repair.RepairStage` warm-starting from a previous
     solution) followed by zero or more :class:`RefineStage` s.  ``key`` is
     the canonical spelling — stable across equal configurations — used for
-    cache identity."""
+    cache identity.
 
-    def __init__(self, stages: Sequence[Stage], name: Optional[str] = None):
+    ``graph=True`` (the ``"graph:"`` spelling flavor) runs the chain on
+    the problem's :class:`~repro.core.graph.CommGraph` realization: the
+    initial stage still sees the geometric grid/stencil (base mappers may
+    exploit coordinates), but every refine stage and the final evaluation
+    run on the graph's grid/slot-stencil forms.  For stencil problems the
+    two realizations are cost-equivalent bit-for-bit (the parity the
+    graph suite machine-checks); for graph-payload problems this is the
+    native path.  ``key`` gains a ``graph:`` prefix so both flavors cache
+    independently."""
+
+    def __init__(self, stages: Sequence[Stage], name: Optional[str] = None,
+                 graph: bool = False):
         stages = tuple(stages)
         if not stages:
             raise ValueError("a plan needs at least one stage")
@@ -222,6 +298,7 @@ class MappingPlan:
             raise ValueError("only the first stage may be an initial stage")
         self.stages = stages
         self.name = name
+        self.graph_flavor = bool(graph)
 
     @property
     def key(self) -> str:
@@ -229,7 +306,8 @@ class MappingPlan:
         ``portfolio[k=8]:refined:hyperplane``."""
         parts = [s.spec() for s in reversed(self.stages[1:])]
         parts.append(self.stages[0].spec())
-        return ":".join(parts)
+        key = ":".join(parts)
+        return f"graph:{key}" if self.graph_flavor else key
 
     @property
     def cacheable(self) -> bool:
@@ -246,14 +324,22 @@ class MappingPlan:
             return cache.solve(problem, self)
         t0 = time.perf_counter()
         grid = problem.grid()
+        if self.graph_flavor:
+            # the initial stage keeps the geometric forms (base mappers
+            # may exploit coordinates); refine stages + the final cost run
+            # on the graph realization — bit-equivalent for stencil
+            # problems, native for graph payloads.
+            rgrid, rstencil = problem.graph_form()
+        else:
+            rgrid, rstencil = grid, problem.stencil
         assignment: Optional[np.ndarray] = None
         stats: List[dict] = []
-        for stage in self.stages:
-            sr = stage.run(grid, problem.stencil, problem.node_sizes,
-                           assignment)
+        for i, stage in enumerate(self.stages):
+            g, s = (grid, problem.stencil) if i == 0 else (rgrid, rstencil)
+            sr = stage.run(g, s, problem.node_sizes, assignment)
             assignment = sr.assignment
             stats.append(sr.stats)
-        cost = evaluate(grid, problem.stencil, assignment,
+        cost = evaluate(rgrid, rstencil, assignment,
                         num_nodes=problem.num_nodes, weighted="auto")
         # stats are JSON-normalized here so cold solves and cache hits
         # (which round-trip through JSON) have identical shapes
@@ -269,6 +355,11 @@ class MappingPlan:
         ``get_mapper`` returns, with ``plan_key`` set at every level so
         the cache can key off mapper instances too."""
         from .refine import RefinedMapper
+        if self.graph_flavor:
+            raise TypeError(
+                "graph-flavored plans have no Mapper form (the Mapper "
+                "protocol has no problem/graph context); solve them as "
+                "plans via parse_plan(...).solve / PlanCache.solve")
         if not isinstance(self.stages[0], BaseStage):
             raise TypeError(
                 "only BaseStage-rooted plans have a Mapper form; a "
@@ -315,12 +406,32 @@ def parse_plan(name: str, **kwargs) -> MappingPlan:
     grammar — is solved cold when the previous solution cannot seed the
     problem.  Refine prefixes chain over it as usual
     (``"portfolio[k=8]:repair:hyperplane"``).
+
+    The base name accepts bracket options of its own
+    (``"graphgreedy[seed=3]"``, ``"annealed:graphgreedy[seed=3]"``):
+    they configure the base algorithm's constructor, win over ``kwargs``,
+    and render canonically in the plan key (``graphgreedy{seed=3}``) so
+    bracketed bases stay cacheable and composable under every refine
+    prefix.
+
+    A leading ``"graph:"`` selects the *graph problem flavor*: the same
+    stage chain, run on the problem's
+    :class:`~repro.core.graph.CommGraph` realization (see
+    :class:`MappingPlan`).  It composes with everything —
+    ``"graph:hier:annealed:graphgreedy[seed=3]"`` — and prefixes the
+    plan key, so grid- and graph-flavored solves cache independently.
     """
     from .mapping import MAPPERS, REFINE_PREFIXES, _make_refiner, \
         split_mapper_name
     from .refine import SwapRefiner
     previous = kwargs.pop("previous", None)
     node_map = kwargs.pop("node_map", None)
+    graph_flavor = name.startswith("graph:")
+    if graph_flavor:
+        name = name[len("graph:"):]
+        if not name:
+            raise ValueError("'graph:' needs a plan spelling after it, "
+                             "e.g. 'graph:annealed:graphgreedy'")
     chain = []                      # (prefix, options), outer-first
     rest = name
     while True:
@@ -330,13 +441,21 @@ def parse_plan(name: str, **kwargs) -> MappingPlan:
         prefix, opts, rest = parsed
         chain.append((prefix, opts))
     is_repair = rest == "repair" or rest.startswith(("repair[", "repair:"))
+    base_opts: Dict[str, object] = {}
     if not is_repair and rest not in MAPPERS:
-        raise KeyError(
-            f"unknown mapper {rest!r}"
-            + (f" (base of {name!r})" if rest != name else "")
-            + f"; choose from {sorted(MAPPERS)}, "
-            f"one of {[p + '<base>' for p in REFINE_PREFIXES]}, "
-            "or 'repair[<options>]:<fallback>'")
+        # base bracket options: "<base>[k=v,...]"
+        from .mapping import parse_mapper_options
+        m = re.fullmatch(r"(?P<base>[a-z][a-z0-9_]*)\[(?P<opts>.*)\]", rest)
+        if m is not None and m.group("base") in MAPPERS:
+            base_opts = parse_mapper_options(m.group("opts"), name=name)
+            rest = m.group("base")
+        else:
+            raise KeyError(
+                f"unknown mapper {rest!r}"
+                + (f" (base of {name!r})" if rest != name else "")
+                + f"; choose from {sorted(MAPPERS)}, "
+                f"one of {[p + '<base>' for p in REFINE_PREFIXES]}, "
+                "or 'repair[<options>]:<fallback>'")
     if not is_repair and previous is not None:
         raise ValueError(f"previous= is only meaningful for repair plans, "
                          f"not {name!r}")
@@ -382,10 +501,16 @@ def parse_plan(name: str, **kwargs) -> MappingPlan:
             fallback=parse_plan(fb_spelling) if fb_spelling else None,
             **{**base_kwargs, **r_opts})
     else:
-        first = BaseStage(MAPPERS[rest], fallback=fallback, **base_kwargs)
+        merged_base = {**base_kwargs, **base_opts}   # bracket wins
+        fb = merged_base.pop("fallback", None)
+        if fb is not None:
+            fallback = fb
+        first = BaseStage(MAPPERS[rest], fallback=fallback, **merged_base)
     stages: List[Stage] = [first]
     stages += refine_stages
-    return MappingPlan(stages, name=name)
+    return MappingPlan(stages,
+                       name=f"graph:{name}" if graph_flavor else name,
+                       graph=graph_flavor)
 
 
 # ---------------------------------------------------------------------------
@@ -916,5 +1041,48 @@ def cart_create(mesh_shape: Sequence[int],
         plan = parse_plan(plan)
     c = resolve_cache(cache)
     solution = plan.solve(problem, cache=c)
+    return CartResult(problem=problem, plan_key=plan.key, solution=solution,
+                      layout=solution.layout())
+
+
+def graph_create(graph, *,
+                 node_sizes: Optional[Sequence[int]] = None,
+                 chips_per_pod: Optional[int] = None,
+                 objective: str = "lex",
+                 plan: Union[str, MappingPlan] = DEFAULT_GRAPH_PLAN,
+                 cache: Union[None, bool, PlanCache] = None,
+                 reorder: bool = True) -> CartResult:
+    """:func:`cart_create` for arbitrary communication graphs: one call
+    from a :class:`~repro.core.graph.CommGraph` (any extractor —
+    ``from_stencil`` / ``from_hlo`` / ``from_moe`` / ``arch_comm_graph``)
+    to a topology-aware device layout, served from the plan cache.
+
+    The plan runs in the ``graph:`` flavor (prefixed automatically when
+    ``plan`` is a spelling without it), so the refine stack optimizes the
+    graph objective directly; ``result.layout`` maps logical position ->
+    device index exactly as :func:`cart_create` (1-D for general graphs,
+    the provenance mesh shape for stencil-extracted ones).
+
+    Usage::
+
+        g = CommGraph.from_moe("mixtral_8x7b", num_devices=64)
+        r = graph_create(g, chips_per_pod=8)
+        r.layout, r.j_max, r.from_cache
+    """
+    if node_sizes is None and chips_per_pod is None:
+        raise ValueError("graph_create needs node_sizes or chips_per_pod")
+    if node_sizes is not None and chips_per_pod is not None:
+        raise ValueError("pass node_sizes or chips_per_pod, not both")
+    problem = MappingProblem.from_graph(
+        graph,
+        node_sizes if node_sizes is not None
+        else blocked_node_sizes(graph.n, chips_per_pod),
+        objective=objective)
+    if not reorder:
+        plan = "graph:blocked"
+    if isinstance(plan, str):
+        plan = parse_plan(plan if plan.startswith("graph:")
+                          else f"graph:{plan}")
+    solution = plan.solve(problem, cache=resolve_cache(cache))
     return CartResult(problem=problem, plan_key=plan.key, solution=solution,
                       layout=solution.layout())

@@ -83,6 +83,13 @@ class MaskedGrid(CartGrid):
         valid, tr = super().shift_ranks(offset)
         return valid & self.active & self.active[tr], tr
 
+    @property
+    def cache_token(self) -> str:
+        """Content identity of the restriction, so table/subtree memos
+        never serve a masked grid a plain-grid (or other-mask) entry."""
+        return "masked:" + hashlib.sha256(
+            self.active.tobytes()).hexdigest()[:16]
+
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return (f"MaskedGrid(dims={self.dims}, "
                 f"active={int(self.active.sum())}/{self.size})")
@@ -192,7 +199,10 @@ def _subtree_key(grid: CartGrid, stencil: Stencil, active_idx: np.ndarray,
                  seed_labels: np.ndarray, caps: np.ndarray,
                  solver: str) -> str:
     h = hashlib.sha256()
+    # cache_token distinguishes graph-backed grids (GraphGrid): two graphs
+    # with equal size and slot weights must never share a subtree key.
     h.update(repr((grid.dims, grid.periodic,
+                   getattr(grid, "cache_token", ""),
                    tuple(tuple(o) for o in stencil.offsets),
                    tuple(float(w) for w in stencil.weights),
                    tuple(int(c) for c in caps), solver)).encode())
@@ -302,7 +312,12 @@ class HierRefiner:
         if m < p:
             mask = np.zeros(p, dtype=bool)
             mask[active_idx] = True
-            sub_grid: CartGrid = MaskedGrid(grid, mask)
+            # grids that know their own induced-subgraph form (GraphGrid)
+            # provide it; Cartesian grids get the coordinate mask.
+            if hasattr(grid, "masked"):
+                sub_grid = grid.masked(mask)
+            else:
+                sub_grid: CartGrid = MaskedGrid(grid, mask)
         else:
             sub_grid = grid
         swaps = 0

@@ -257,7 +257,11 @@ _TABLE_MEMO_MAX = 8
 
 
 def _memo_table(grid: CartGrid, stencil: Stencil) -> NeighborTable:
-    key = (tuple(grid.dims), tuple(grid.periodic), stencil.offsets)
+    # cache_token keeps graph-backed and masked grids from colliding with
+    # a plain CartGrid of the same dims (they answer shift_ranks
+    # differently, so sharing a table would be silently wrong).
+    key = (tuple(grid.dims), tuple(grid.periodic),
+           getattr(grid, "cache_token", ""), stencil.offsets)
     table = _TABLE_MEMO.get(key)
     if table is None:
         table = NeighborTable.build(grid, stencil)
@@ -278,7 +282,9 @@ def _block_step(payload: dict) -> dict:
     assignment rows each call (integer counts — exact), optionally via the
     jax.vmap kernel when the coordinator precomputed ``counts``.
     """
-    grid = CartGrid(tuple(payload["dims"]), periodic=payload["periodic"])
+    grid = payload.get("grid")
+    if grid is None:
+        grid = CartGrid(tuple(payload["dims"]), periodic=payload["periodic"])
     stencil = Stencil(payload["offsets"], payload["weights"])
     pc = PortfolioCost(grid, stencil, payload["node"],
                        num_nodes=payload["num_nodes"],
@@ -578,6 +584,12 @@ class ShardedPortfolioRefiner:
             "weighted": weighted, "num_nodes": n_nodes,
             "sa_moves": sched.sa_moves,
         }
+        if type(grid) is not CartGrid:
+            # graph-backed (GraphGrid) or masked grids answer shift_ranks
+            # from their own structure — rebuilding a plain CartGrid from
+            # dims in the worker would silently drop it.  Both pickle
+            # fine (numpy arrays), so ship the object whole.
+            base_payload["grid"] = grid
         restarts: List[dict] = []
         accepted = 0
 

@@ -201,6 +201,11 @@ class PlanServer:
         self._local = threading.local()
         self._stats_lock = threading.Lock()
         self._latencies: deque = deque(maxlen=2048)
+        # single-flight: per-solution-key latch so concurrent cold misses
+        # on one key run the solve once (followers wait, then hit cache)
+        self._inflight_keys: Dict[str, threading.Event] = {}
+        self._inflight_lock = threading.Lock()
+        self.single_flight_waits = 0
         self.completed = 0
         self.errors = 0
         self.rejected = 0
@@ -393,7 +398,7 @@ class PlanServer:
             # before swapping its refiner (spec()/key are unchanged)
             stage = copy.copy(stage)
             plan = MappingPlan(tuple(plan.stages[:-1]) + (stage,),
-                               name=plan.name)
+                               name=plan.name, graph=plan.graph_flavor)
         if deadline_s is not None and stage is not None:
             return self._solve_anytime(problem, plan, stage,
                                        deadline_s, ticket)
@@ -401,7 +406,34 @@ class PlanServer:
             # resident persistent-worker engine, bit-identical to the
             # stateless sharded engine -> same result, same cache key
             stage.refiner = self._make_resident(stage)
-        return self.cache.solve(problem, plan)
+        if not plan.cacheable:
+            return self.cache.solve(problem, plan)
+        # single-flight: concurrent cold misses on one key would each run
+        # the full solve (up to `threads` redundant anneals).  The first
+        # arrival becomes the leader and solves; followers park on the
+        # key's latch and re-enter when it publishes — their solve is then
+        # a cache hit.  A follower that re-enters after a leader *failure*
+        # simply becomes the next leader (retry, not deadlock).
+        key = f"sol:{problem.content_hash()}:{plan.key}"
+        while True:
+            with self._inflight_lock:
+                ev = self._inflight_keys.get(key)
+                if ev is None:
+                    ev = threading.Event()
+                    self._inflight_keys[key] = ev
+                    leader = True
+                else:
+                    leader = False
+            if leader:
+                try:
+                    return self.cache.solve(problem, plan)
+                finally:
+                    with self._inflight_lock:
+                        self._inflight_keys.pop(key, None)
+                    ev.set()
+            with self._stats_lock:
+                self.single_flight_waits += 1
+            ev.wait()
 
     def _solve_anytime(self, problem: MappingProblem, plan: MappingPlan,
                        stage: RefineStage, deadline_s: float,
@@ -524,6 +556,7 @@ class PlanServer:
                 "rejected": self.rejected,
                 "deadline_misses": self.deadline_misses,
                 "anytime_cuts": self.anytime_cuts,
+                "single_flight_waits": self.single_flight_waits,
                 "warmed": self.warmed,
                 "threads": self.threads,
                 "uptime_s": (0.0 if self._started_at is None

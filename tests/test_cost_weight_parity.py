@@ -1,0 +1,65 @@
+"""Float-weight accumulation parity: evaluate vs IncrementalCost (ISSUE 10).
+
+``IncrementalCost`` reconstructs per-node loads as ``w * count`` per
+offset; ``evaluate`` used to add ``w`` once per crossing edge instead.
+The two orders differ in the last ulp for non-dyadic weights — e.g. six
+additions of 0.1 give 0.6 where ``0.1 * 6`` gives 0.6000000000000001 —
+so the documented "within an ulp" caveat was real.  ``evaluate`` now
+accumulates ``w * bincount`` per offset, the same op sequence, and these
+tests pin bit-exact equality for arbitrary float weights (they fail on
+the pre-fix accumulation by construction).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (CartGrid, IncrementalCost, PortfolioCost, Stencil,
+                        evaluate)
+
+
+def test_regression_w01_six_crossings_bit_exact():
+    # a 1-D line of 7 positions, node 0 owning position 0..5 alternating
+    # with node 1 so one node sources exactly 6 crossing edges under one
+    # offset of weight 0.1: repeated addition gives 0.6, w * count gives
+    # 0.6000000000000001 — pre-fix, evaluate and IncrementalCost disagreed
+    # in the last bit.
+    grid = CartGrid((12,))
+    st = Stencil(((1,),), weights=(0.1,))
+    a = np.array([0, 1, 0, 1, 0, 1, 0, 1, 0, 1, 0, 1])
+    c = evaluate(grid, st, a, num_nodes=2, weighted=True)
+    ic = IncrementalCost(grid, st, a, num_nodes=2, weighted=True)
+    assert c.per_node[0] == np.float64(0.1) * 6        # the multiply order
+    assert np.array_equal(c.per_node, ic.per_node)
+    assert c.j_sum == ic.j_sum
+    assert c.j_max == ic.j_max
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_random_float_weights_bit_exact(seed):
+    rng = np.random.default_rng(seed)
+    grid = CartGrid((6, 7), periodic=(True, False))
+    st = Stencil(((1, 0), (0, 1), (-1, 0), (0, -1)),
+                 weights=tuple(rng.uniform(0.05, 3.0, size=4)))
+    n = 5
+    a = rng.integers(0, n, size=grid.size)
+    c = evaluate(grid, st, a, num_nodes=n, weighted=True)
+    ic = IncrementalCost(grid, st, a, num_nodes=n, weighted=True)
+    assert np.array_equal(c.per_node, ic.per_node)
+    assert c.j_sum == ic.j_sum
+    assert c.j_max == ic.j_max
+    # the stacked portfolio state agrees row-for-row too
+    A = np.stack([a, rng.integers(0, n, size=grid.size)])
+    pc = PortfolioCost(grid, st, A, num_nodes=n, weighted=True)
+    assert pc.j_max()[0] == c.j_max
+    assert pc.j_sum()[0] == c.j_sum
+
+
+def test_unit_weights_unchanged():
+    # integer sums were exact before and after the fix — pinned so the
+    # linksim replay exactness contracts (dci_total == j_sum) survive.
+    grid = CartGrid((8, 8))
+    st = Stencil.nearest_neighbor(2)
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, 4, size=64)
+    c = evaluate(grid, st, a, num_nodes=4)
+    assert c.j_sum == float(int(c.j_sum))
+    assert np.array_equal(c.per_node, np.round(c.per_node))

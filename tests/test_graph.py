@@ -1,0 +1,348 @@
+"""Property suite for CommGraph (ISSUE 10).
+
+The contract under test, layer by layer:
+
+* **Stencil round-trip is bit-exact** — `CommGraph.from_stencil` stores
+  the per-offset ``shift_ranks`` arrays as its slots, so the graph path
+  builds the identical ``NeighborTable``, identical J_sum/J_max/per-node
+  loads, and identical scalar *and* batched swap deltas as the grid path.
+* **Slot decomposition is sound** — every slot of a general graph is a
+  partial permutation (≤1 out-edge per source, ≤1 in-edge per target),
+  the slots partition the edge set, and per-slot weights are uniform.
+* **HLO extraction matches the wire model** — per-participant out-weight
+  sums equal ``CollectiveStat.wire_bytes_per_device()``.
+* **hier-on-graph** — the masked-subgraph analog keeps the bijection and
+  is lexicographically never worse than its base.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (CartGrid, CommGraph, GraphGrid, IncrementalCost,
+                        MappingProblem, MaskedGraphGrid, NeighborTable,
+                        PortfolioCost, Stencil, arch_comm_graph,
+                        blocked_assignment, evaluate, parse_plan)
+
+
+def _random_assignment(p, node_sizes, seed):
+    rng = np.random.default_rng(seed)
+    return rng.permutation(np.repeat(np.arange(len(node_sizes)),
+                                     node_sizes))
+
+
+GRIDS = [
+    (CartGrid((6, 8), periodic=(True, False)), Stencil.nearest_neighbor(2)),
+    (CartGrid((5, 7)), Stencil.nearest_neighbor(2)),
+    (CartGrid((4, 4, 3), periodic=(True, True, False)),
+     Stencil.nearest_neighbor(3)),
+    (CartGrid((6, 6)),
+     Stencil(((1, 0), (0, 1), (-1, 0), (0, -1), (1, 1)),
+             weights=(3.0, 1.5, 3.0, 0.1, 2.25))),
+]
+
+
+# ---------------------------------------------------------------------------
+# stencil round-trip
+
+
+@pytest.mark.parametrize("gi", range(len(GRIDS)))
+def test_from_stencil_neighbor_table_bit_identical(gi):
+    grid, st = GRIDS[gi]
+    g = CommGraph.from_stencil(grid, st)
+    t1 = NeighborTable.build(grid, st)
+    t2 = NeighborTable.from_graph(g)
+    assert np.array_equal(t1.out_valid, t2.out_valid)
+    assert np.array_equal(t1.out_tgt[t1.out_valid], t2.out_tgt[t2.out_valid])
+    assert np.array_equal(t1.in_valid, t2.in_valid)
+    assert np.array_equal(t1.in_src[t1.in_valid], t2.in_src[t2.in_valid])
+
+
+@pytest.mark.parametrize("gi", range(len(GRIDS)))
+def test_round_trip_costs_bit_identical(gi):
+    grid, st = GRIDS[gi]
+    g = CommGraph.from_stencil(grid, st)
+    gg, gs = g.grid(), g.slot_stencil()
+    n = 6
+    sizes = [grid.size // n] * n
+    sizes[0] += grid.size - sum(sizes)
+    for seed in range(3):
+        a = _random_assignment(grid.size, sizes, seed)
+        c1 = evaluate(grid, st, a, num_nodes=n, weighted="auto")
+        c2 = evaluate(gg, gs, a, num_nodes=n, weighted="auto")
+        assert c1.j_sum == c2.j_sum
+        assert c1.j_max == c2.j_max
+        assert np.array_equal(c1.per_node, c2.per_node)
+
+
+@pytest.mark.parametrize("gi", range(len(GRIDS)))
+def test_round_trip_swap_deltas_identical(gi):
+    grid, st = GRIDS[gi]
+    g = CommGraph.from_stencil(grid, st)
+    n = 4
+    sizes = [grid.size // n] * n
+    sizes[0] += grid.size - sum(sizes)
+    a = _random_assignment(grid.size, sizes, 7)
+    ic1 = IncrementalCost(grid, st, a, num_nodes=n, weighted="auto")
+    ic2 = IncrementalCost.from_graph(g, a, num_nodes=n)
+    assert ic1.j_sum == ic2.j_sum
+    assert ic1.j_max == ic2.j_max
+    rng = np.random.default_rng(3)
+    ps = rng.integers(0, grid.size, size=24)
+    qs = rng.integers(0, grid.size, size=24)
+    keep = ps != qs
+    ps, qs = ps[keep], qs[keep]
+    for p, q in zip(ps, qs):
+        d1 = ic1.delta_swap(int(p), int(q))
+        d2 = ic2.delta_swap(int(p), int(q))
+        assert d1.d_j_sum == d2.d_j_sum
+        assert np.array_equal(d1.d_count_off, d2.d_count_off)
+        assert d1.d_count_node == d2.d_count_node
+    b1 = ic1.batch_swap_deltas(ps, qs, with_loads=True)
+    b2 = ic2.batch_swap_deltas(ps, qs, with_loads=True)
+    assert np.array_equal(b1.d_j_sum, b2.d_j_sum)
+    assert np.array_equal(b1.d_count_off, b2.d_count_off)
+    assert np.array_equal(b1.new_per_node, b2.new_per_node)
+    assert np.array_equal(b1.new_j_max, b2.new_j_max)
+
+
+def test_round_trip_portfolio_cost_identical():
+    grid, st = GRIDS[0]
+    g = CommGraph.from_stencil(grid, st)
+    n = 4
+    sizes = (12, 12, 12, 12)
+    A = np.stack([_random_assignment(grid.size, sizes, s) for s in range(3)])
+    pc1 = PortfolioCost(grid, st, A, num_nodes=n, weighted="auto")
+    pc2 = PortfolioCost.from_graph(g, A, num_nodes=n)
+    assert np.array_equal(pc1.j_sum(), pc2.j_sum())
+    assert np.array_equal(pc1.j_max(), pc2.j_max())
+
+
+# ---------------------------------------------------------------------------
+# slot decomposition of general graphs
+
+
+def _random_graph(seed, n=24, m=120, weight_pool=(1.0, 2.0, 5.0)):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, size=m)
+    dst = rng.integers(0, n, size=m)
+    w = rng.choice(weight_pool, size=m)
+    keep = src != dst
+    return CommGraph.from_edges(n, src[keep], dst[keep], w[keep])
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_slot_decomposition_is_sound(seed):
+    g = _random_graph(seed)
+    covered = {}
+    for w, valid, tgt in g.slots():
+        srcs = np.nonzero(valid)[0]
+        dsts = tgt[srcs]
+        # partial permutation: ≤1 out per src (by construction of `valid`)
+        # and ≤1 in per dst
+        assert len(np.unique(dsts)) == len(dsts)
+        for s, d in zip(srcs, dsts):
+            assert (int(s), int(d)) not in covered, "edge in two slots"
+            covered[(int(s), int(d))] = covered.get((int(s), int(d)), 0) + w
+    # the decomposition partitions the coalesced edge set exactly
+    expect = {}
+    src_of = np.repeat(np.arange(g.n), np.diff(g.indptr))
+    for s, d, w in zip(src_of, g.indices, g.weights):
+        expect[(int(s), int(d))] = float(w)
+    assert covered == expect
+
+
+def test_graph_evaluate_equals_brute_force_edge_sum():
+    g = _random_graph(11)
+    node = _random_assignment(g.n, (6, 6, 6, 6), 2)
+    c = evaluate(g.grid(), g.slot_stencil(), node, num_nodes=4,
+                 weighted="auto")
+    src_of = np.repeat(np.arange(g.n), np.diff(g.indptr))
+    crossing = node[src_of] != node[g.indices]
+    assert c.j_sum == pytest.approx(float(g.weights[crossing].sum()))
+    per = np.zeros(4)
+    np.add.at(per, node[src_of[crossing]], g.weights[crossing])
+    assert c.per_node == pytest.approx(per)
+
+
+def test_from_edges_canonical_and_hash_stable():
+    n, src, dst, w = 8, [1, 3, 1, 5, 1], [2, 4, 2, 0, 6], [1.0, 2.0, 3.0, 1.0, 1.0]
+    g1 = CommGraph.from_edges(n, src, dst, w)
+    order = [4, 2, 0, 3, 1]
+    g2 = CommGraph.from_edges(n, [src[i] for i in order],
+                              [dst[i] for i in order],
+                              [w[i] for i in order])
+    assert np.array_equal(g1.indices, g2.indices)
+    assert np.array_equal(g1.weights, g2.weights)
+    assert g1.content_hash() == g2.content_hash()
+    # duplicate (1, 2) coalesced to weight 4
+    assert g1.num_edges == 4
+    g3 = CommGraph.from_edges(n, src, dst, [1.0, 2.0, 3.0, 1.0, 2.0])
+    assert g3.content_hash() != g1.content_hash()
+
+
+def test_from_edges_drops_self_loops_and_nonpositive():
+    g = CommGraph.from_edges(4, [0, 1, 2, 3], [0, 2, 1, 2],
+                             [5.0, 1.0, 0.0, 2.0])
+    assert g.num_edges == 2       # self-loop and zero-weight dropped
+    with pytest.raises(ValueError):
+        CommGraph.from_edges(4, [0], [0], [1.0])   # nothing left
+
+
+# ---------------------------------------------------------------------------
+# grid protocol
+
+
+def test_graph_grid_protocol():
+    g = _random_graph(3)
+    gg = g.grid()
+    assert gg.dims == (g.n,) and gg.periodic == (False,)
+    assert gg.ndim == 1 and gg.size == g.n
+    assert gg.coords().shape == (g.n, 1)
+    with pytest.raises(ValueError):
+        gg.shift_ranks((len(g.slots()) + 1,))
+
+
+def test_masked_graph_grid_restricts_both_endpoints():
+    g = _random_graph(5)
+    gg = g.grid()
+    mask = np.zeros(g.n, dtype=bool)
+    mask[: g.n // 2] = True
+    mg = gg.masked(mask)
+    assert isinstance(mg, MaskedGraphGrid)
+    st = g.slot_stencil()
+    for off in st.offsets:
+        v0, t0 = gg.shift_ranks(off)
+        v1, t1 = mg.shift_ranks(off)
+        assert np.array_equal(v1, v0 & mask & mask[t0])
+        assert np.array_equal(t0, t1)
+    assert mg.cache_token != gg.cache_token
+
+
+def test_graph_grid_pickles():
+    import pickle
+    g = _random_graph(1)
+    gg2 = pickle.loads(pickle.dumps(g.grid()))
+    for off in g.slot_stencil().offsets:
+        v1, t1 = g.grid().shift_ranks(off)
+        v2, t2 = gg2.shift_ranks(off)
+        assert np.array_equal(v1, v2) and np.array_equal(t1, t2)
+
+
+# ---------------------------------------------------------------------------
+# HLO extraction
+
+
+def _mk_stat(opcode, payload, groups, pairs=None, multiplier=1.0):
+    from repro.analysis.hlo import CollectiveStat
+    return CollectiveStat(opcode=opcode, name=opcode, computation="main",
+                          payload_bytes=payload, result_bytes=payload,
+                          groups=groups, pairs=pairs, multiplier=multiplier)
+
+
+class _FakeModule:
+    name = "fake"
+
+    def __init__(self, stats):
+        self._stats = stats
+
+    def collectives(self):
+        return list(self._stats)
+
+
+def test_from_hlo_ring_weights_match_wire_bytes():
+    c = _mk_stat("all-reduce", 512.0, [[0, 1, 2, 3], [4, 5, 6, 7]],
+                 multiplier=3.0)
+    g = CommGraph.from_hlo(_FakeModule([c]))
+    assert g.n == 8
+    wire = c.wire_bytes_per_device()
+    out_strength = np.add.reduceat(g.weights, g.indptr[:-1])
+    assert out_strength == pytest.approx(np.full(8, wire))
+    # ring: each member has exactly one out-edge, to the next member
+    assert np.array_equal(np.diff(g.indptr), np.ones(8, dtype=np.int64))
+    assert np.array_equal(g.indices, [1, 2, 3, 0, 5, 6, 7, 4])
+
+
+def test_from_hlo_alltoall_weights_match_wire_bytes():
+    c = _mk_stat("all-to-all", 4096.0, [[0, 1, 2, 3]])
+    g = CommGraph.from_hlo(_FakeModule([c]), num_devices=4)
+    wire = c.wire_bytes_per_device()
+    out_strength = np.add.reduceat(g.weights, g.indptr[:-1])
+    assert out_strength == pytest.approx(np.full(4, wire))
+    assert g.num_edges == 12      # complete directed graph on the group
+
+
+def test_from_hlo_permute_and_group_none():
+    perm = _mk_stat("collective-permute", 100.0, None,
+                    pairs=[(0, 1), (1, 2)], multiplier=2.0)
+    ar = _mk_stat("all-reduce", 64.0, None)      # groups None = all devices
+    g = CommGraph.from_hlo(_FakeModule([perm, ar]), num_devices=4)
+    # permute edges at payload * multiplier
+    src_of = np.repeat(np.arange(g.n), np.diff(g.indptr))
+    w = {(int(s), int(d)): float(wt)
+         for s, d, wt in zip(src_of, g.indices, g.weights)}
+    ring_w = 2.0 * 64.0 * 3 / 4     # wire at the resolved g=4, not g=2
+    assert w[(0, 1)] == pytest.approx(200.0 + ring_w)   # coalesced with ring
+    assert w[(1, 2)] == pytest.approx(200.0 + ring_w)
+    assert w[(2, 3)] == pytest.approx(ring_w)
+
+
+def test_from_hlo_parse_text_end_to_end():
+    hlo = """
+HloModule m
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+ENTRY %main (x: f32[128,256]) -> f32[128,256] {
+  %x = f32[128,256]{1,0} parameter(0)
+  %ar = f32[128,256]{1,0} all-reduce(%x), channel_id=2, replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  ROOT %r = f32[128,256]{1,0} copy(%ar)
+}
+"""
+    g = CommGraph.from_hlo(hlo)
+    assert g.n == 8
+    assert g.num_edges == 8
+
+
+# ---------------------------------------------------------------------------
+# MoE / arch builders
+
+
+def test_from_moe_group_structure_and_integral_weights():
+    g = CommGraph.from_moe("mixtral-8x7b", 16)
+    assert g.n == 16
+    # EP groups of 8 consecutive devices, complete directed inside
+    src_of = np.repeat(np.arange(g.n), np.diff(g.indptr))
+    for s, d in zip(src_of, g.indices):
+        assert s // 8 == d // 8
+    assert g.num_edges == 2 * 8 * 7
+    assert np.all(g.weights == np.round(g.weights))
+    assert len(np.unique(g.weights)) == 1
+    with pytest.raises(ValueError):
+        CommGraph.from_moe("yi-34b", 16)          # dense arch: no experts
+
+
+def test_arch_comm_graph_deterministic_and_integral():
+    g1 = arch_comm_graph("qwen3-8b", 32, permute_seed=5)
+    g2 = arch_comm_graph("qwen3-8b", 32, permute_seed=5)
+    assert g1.content_hash() == g2.content_hash()
+    g3 = arch_comm_graph("qwen3-8b", 32, permute_seed=6)
+    assert g3.content_hash() != g1.content_hash()
+    assert np.all(g1.weights == np.round(g1.weights))
+
+
+# ---------------------------------------------------------------------------
+# hier on graphs
+
+
+def test_hier_on_graph_bijection_and_never_worse():
+    g = arch_comm_graph("mixtral-8x7b", 32, permute_seed=3)
+    sizes = (4,) * 8
+    prob = MappingProblem.from_graph(g, sizes)
+    base = parse_plan("graphgreedy").solve(prob)
+    hier = parse_plan("hier:graphgreedy").solve(prob)
+    assert np.array_equal(np.bincount(hier.assignment, minlength=8),
+                          np.asarray(sizes))
+    assert (hier.j_max, hier.j_sum) <= (base.j_max, base.j_sum)

@@ -1,0 +1,180 @@
+"""Plan/cache/facade integration of the graph layer (ISSUE 10).
+
+Covers the ``graph:`` problem flavor (bit-identical labels and costs vs
+the grid path, independent cache keys), graph-payload problems (hashing,
+caching, serving), base bracket options (`graphgreedy[seed=3]` canonical
+keys, composition under refine prefixes), and the `graph_create` facade.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (CommGraph, MappingProblem, PlanCache, Stencil,
+                        arch_comm_graph, get_mapper, graph_create,
+                        parse_plan)
+
+ST = Stencil.nearest_neighbor(2)
+PROB = MappingProblem((4, 4), ST, (4, 4, 4, 4))
+
+SPELLINGS = ["blocked", "graphgreedy", "refined:hyperplane",
+             "annealed:kdtree", "portfolio[k=2]:graphgreedy",
+             "hier:blocked", "refined2:nodecart",
+             "sharded[shards=2,k=2]:stencil_strips"]
+
+
+# ---------------------------------------------------------------------------
+# graph: flavor
+
+
+@pytest.mark.parametrize("spelling", SPELLINGS)
+def test_graph_flavor_bit_identical(spelling):
+    s1 = parse_plan(spelling).solve(PROB)
+    s2 = parse_plan("graph:" + spelling).solve(PROB)
+    assert np.array_equal(s1.assignment, s2.assignment)
+    assert (s1.j_max, s1.j_sum) == (s2.j_max, s2.j_sum)
+
+
+def test_graph_flavor_key_and_cache_independent():
+    p1 = parse_plan("annealed:hyperplane")
+    p2 = parse_plan("graph:annealed:hyperplane")
+    assert p2.key == "graph:" + p1.key
+    assert p2.graph_flavor and not p1.graph_flavor
+    c = PlanCache(maxsize=16)
+    c.solve(PROB, p1), c.solve(PROB, p2)
+    assert (c.hits, c.misses) == (0, 2)
+    r1, r2 = c.solve(PROB, p1), c.solve(PROB, p2)
+    assert (c.hits, c.misses) == (2, 2)
+    assert r1.from_cache and r2.from_cache
+
+
+def test_graph_flavor_parse_errors():
+    with pytest.raises(ValueError):
+        parse_plan("graph:")
+    with pytest.raises(KeyError):
+        parse_plan("graph:nosuch")
+
+
+def test_graph_flavor_has_no_mapper_form():
+    with pytest.raises(TypeError):
+        parse_plan("graph:annealed:hyperplane").to_mapper()
+
+
+# ---------------------------------------------------------------------------
+# graph-payload problems
+
+
+def test_provenance_problem_hash_matches_stencil_problem():
+    g = CommGraph.from_stencil(PROB.grid(), ST)
+    gp = MappingProblem.from_graph(g, (4, 4, 4, 4))
+    assert gp.mesh_shape == (4, 4)
+    assert gp.content_hash() == PROB.content_hash()
+    # so a cache warmed by the stencil problem serves the graph problem
+    c = PlanCache(maxsize=16)
+    plan = parse_plan("annealed:hyperplane")
+    c.solve(PROB, plan)
+    assert c.solve(gp, plan).from_cache
+
+
+def test_pure_graph_problem_solves_and_caches():
+    g = arch_comm_graph("granite-3-8b", 32, permute_seed=1)
+    prob = MappingProblem.from_graph(g, (4,) * 8)
+    assert prob.mesh_shape == (32,)
+    plan = parse_plan("graph:annealed:graphgreedy")
+    c = PlanCache(maxsize=16)
+    s1 = c.solve(prob, plan)
+    assert np.array_equal(np.bincount(s1.assignment, minlength=8),
+                          np.full(8, 4))
+    s2 = c.solve(prob, plan)
+    assert s2.from_cache and np.array_equal(s1.assignment, s2.assignment)
+    # a different graph is a different problem
+    g2 = arch_comm_graph("granite-3-8b", 32, permute_seed=2)
+    p2 = MappingProblem.from_graph(g2, (4,) * 8)
+    assert p2.content_hash() != prob.content_hash()
+
+
+def test_graph_size_mismatch_rejected():
+    g = arch_comm_graph("granite-3-8b", 32)
+    with pytest.raises(ValueError):
+        MappingProblem.from_graph(g, (4,) * 4)
+
+
+def test_graph_problem_through_plan_server():
+    from repro.serving import PlanServer
+    g = arch_comm_graph("granite-3-8b", 32, permute_seed=1)
+    prob = MappingProblem.from_graph(g, (4,) * 8)
+    with PlanServer(threads=2).start() as srv:
+        t = srv.submit(prob, plan="graph:annealed:graphgreedy")
+        sol = t.result(timeout=60)
+        assert np.array_equal(np.bincount(sol.assignment, minlength=8),
+                              np.full(8, 4))
+        t2 = srv.submit(prob, plan="graph:annealed:graphgreedy")
+        assert t2.result(timeout=60).from_cache
+
+
+# ---------------------------------------------------------------------------
+# base bracket options (satellite 1)
+
+
+def test_base_bracket_canonical_key():
+    p = parse_plan("graphgreedy[seed=3,max_passes=2]")
+    assert p.key == "graphgreedy{max_passes=2,seed=3}"
+    assert p.cacheable
+    assert p.stages[0].mapper.seed == 3
+    assert p.stages[0].mapper.max_passes == 2
+
+
+def test_base_bracket_composes_under_prefixes():
+    p = parse_plan("annealed:graphgreedy[seed=3]")
+    assert p.key == "annealed:graphgreedy{seed=3}"
+    s = p.solve(PROB)
+    assert np.array_equal(np.bincount(s.assignment, minlength=4),
+                          np.full(4, 4))
+    # equal-config spellings share a cache entry
+    c = PlanCache(maxsize=16)
+    c.solve(PROB, p)
+    assert c.solve(PROB, parse_plan("annealed:graphgreedy[seed=3]")).from_cache
+
+
+def test_base_bracket_wins_over_kwargs():
+    p = parse_plan("graphgreedy[seed=3]", seed=9)
+    assert p.stages[0].mapper.seed == 3
+
+
+def test_base_bracket_through_get_mapper():
+    m = get_mapper("graphgreedy[seed=3]")
+    assert m.seed == 3
+    assert m.plan_key == "graphgreedy{seed=3}"
+
+
+def test_base_bracket_errors():
+    with pytest.raises(KeyError):
+        parse_plan("nosuch[seed=3]")
+    with pytest.raises(TypeError):
+        parse_plan("graphgreedy[bogus_option=3]")
+    with pytest.raises(ValueError):
+        parse_plan("graphgreedy[seed]")
+
+
+# ---------------------------------------------------------------------------
+# facade
+
+
+def test_graph_create_facade():
+    g = arch_comm_graph("granite-3-8b", 32, permute_seed=1)
+    r = graph_create(g, chips_per_pod=4, cache=False)
+    assert r.plan_key.startswith("graph:")
+    assert r.layout.shape == (32,)
+    assert sorted(r.layout.tolist()) == list(range(32))
+    # reorder=False is the blocked identity
+    r0 = graph_create(g, chips_per_pod=4, reorder=False, cache=False)
+    assert np.array_equal(r0.layout, np.arange(32))
+    assert (r.j_max, r.j_sum) <= (r0.j_max, r0.j_sum)
+    with pytest.raises(ValueError):
+        graph_create(g)
+    with pytest.raises(ValueError):
+        graph_create(g, node_sizes=(4,) * 8, chips_per_pod=4)
+
+
+def test_graph_create_stencil_provenance_keeps_mesh_shape():
+    g = CommGraph.from_stencil(PROB.grid(), ST)
+    r = graph_create(g, node_sizes=(4, 4, 4, 4), cache=False)
+    assert r.layout.shape == (4, 4)

@@ -1,0 +1,95 @@
+"""Single-flight dedup of concurrent cold misses in PlanServer (ISSUE 10).
+
+Without the per-key latch, N simultaneous requests for one uncached
+(problem, plan) each run the full solve — up to ``threads`` redundant
+anneals per cold key.  With it, exactly one leader solves while the
+followers park and re-enter as cache hits.  These tests drive a server
+whose cache is artificially slowed so concurrent arrivals on one key are
+guaranteed, then assert on the cache counters: one miss, one put, and at
+least one recorded wait.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import MappingProblem, PlanCache, Stencil
+from repro.serving import PlanServer
+
+PROB = MappingProblem((8, 8), Stencil.nearest_neighbor(2), (16,) * 4)
+PLAN = "annealed:hyperplane"
+
+
+class SlowCache(PlanCache):
+    """PlanCache whose cold-path solve holds the key long enough for the
+    other server threads to arrive while it is still in flight."""
+
+    def __init__(self, delay_s=0.2, **kw):
+        super().__init__(**kw)
+        self.delay_s = delay_s
+
+    def solve(self, problem, plan, **kw):
+        # peek without touching the hit/miss counters the tests assert on
+        if f"sol:{problem.content_hash()}:{plan.key}" not in self._mem:
+            time.sleep(self.delay_s)
+        return super().solve(problem, plan, **kw)
+
+
+def test_concurrent_cold_misses_solve_once():
+    cache = SlowCache(maxsize=64)
+    with PlanServer(cache=cache, threads=3).start() as srv:
+        tickets = [srv.submit(PROB, plan=PLAN) for _ in range(4)]
+        sols = [t.result(timeout=60) for t in tickets]
+    assert cache.misses == 1
+    assert cache.puts == 1
+    assert sum(s.from_cache for s in sols) == 3
+    for s in sols[1:]:
+        assert np.array_equal(s.assignment, sols[0].assignment)
+        assert (s.j_max, s.j_sum) == (sols[0].j_max, sols[0].j_sum)
+    assert srv.stats()["single_flight_waits"] >= 1
+
+
+def test_distinct_keys_do_not_serialize():
+    # different plans on one problem are different keys: no waits recorded
+    cache = SlowCache(delay_s=0.05, maxsize=64)
+    with PlanServer(cache=cache, threads=2).start() as srv:
+        t1 = srv.submit(PROB, plan="annealed:hyperplane")
+        t2 = srv.submit(PROB, plan="refined:hyperplane")
+        s1, s2 = t1.result(timeout=60), t2.result(timeout=60)
+    assert not s1.from_cache and not s2.from_cache
+    assert cache.misses == 2
+    assert srv.stats()["single_flight_waits"] == 0
+
+
+def test_leader_failure_promotes_follower():
+    # a leader that dies releases the latch; a follower retries as the
+    # next leader instead of deadlocking or surfacing the stale error.
+    cache = SlowCache(delay_s=0.2, maxsize=64)
+    fail_first = {"armed": True}
+    orig = SlowCache.solve
+
+    def flaky(self, problem, plan, **kw):
+        if fail_first.pop("armed", False):
+            time.sleep(0.1)
+            raise RuntimeError("injected leader failure")
+        return orig(self, problem, plan, **kw)
+
+    cache.solve = flaky.__get__(cache)
+    with PlanServer(cache=cache, threads=2).start() as srv:
+        tickets = [srv.submit(PROB, plan=PLAN) for _ in range(2)]
+        results, errors = [], []
+        for t in tickets:
+            try:
+                results.append(t.result(timeout=60))
+            except Exception as e:       # noqa: BLE001 - injected failure
+                errors.append(e)
+    assert len(results) >= 1            # the follower still completed
+    assert cache.puts == 1
+    assert np.array_equal(np.bincount(results[0].assignment, minlength=4),
+                          np.full(4, 16))
+
+
+def test_stats_key_present_when_idle():
+    with PlanServer(threads=1).start() as srv:
+        assert srv.stats()["single_flight_waits"] == 0
